@@ -1,0 +1,34 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_us(fn, *, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def block(x):
+    if hasattr(x, "block_until_ready"):
+        x.block_until_ready()
+    elif isinstance(x, (tuple, list)):
+        for v in x:
+            block(v)
+    elif isinstance(x, dict):
+        for v in x.values():
+            block(v)
+    return x

@@ -1,0 +1,40 @@
+"""Paper Fig. 5: desired frame rate vs resource utilization vs performance.
+
+Sweeps VGG-16 (accelerator execution) across frame rates; utilization comes
+from the manager's linear model, performance from the fleet simulator —
+reproducing the knee where CPU overutilization degrades performance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.binpack import BinType
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_instance
+
+from .common import record
+
+GPU_BOX = BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650)
+
+
+def run() -> dict:
+    table = paper_profile_table()
+    prof = table.get("vgg16", "640x480", "accel")
+    rows = []
+    for fps in (0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0):
+        req = prof.at_fps(fps)
+        info = simulate_instance(GPU_BOX, [req])
+        rows.append((fps, info.utilization[0], info.utilization[2],
+                     info.performance))
+    # Linearity check on the under-utilized prefix.
+    fps_a, cpu_a = rows[0][0], rows[0][1]
+    fps_b, cpu_b = rows[2][0], rows[2][1]
+    linear = abs(cpu_b / cpu_a - fps_b / fps_a) < 1e-6
+    knee = next((f for f, c, g, p in rows if p < 1.0), None)
+    for fps, cpu, gpu, perf in rows:
+        record(
+            f"fig5/vgg16@{fps}fps", 0.0,
+            f"cpu_util={cpu:.2f} gpu_util={gpu:.3f} performance={perf:.2f}",
+        )
+    record("fig5/summary", 0.0, f"linear={linear} perf_knee_fps={knee}")
+    return {"rows": rows, "linear": linear, "knee": knee}

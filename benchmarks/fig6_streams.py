@@ -1,0 +1,36 @@
+"""Paper Fig. 6: number of streams vs utilization vs performance.
+
+VGG-16 at 2 FPS on the accelerator, adding cameras to one instance until
+it overloads — utilization grows linearly, performance drops past the
+saturation point.
+"""
+from __future__ import annotations
+
+from repro.core.binpack import BinType
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_instance
+
+from .common import record
+
+GPU_BOX = BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650)
+
+
+def run() -> dict:
+    prof = paper_profile_table().get("vgg16", "640x480", "accel")
+    req = prof.at_fps(2.0)
+    rows = []
+    for n in (1, 2, 3, 4, 6, 8):
+        info = simulate_instance(GPU_BOX, [req] * n)
+        rows.append((n, info.utilization[0], info.utilization[2],
+                     info.performance))
+        record(
+            f"fig6/vgg16x{n}@2fps", 0.0,
+            f"cpu_util={info.utilization[0]:.2f} "
+            f"gpu_util={info.utilization[2]:.3f} "
+            f"performance={info.performance:.2f}",
+        )
+    # Linear growth while under capacity.
+    linear = abs(rows[1][1] / rows[0][1] - 2.0) < 1e-6
+    knee = next((n for n, c, g, p in rows if p < 1.0), None)
+    record("fig6/summary", 0.0, f"linear={linear} perf_knee_streams={knee}")
+    return {"rows": rows, "linear": linear, "knee": knee}

@@ -1,0 +1,41 @@
+"""§Roofline report: render the per-(arch x shape) table from dry-run
+artifacts (artifacts/dryrun/*.json, produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import record
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for path in glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json")):
+        recs.append(json.load(open(path)))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    return recs
+
+
+def run() -> dict:
+    recs = load_records()
+    if not recs:
+        record("roofline/none", 0.0, "no dry-run artifacts yet")
+        return {}
+    for r in recs:
+        t = r["roofline"]
+        record(
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+            f"t_comp={t['compute_s']*1e3:.2f}ms t_mem={t['memory_s']*1e3:.2f}ms "
+            f"t_coll={t['collective_s']*1e3:.2f}ms dom={t['dominant']} "
+            f"useful_frac={r['useful_flops_frac']:.2f}"
+            if r["useful_flops_frac"] else
+            f"t_comp={t['compute_s']*1e3:.2f}ms t_mem={t['memory_s']*1e3:.2f}ms "
+            f"t_coll={t['collective_s']*1e3:.2f}ms dom={t['dominant']}",
+        )
+    return {"n": len(recs)}

@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure + beyond-paper studies.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
+
+  table2_speedup     — paper Table 2 (CPU vs accelerator max frame rates)
+  table3_requirements— paper Table 3 (requirement vectors @ 0.2 FPS)
+  fig5_framerate     — paper Fig. 5 (linearity + performance knee vs FPS)
+  fig6_streams       — paper Fig. 6 (linearity + knee vs #streams)
+  table6_strategies  — paper Table 6 (ST1/ST2/ST3 costs, 61/36/3% savings)
+  solver_scaling     — beyond-paper solver study (exact vs arc-flow vs FFD)
+  tpu_allocation     — beyond-paper TPU-cloud allocation scenario
+  roofline_report    — §Roofline table from dry-run artifacts
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from . import (
+        ablation_cap,
+        fig5_framerate,
+        fig6_streams,
+        roofline_report,
+        solver_scaling,
+        table2_speedup,
+        table3_requirements,
+        table6_strategies,
+        tpu_allocation,
+    )
+
+    suites = {
+        "table6": table6_strategies,
+        "fig5": fig5_framerate,
+        "fig6": fig6_streams,
+        "table3": table3_requirements,
+        "table2": table2_speedup,
+        "solver": solver_scaling,
+        "tpu": tpu_allocation,
+        "ablation": ablation_cap,
+        "roofline": roofline_report,
+    }
+    selected = args.only or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            suites[name].run()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Diff two dry-run artifacts (before/after a perf change).
+
+Usage: python scripts/perf_diff.py before.json after.json
+"""
+import json
+import sys
+
+
+def main() -> None:
+    a = json.load(open(sys.argv[1]))
+    b = json.load(open(sys.argv[2]))
+    print(f"{'metric':28s} {'before':>14s} {'after':>14s} {'delta':>8s}")
+    rows = [
+        ("flops/dev", a["hlo_flops_per_device"], b["hlo_flops_per_device"]),
+        ("bytes/dev", a["hlo_bytes_per_device"], b["hlo_bytes_per_device"]),
+        ("coll bytes/dev", a["collectives"]["total"]["bytes"],
+         b["collectives"]["total"]["bytes"]),
+        ("t_compute ms", a["roofline"]["compute_s"] * 1e3,
+         b["roofline"]["compute_s"] * 1e3),
+        ("t_memory ms", a["roofline"]["memory_s"] * 1e3,
+         b["roofline"]["memory_s"] * 1e3),
+        ("t_collective ms", a["roofline"]["collective_s"] * 1e3,
+         b["roofline"]["collective_s"] * 1e3),
+        ("temp bytes", a["memory"]["temp_size_in_bytes"] or 0,
+         b["memory"]["temp_size_in_bytes"] or 0),
+    ]
+    for name, x, y in rows:
+        delta = (y - x) / x if x else float("nan")
+        print(f"{name:28s} {x:14.4g} {y:14.4g} {delta:+8.1%}")
+    for op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"):
+        x = a["collectives"].get(op, {}).get("bytes", 0)
+        y = b["collectives"].get(op, {}).get("bytes", 0)
+        if x or y:
+            d = (y - x) / x if x else float("nan")
+            print(f"  {op:26s} {x:14.4g} {y:14.4g} {d:+8.1%}")
+    print(f"dominant: {a['roofline']['dominant']} -> {b['roofline']['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

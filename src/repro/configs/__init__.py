@@ -1,0 +1,85 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full production config;
+``smoke_variant(cfg)`` derives the reduced CPU-testable variant
+(<=2 pattern repeats, d_model<=512, <=4 experts) used by smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+from . import (
+    gemma2_2b,
+    musicgen_large,
+    qwen3_moe_30b_a3b,
+    mamba2_1_3b,
+    yi_34b,
+    internlm2_1_8b,
+    nemotron_4_15b,
+    llava_next_mistral_7b,
+    recurrentgemma_9b,
+    grok_1_314b,
+)
+
+REGISTRY: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        gemma2_2b,
+        musicgen_large,
+        qwen3_moe_30b_a3b,
+        mamba2_1_3b,
+        yi_34b,
+        internlm2_1_8b,
+        nemotron_4_15b,
+        llava_next_mistral_7b,
+        recurrentgemma_9b,
+        grok_1_314b,
+    )
+}
+
+ARCH_IDS = tuple(sorted(REGISTRY))
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}") from None
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 1-2 groups, d_model<=512, <=4 experts."""
+    pattern = cfg.layer_pattern
+    groups = min(cfg.num_groups, 2 if len(pattern) == 1 else 1)
+    d_model = min(cfg.d_model, 256)
+    heads = max(1, min(cfg.num_heads, 4))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    updates = dict(
+        name=cfg.name + "-smoke",
+        num_layers=groups * len(pattern),
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=64 if cfg.num_heads else 0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        lru_width=min(cfg.resolved_lru_width, d_model) if cfg.lru_width else None,
+        ssm_head_dim=32 if cfg.ssm_state else cfg.ssm_head_dim,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        ssm_chunk=16,
+        vision_tokens=min(cfg.vision_tokens, 16),
+    )
+    if cfg.num_experts:
+        updates.update(num_experts=min(cfg.num_experts, 4),
+                       experts_per_token=min(cfg.experts_per_token, 2))
+    if cfg.window_pattern is not None:
+        updates["window_pattern"] = tuple(
+            (min(w, 16) if w else None) for w in cfg.window_pattern
+        )
+    if cfg.long_context_window:
+        updates["long_context_window"] = 16
+    return dataclasses.replace(cfg, **updates)

@@ -1,0 +1,35 @@
+"""Multiple-choice vector bin packing (the paper's core formulation)."""
+from .problem import (
+    Assignment,
+    BinType,
+    Choice,
+    InfeasibleError,
+    Item,
+    OpenBin,
+    Problem,
+    Solution,
+    build_solution,
+)
+from .heuristics import best_fit_decreasing, first_fit_decreasing
+from .bincompletion import SolveStats, solve
+from .arcflow import ArcflowStats, solve_arcflow
+from .bruteforce import solve_bruteforce
+
+__all__ = [
+    "Assignment",
+    "BinType",
+    "Choice",
+    "InfeasibleError",
+    "Item",
+    "OpenBin",
+    "Problem",
+    "Solution",
+    "build_solution",
+    "best_fit_decreasing",
+    "first_fit_decreasing",
+    "SolveStats",
+    "solve",
+    "ArcflowStats",
+    "solve_arcflow",
+    "solve_bruteforce",
+]

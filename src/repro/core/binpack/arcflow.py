@@ -1,0 +1,228 @@
+"""Arc-flow-style exact solver for MC-VBP (Brandao & Pedroso 2016 flavor).
+
+The paper delegates solving to VPSolver, whose core idea is:
+
+1. group identical items (network-camera fleets have MANY identical
+   streams: same program, fps, frame size) into classes with demands,
+2. build, per bin type, a DAG over capacity levels whose source->sink paths
+   are exactly the feasible *packing patterns*, compressed by merging
+   equivalent nodes,
+3. solve a min-cost integer flow (equivalently: select a multiset of
+   patterns covering all demands) with a MILP backend.
+
+Offline we have no MILP backend, so step 3 is replaced by an exact dynamic
+program over the residual-demand lattice (memoized best completion cost per
+remaining-demand vector), which is exact whenever the demand lattice is
+enumerable (paper-scale fleets: a handful of classes x tens of streams).
+Step 2's graph compression appears here as (a) canonical class ordering and
+(b) *maximal-pattern* pruning: a pattern that can still absorb another
+demanded item is never emitted on its own (any optimal solution uses only
+maximal patterns for covering problems with free disposal).
+
+`bincompletion.solve` remains the default production solver; this module
+cross-checks it (tests assert equal optimal costs) and is preferred when
+fleets collapse to few classes with high multiplicity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+from .problem import (
+    BinType,
+    InfeasibleError,
+    Problem,
+    Solution,
+    build_solution,
+)
+
+__all__ = ["solve_arcflow", "ArcflowStats", "group_items", "enumerate_patterns"]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class ArcflowStats:
+    n_classes: int = 0
+    n_patterns: int = 0
+    dp_states: int = 0
+    optimal: bool = True
+
+
+def group_items(problem: Problem) -> tuple[list[np.ndarray], list[int], list[list[int]]]:
+    """Group items with identical choice matrices.
+
+    Returns (class requirement matrices, class demands, item indices per class).
+    """
+    reqs = problem.choice_matrix()
+    classes: list[np.ndarray] = []
+    demands: list[int] = []
+    members: list[list[int]] = []
+    for i, r in enumerate(reqs):
+        key = r.round(9)
+        placed = False
+        for c, cr in enumerate(classes):
+            if cr.shape == key.shape and np.allclose(cr, key, atol=1e-9):
+                demands[c] += 1
+                members[c].append(i)
+                placed = True
+                break
+        if not placed:
+            classes.append(key)
+            demands.append(1)
+            members.append([i])
+    return classes, demands, members
+
+
+def enumerate_patterns(
+    cap: np.ndarray,
+    class_reqs: Sequence[np.ndarray],
+    demands: Sequence[int],
+    max_patterns: int = 200_000,
+) -> list[tuple[tuple[int, int], ...]]:
+    """All *maximal* feasible patterns for one bin.
+
+    A pattern is a tuple of ((class, choice) -> count) entries; maximality:
+    no further demanded item of any class/choice fits in the residual.
+    Classes are visited in canonical order (the arc-flow level ordering);
+    within a class, choice counts are enumerated jointly.
+    """
+    n_classes = len(class_reqs)
+    patterns: list[tuple[tuple[int, int], ...]] = []
+    counts: dict[tuple[int, int], int] = {}
+
+    def is_maximal(resid: np.ndarray, used_per_class: list[int]) -> bool:
+        for c in range(n_classes):
+            if used_per_class[c] >= demands[c]:
+                continue
+            if np.any(np.all(class_reqs[c] <= resid[None, :] + _EPS, axis=1)):
+                return False
+        return True
+
+    used_per_class = [0] * n_classes
+
+    def rec(class_i: int, resid: np.ndarray) -> None:
+        if len(patterns) >= max_patterns:
+            return
+        if class_i == n_classes:
+            if counts and is_maximal(resid, used_per_class):
+                patterns.append(tuple(sorted(counts.items())))
+            return
+        n_choices = class_reqs[class_i].shape[0]
+
+        def rec_choice(choice_i: int, resid: np.ndarray) -> None:
+            if choice_i == n_choices:
+                rec(class_i + 1, resid)
+                return
+            req = class_reqs[class_i][choice_i]
+            # count = 0 branch
+            rec_choice(choice_i + 1, resid)
+            # count >= 1 branches
+            k = 0
+            r = resid
+            while used_per_class[class_i] < demands[class_i] and np.all(
+                req <= r + _EPS
+            ):
+                k += 1
+                r = r - req
+                used_per_class[class_i] += 1
+                counts[(class_i, choice_i)] = k
+                rec_choice(choice_i + 1, r)
+            if k:
+                used_per_class[class_i] -= k
+                del counts[(class_i, choice_i)]
+
+        rec_choice(0, resid)
+
+    rec(0, cap.copy())
+    return patterns
+
+
+def solve_arcflow(
+    problem: Problem, max_dp_states: int = 2_000_000
+) -> tuple[Solution, ArcflowStats]:
+    for item in problem.items:
+        if not problem.feasible_somewhere(item):
+            raise InfeasibleError(
+                f"item {item.name}: no (choice, bin type) fits even when alone"
+            )
+    stats = ArcflowStats()
+    class_reqs, demands, members = group_items(problem)
+    stats.n_classes = len(class_reqs)
+
+    # Patterns per bin type.
+    typed_patterns: list[tuple[BinType, tuple[tuple[int, int], ...]]] = []
+    for bt in problem.bin_types:
+        cap = problem.effective_capacity(bt)
+        for pat in enumerate_patterns(cap, class_reqs, demands):
+            typed_patterns.append((bt, pat))
+    stats.n_patterns = len(typed_patterns)
+    # Cheap-first ordering makes the DP find good incumbents early.
+    typed_patterns.sort(key=lambda tp: tp[0].cost)
+
+    demand0 = tuple(demands)
+
+    @functools.lru_cache(maxsize=None)
+    def best(demand: tuple[int, ...]) -> tuple[float, tuple[int, ...] | None]:
+        """(min completion cost, index-of-chosen-pattern chain head)."""
+        stats.dp_states += 1
+        if stats.dp_states > max_dp_states:
+            raise MemoryError("arc-flow DP state budget exceeded")
+        if all(d == 0 for d in demand):
+            return 0.0, None
+        best_cost = np.inf
+        best_next: tuple[int, ...] | None = None
+        best_pat_i = -1
+        for pat_i, (bt, pat) in enumerate(typed_patterns):
+            # Apply pattern with free disposal (cap counts at demand).
+            nxt = list(demand)
+            useful = False
+            for (class_i, _choice_i), cnt in pat:
+                take = min(cnt, nxt[class_i])
+                if take > 0:
+                    useful = True
+                nxt[class_i] -= take
+            if not useful:
+                continue
+            sub_cost, _ = best(tuple(nxt))
+            if bt.cost + sub_cost < best_cost - _EPS:
+                best_cost = bt.cost + sub_cost
+                best_next = tuple(nxt)
+                best_pat_i = pat_i
+        if best_next is None:
+            return np.inf, None
+        # Encode chosen pattern index in the memo value via closure table.
+        chosen[demand] = (best_pat_i, best_next)
+        return best_cost, best_next
+
+    chosen: dict[tuple[int, ...], tuple[int, tuple[int, ...]]] = {}
+    total_cost, _ = best(demand0)
+    if not np.isfinite(total_cost):
+        raise InfeasibleError("no feasible packing exists")
+
+    # Reconstruct: walk the chosen chain, materializing bins and placements.
+    remaining = {c: list(members[c]) for c in range(len(members))}
+    opened: list[BinType] = []
+    placements: list[tuple[int, int, int]] = []
+    demand = demand0
+    while any(demand):
+        pat_i, nxt = chosen[demand]
+        bt, pat = typed_patterns[pat_i]
+        opened.append(bt)
+        bin_i = len(opened) - 1
+        # Re-apply the pattern with free disposal, assigning concrete items.
+        consumed = [0] * len(demands)
+        for (class_i, choice_i), cnt in pat:
+            avail = demand[class_i] - consumed[class_i]
+            take = min(cnt, avail)
+            for _ in range(take):
+                item_i = remaining[class_i].pop()
+                placements.append((item_i, choice_i, bin_i))
+            consumed[class_i] += take
+        demand = nxt
+    sol = build_solution(problem, placements, opened)
+    assert abs(sol.cost - total_cost) < 1e-6, (sol.cost, total_cost)
+    return sol, stats

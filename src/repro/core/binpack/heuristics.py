@@ -1,0 +1,118 @@
+"""Multiple-choice FFD / BFD heuristics for MC-VBP.
+
+Used (a) as the incumbent/upper bound for the exact branch-and-bound, and
+(b) as the production path for very large fleets (hundreds of streams)
+where exactness is not worth the latency.
+
+The classic first-fit-decreasing is generalized to multiple choices and
+heterogeneous costed bins:
+
+* items are sorted by decreasing *minimum normalized size* (the smallest,
+  over choices, of the max utilization fraction the choice occupies in the
+  cheapest bin that fits it),
+* each item tries its choices against every open bin (first-fit or
+  best-fit), preferring placements that need no new bin,
+* when a new bin must be opened we pick the bin type minimizing
+  cost-per-packed-fraction for this item (a cost-density greedy).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .problem import (
+    BinType,
+    InfeasibleError,
+    Problem,
+    Solution,
+    build_solution,
+)
+
+__all__ = ["first_fit_decreasing", "best_fit_decreasing"]
+
+
+def _choice_fraction(req: np.ndarray, cap: np.ndarray) -> float:
+    """Max utilization fraction of `req` inside capacity `cap` (inf if misfit)."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac = np.where(cap > 0, req / np.maximum(cap, 1e-300), np.where(req > 0, np.inf, 0.0))
+    return float(np.max(frac)) if frac.size else 0.0
+
+
+def _item_sort_key(problem: Problem, item_idx: int) -> float:
+    caps = [problem.effective_capacity(bt) for bt in problem.bin_types]
+    reqs = problem.choice_matrix()[item_idx]
+    best = np.inf
+    for req in reqs:
+        for cap in caps:
+            f = _choice_fraction(req, cap)
+            if f <= 1.0 + 1e-12:
+                best = min(best, f)
+    return -best if np.isfinite(best) else -np.inf
+
+
+def _pack(problem: Problem, best_fit: bool) -> Solution:
+    n = len(problem.items)
+    order = sorted(range(n), key=lambda i: _item_sort_key(problem, i))
+    reqs = problem.choice_matrix()
+
+    opened: list[BinType] = []
+    loads: list[np.ndarray] = []
+    placements: list[tuple[int, int, int]] = []
+
+    for item_i in order:
+        item = problem.items[item_i]
+        if not problem.feasible_somewhere(item):
+            raise InfeasibleError(
+                f"item {item.name}: no (choice, bin type) fits even when alone"
+            )
+        best_place: tuple[float, int, int] | None = None  # (score, choice, bin)
+        # Try existing bins first.
+        for bin_i, (bt, load) in enumerate(zip(opened, loads)):
+            cap = problem.effective_capacity(bt)
+            for choice_i, req in enumerate(reqs[item_i]):
+                new_load = load + req
+                if np.all(new_load <= cap + 1e-9):
+                    if not best_fit:
+                        best_place = (0.0, choice_i, bin_i)
+                        break
+                    # best-fit: maximize residual tightness (min slack)
+                    slack = float(np.max((cap - new_load) / np.maximum(cap, 1e-300)))
+                    score = slack
+                    if best_place is None or score < best_place[0]:
+                        best_place = (score, choice_i, bin_i)
+            if best_place is not None and not best_fit:
+                break
+        if best_place is not None:
+            _, choice_i, bin_i = best_place
+            loads[bin_i] = loads[bin_i] + reqs[item_i][choice_i]
+            placements.append((item_i, choice_i, bin_i))
+            continue
+        # Open a new bin: choose (bin type, choice) minimizing cost density.
+        best_open: tuple[float, int, BinType] | None = None
+        for bt in problem.bin_types:
+            cap = problem.effective_capacity(bt)
+            for choice_i, req in enumerate(reqs[item_i]):
+                frac = _choice_fraction(req, cap)
+                if frac <= 1.0 + 1e-12:
+                    density = bt.cost * max(frac, 1e-9)  # prefer cheap AND tight
+                    # Primary: cost of the bin per unit of item packed; use
+                    # cost*frac so a cheap bin the item nearly fills wins over
+                    # an expensive bin it barely dents.
+                    score = bt.cost - 0.5 * bt.cost * min(frac, 1.0)
+                    del density
+                    if best_open is None or score < best_open[0]:
+                        best_open = (score, choice_i, bt)
+        assert best_open is not None  # feasible_somewhere guaranteed
+        _, choice_i, bt = best_open
+        opened.append(bt)
+        loads.append(reqs[item_i][choice_i].copy())
+        placements.append((item_i, choice_i, len(opened) - 1))
+
+    return build_solution(problem, placements, opened)
+
+
+def first_fit_decreasing(problem: Problem) -> Solution:
+    return _pack(problem, best_fit=False)
+
+
+def best_fit_decreasing(problem: Problem) -> Solution:
+    return _pack(problem, best_fit=True)

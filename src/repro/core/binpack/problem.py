@@ -1,0 +1,203 @@
+"""Multiple-choice vector bin packing (MC-VBP) problem model.
+
+This is the paper's formulation (Kaseb et al. 2018, section 3.2):
+
+* A *bin type* has an hourly cost and a capacity vector (one entry per
+  resource dimension, e.g. [CPU cores, memory GB, GPU cores, GPU GB]).
+  Unlimited copies of each bin type may be opened.
+* An *item* (a data stream) has one or more *choices*; each choice is a
+  requirement vector of the same dimension (e.g. "run on CPU" vs "run on
+  GPU k").  Exactly one choice must be selected per item.
+* Goal: open bins and assign every item (with one selected choice) so that
+  no bin dimension overflows and total bin cost is minimal.
+
+All quantities are floats; solvers treat `capacity * utilization_cap` as
+the effective capacity (the paper de-rates to 90%).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "BinType",
+    "Choice",
+    "Item",
+    "Problem",
+    "Assignment",
+    "OpenBin",
+    "Solution",
+    "InfeasibleError",
+]
+
+
+class InfeasibleError(ValueError):
+    """Raised when no feasible packing exists (paper Table 6: 'Fail')."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BinType:
+    """A cloud instance type: capacity vector + hourly cost."""
+
+    name: str
+    capacity: tuple[float, ...]
+    cost: float
+
+    def __post_init__(self) -> None:
+        if self.cost < 0:
+            raise ValueError(f"bin {self.name}: negative cost")
+        if any(c < 0 for c in self.capacity):
+            raise ValueError(f"bin {self.name}: negative capacity")
+
+    @property
+    def dim(self) -> int:
+        return len(self.capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    """One way of executing an item (e.g. 'on the CPU' / 'on GPU #2')."""
+
+    label: str
+    requirement: tuple[float, ...]
+
+    def __post_init__(self) -> None:
+        if any(r < 0 for r in self.requirement):
+            raise ValueError(f"choice {self.label}: negative requirement")
+
+    @property
+    def dim(self) -> int:
+        return len(self.requirement)
+
+
+@dataclasses.dataclass(frozen=True)
+class Item:
+    """A data stream with its multiple-choice requirement vectors."""
+
+    name: str
+    choices: tuple[Choice, ...]
+
+    def __post_init__(self) -> None:
+        if not self.choices:
+            raise ValueError(f"item {self.name}: no choices")
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    bin_types: tuple[BinType, ...]
+    items: tuple[Item, ...]
+    utilization_cap: float = 0.9  # paper: keep every utilization <= 90%
+
+    def __post_init__(self) -> None:
+        dims = {b.dim for b in self.bin_types} | {
+            c.dim for it in self.items for c in it.choices
+        }
+        if len(dims) > 1:
+            raise ValueError(f"inconsistent dimensions: {sorted(dims)}")
+        if not self.bin_types:
+            raise ValueError("no bin types")
+        if not 0 < self.utilization_cap <= 1:
+            raise ValueError("utilization_cap must be in (0, 1]")
+
+    @property
+    def dim(self) -> int:
+        return self.bin_types[0].dim
+
+    def effective_capacity(self, bin_type: BinType) -> np.ndarray:
+        return np.asarray(bin_type.capacity, dtype=np.float64) * self.utilization_cap
+
+    def choice_matrix(self) -> list[np.ndarray]:
+        """Per item: (n_choices, dim) requirement array."""
+        return [
+            np.asarray([c.requirement for c in it.choices], dtype=np.float64)
+            for it in self.items
+        ]
+
+    def feasible_somewhere(self, item: Item) -> bool:
+        """True if at least one (choice, bin type) pair can host the item alone."""
+        for choice in item.choices:
+            req = np.asarray(choice.requirement)
+            for bt in self.bin_types:
+                if np.all(req <= self.effective_capacity(bt) + 1e-9):
+                    return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """item -> (selected choice index, open-bin index)."""
+
+    item_index: int
+    choice_index: int
+    bin_index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenBin:
+    bin_type: BinType
+    load: tuple[float, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Solution:
+    problem: Problem
+    bins: tuple[OpenBin, ...]
+    assignments: tuple[Assignment, ...]
+
+    @property
+    def cost(self) -> float:
+        return sum(b.bin_type.cost for b in self.bins)
+
+    def bin_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for b in self.bins:
+            counts[b.bin_type.name] = counts.get(b.bin_type.name, 0) + 1
+        return counts
+
+    def validate(self, atol: float = 1e-9) -> None:
+        """Assert solution feasibility; raises AssertionError on violation."""
+        p = self.problem
+        assert len(self.assignments) == len(p.items), "not all items assigned"
+        seen = {a.item_index for a in self.assignments}
+        assert seen == set(range(len(p.items))), "item indices wrong"
+        loads = [np.zeros(p.dim) for _ in self.bins]
+        for a in self.assignments:
+            req = np.asarray(p.items[a.item_index].choices[a.choice_index].requirement)
+            loads[a.bin_index] += req
+        for load, b in zip(loads, self.bins):
+            cap = p.effective_capacity(b.bin_type)
+            assert np.all(load <= cap + atol), (
+                f"bin {b.bin_type.name} overflows: load={load} cap={cap}"
+            )
+            assert np.allclose(load, np.asarray(b.load), atol=1e-6), (
+                f"recorded load mismatch: {load} vs {b.load}"
+            )
+
+
+def build_solution(
+    problem: Problem,
+    placements: Sequence[tuple[int, int, int]],
+    opened: Sequence[BinType],
+) -> Solution:
+    """Construct + validate a Solution from raw (item, choice, bin) triples."""
+    loads = [np.zeros(problem.dim) for _ in opened]
+    for item_i, choice_i, bin_i in placements:
+        loads[bin_i] += np.asarray(
+            problem.items[item_i].choices[choice_i].requirement
+        )
+    # Drop unused bins, remapping indices.
+    keep = [i for i in range(len(opened)) if any(p[2] == i for p in placements)]
+    remap = {old: new for new, old in enumerate(keep)}
+    bins = tuple(
+        OpenBin(bin_type=opened[i], load=tuple(loads[i].tolist())) for i in keep
+    )
+    assignments = tuple(
+        Assignment(item_index=i, choice_index=c, bin_index=remap[b])
+        for i, c, b in placements
+    )
+    sol = Solution(problem=problem, bins=bins, assignments=assignments)
+    sol.validate()
+    return sol

@@ -1,0 +1,84 @@
+"""Cloud instance catalogs.
+
+Two catalogs ship:
+
+* ``paper_ec2_catalog`` — the exact Amazon EC2 types of paper Table 1
+  (Oregon pricing, 2018), dimensions [CPU cores, mem GB, GPU cores, GPU GB].
+* ``tpu_cloud_catalog`` — the TPU-cloud adaptation (DESIGN.md §3):
+  dimensions [host CPU cores, host mem GB, TPU TFLOP/s, TPU HBM GB], with
+  v5e-derived capabilities (197 bf16 TFLOP/s and 16 GB HBM per chip) and
+  on-demand-style hourly prices.
+
+The multi-GPU expansion of paper §3.2 (dimension ``2 + 2N``) is provided by
+:func:`expand_multi_accelerator`.
+"""
+from __future__ import annotations
+
+from .binpack.problem import BinType
+
+__all__ = [
+    "paper_ec2_catalog",
+    "tpu_cloud_catalog",
+    "expand_multi_accelerator",
+    "PAPER_DIMS",
+    "TPU_DIMS",
+]
+
+#: Dimension labels for the paper catalog (single-accelerator form).
+PAPER_DIMS = ("cpu_cores", "mem_gb", "gpu_cores", "gpu_mem_gb")
+TPU_DIMS = ("cpu_cores", "mem_gb", "tpu_tflops", "tpu_hbm_gb")
+
+
+def paper_ec2_catalog(include_multi_gpu: bool = False) -> tuple[BinType, ...]:
+    """Paper Table 1. g2.2xlarge GPU = 1536 CUDA cores / 4 GB (paper §3.2)."""
+    base = (
+        BinType("c4.2xlarge", capacity=(8, 15, 0, 0), cost=0.419),
+        BinType("c4.8xlarge", capacity=(36, 60, 0, 0), cost=1.675),
+        BinType("g2.2xlarge", capacity=(8, 15, 1536, 4), cost=0.650),
+    )
+    if not include_multi_gpu:
+        return base
+    # g2.8xlarge: 32 cores, 60 GB, 4 GPUs -> dimension 2 + 2*4 = 10.
+    n_gpus = 4
+    expanded = tuple(
+        expand_multi_accelerator(bt, n_accelerators=n_gpus) for bt in base
+    )
+    g28 = BinType(
+        "g2.8xlarge",
+        capacity=(32, 60) + (1536, 4) * n_gpus,
+        cost=2.600,
+    )
+    return expanded + (g28,)
+
+
+def tpu_cloud_catalog() -> tuple[BinType, ...]:
+    """TPU-cloud adaptation: [host cores, host GB, TPU TFLOP/s, HBM GB].
+
+    Prices follow the real on-demand gradient (bigger slices are nearly
+    linear with a small premium for the host; the CPU-only host matches a
+    c-family box). One v5e chip: 197 bf16 TFLOP/s, 16 GB HBM.
+    """
+    chip_tf, chip_hbm = 197.0, 16.0
+    return (
+        BinType("cpu-host-16", capacity=(16, 64, 0, 0), cost=0.680),
+        BinType("v5e-1", capacity=(24, 48, 1 * chip_tf, 1 * chip_hbm), cost=1.200),
+        BinType("v5e-4", capacity=(112, 192, 4 * chip_tf, 4 * chip_hbm), cost=4.400),
+        BinType("v5e-8", capacity=(224, 384, 8 * chip_tf, 8 * chip_hbm), cost=8.470),
+    )
+
+
+def expand_multi_accelerator(bin_type: BinType, n_accelerators: int) -> BinType:
+    """Lift a single-accelerator-form bin into the 2 + 2N dimension space.
+
+    Paper §3.2: a non-GPU instance in the 4-GPU problem becomes
+    [cores, mem, 0,0, 0,0, 0,0, 0,0]; a 1-GPU instance puts its GPU in the
+    first accelerator slot.
+    """
+    cores, mem, acc, acc_mem = bin_type.capacity
+    slots: list[float] = []
+    if acc > 0:
+        slots += [acc, acc_mem]
+        slots += [0.0, 0.0] * (n_accelerators - 1)
+    else:
+        slots += [0.0, 0.0] * n_accelerators
+    return BinType(bin_type.name, capacity=(cores, mem, *slots), cost=bin_type.cost)

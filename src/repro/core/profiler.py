@@ -1,0 +1,263 @@
+"""Test-run profiling and the linear frame-rate model (paper §3.1.1-3).
+
+The manager "conducts two test runs (one using the CPU and the other using
+the GPU) to estimate the resource requirements of each program" and then
+scales compute-type requirements *linearly with the desired frame rate*
+(paper Fig. 5) while memory-type requirements stay rate-invariant.
+
+Adaptation (DESIGN.md §3): in this container the CPU test run is a real
+wall-clock measurement of the jit-compiled program; the accelerator test
+run is *dry-run derived* — utilization is the roofline occupancy
+max(FLOPs/peak, bytes/bandwidth) · fps of the compiled computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+import numpy as np
+
+from .binpack.problem import Choice, Item
+from .streams import FrameSize, StreamSpec
+
+__all__ = [
+    "ResourceProfile",
+    "ProfileTable",
+    "measure_cpu_profile",
+    "derive_accelerator_profile",
+    "paper_profile_table",
+    "RooflineSpec",
+]
+
+#: Canonical 4-dim requirement space (single-accelerator form): the paper's
+#: [CPU, memory, accelerator compute, accelerator memory].
+N_DIMS = 4
+DIM_CPU, DIM_MEM, DIM_ACC, DIM_ACC_MEM = range(N_DIMS)
+
+#: Which dims scale linearly with fps (paper: compute yes, memory no).
+_FPS_SCALING = np.array([1.0, 0.0, 1.0, 0.0])
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineSpec:
+    """Accelerator hardware model used for dry-run-derived test runs."""
+
+    name: str
+    peak_flops: float  # FLOP/s
+    hbm_bandwidth: float  # bytes/s
+    compute_capacity_units: float  # catalog units for 100% compute (e.g. 1536 cores or 197 TFLOP/s)
+    memory_capacity_gb: float
+
+    def occupancy_per_frame(self, flops: float, bytes_accessed: float) -> float:
+        """Fraction of the accelerator-second one frame consumes."""
+        return max(flops / self.peak_flops, bytes_accessed / self.hbm_bandwidth)
+
+
+#: TPU v5e constants (single chip) — the target hardware of this framework.
+TPU_V5E = RooflineSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bandwidth=819e9,
+    compute_capacity_units=197.0,  # catalog dim is TFLOP/s
+    memory_capacity_gb=16.0,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceProfile:
+    """Requirement vector measured at ``reference_fps`` for one device kind.
+
+    ``device`` is "cpu" or "accel"; the vector lives in the canonical 4-dim
+    space in *absolute* catalog units (cores, GB, accel units, accel GB).
+    """
+
+    program_id: str
+    frame_size: str
+    device: str  # "cpu" | "accel"
+    reference_fps: float
+    requirement: tuple[float, ...]  # at reference_fps
+    max_fps: float  # rate at which the dominant scaled dim saturates
+
+    def at_fps(self, fps: float) -> np.ndarray:
+        """Paper's linear model: compute dims scale with fps, memory doesn't."""
+        base = np.asarray(self.requirement, dtype=np.float64)
+        scale = fps / self.reference_fps
+        return base * (_FPS_SCALING * scale + (1.0 - _FPS_SCALING))
+
+
+class ProfileTable:
+    """All known test-run profiles, keyed by (program, frame size, device).
+
+    Test runs are conducted once and reused for future executions of the
+    same program (paper §3.1.1).
+    """
+
+    def __init__(self) -> None:
+        self._profiles: dict[tuple[str, str, str], ResourceProfile] = {}
+
+    def add(self, profile: ResourceProfile) -> None:
+        key = (profile.program_id, profile.frame_size, profile.device)
+        self._profiles[key] = profile
+
+    def get(self, program_id: str, frame_size: str, device: str) -> ResourceProfile | None:
+        return self._profiles.get((program_id, frame_size, device))
+
+    def has(self, program_id: str, frame_size: str) -> bool:
+        return any(
+            k[:2] == (program_id, frame_size) for k in self._profiles
+        )
+
+    def choices_for(self, stream: StreamSpec) -> Item:
+        """Build the MC-VBP item for a stream (paper §3.2 multiple choices)."""
+        fsz = str(stream.frame_size)
+        choices = []
+        for device in ("cpu", "accel"):
+            prof = self.get(stream.program.program_id, fsz, device)
+            if prof is None:
+                continue
+            if stream.desired_fps > prof.max_fps + 1e-9:
+                # Device cannot reach the desired rate at all (paper S3:
+                # "ST1 fails to execute ZF at 8 FPS").
+                continue
+            req = tuple(prof.at_fps(stream.desired_fps).tolist())
+            choices.append(Choice(label=device, requirement=req))
+        if not choices:
+            from .binpack.problem import InfeasibleError
+
+            raise InfeasibleError(
+                f"stream {stream.name}: no device can reach "
+                f"{stream.desired_fps} FPS for {stream.program.program_id}"
+            )
+        return Item(name=stream.name, choices=tuple(choices))
+
+
+def measure_cpu_profile(
+    program_id: str,
+    frame_size: FrameSize,
+    run_fn: Callable[[np.ndarray], object],
+    make_frame: Callable[[FrameSize], np.ndarray],
+    *,
+    memory_gb: float,
+    reference_fps: float = 0.2,
+    n_warmup: int = 1,
+    n_iters: int = 3,
+    total_cores: float = 1.0,
+) -> ResourceProfile:
+    """Real test run on the CPU: wall-clock seconds-per-frame → core demand.
+
+    A program that takes ``t`` seconds of one core per frame needs
+    ``t * fps`` cores to sustain ``fps``; ``max_fps`` is where it would
+    saturate the whole machine (``total_cores``).
+    """
+    frame = make_frame(frame_size)
+    for _ in range(n_warmup):
+        out = run_fn(frame)
+        _block(out)
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        out = run_fn(frame)
+        _block(out)
+    sec_per_frame = (time.perf_counter() - t0) / n_iters
+    cores_at_ref = sec_per_frame * reference_fps
+    req = (cores_at_ref, memory_gb, 0.0, 0.0)
+    max_fps = total_cores / sec_per_frame
+    return ResourceProfile(
+        program_id=program_id,
+        frame_size=str(frame_size),
+        device="cpu",
+        reference_fps=reference_fps,
+        requirement=req,
+        max_fps=max_fps,
+    )
+
+
+def derive_accelerator_profile(
+    program_id: str,
+    frame_size: FrameSize,
+    *,
+    flops_per_frame: float,
+    bytes_per_frame: float,
+    memory_gb: float,
+    host_cores_fraction_of_cpu_run: float = 0.134,
+    cpu_profile: ResourceProfile | None = None,
+    roofline: RooflineSpec = TPU_V5E,
+    reference_fps: float = 0.2,
+) -> ResourceProfile:
+    """Dry-run-derived accelerator test run (DESIGN.md §3).
+
+    Accelerator occupancy per frame comes from the roofline model over the
+    compiled computation's FLOPs / bytes.  The host-CPU requirement while
+    offloading is a fraction of the CPU-run requirement (decode + feed
+    work; paper Table 3 shows VGG CPU demand dropping 39.4% → 5.3% ≈ 0.134
+    when the GPU does the heavy lifting — we default to that ratio).
+    """
+    occupancy = roofline.occupancy_per_frame(flops_per_frame, bytes_per_frame)
+    acc_units_at_ref = occupancy * reference_fps * roofline.compute_capacity_units
+    if cpu_profile is not None:
+        host_cores_at_ref = (
+            cpu_profile.at_fps(reference_fps)[DIM_CPU] * host_cores_fraction_of_cpu_run
+        )
+    else:
+        host_cores_at_ref = 0.0
+    req = (host_cores_at_ref, memory_gb * 0.25, acc_units_at_ref, memory_gb)
+    max_fps = reference_fps / max(occupancy * reference_fps, 1e-12)
+    return ResourceProfile(
+        program_id=program_id,
+        frame_size=str(frame_size),
+        device="accel",
+        reference_fps=reference_fps,
+        requirement=req,
+        max_fps=max_fps,
+    )
+
+
+def paper_profile_table() -> ProfileTable:
+    """Paper Tables 2 & 3 as a ProfileTable (640x480 frames).
+
+    Table 3 (at 0.2 FPS): VGG-16 CPU-run 39.4% CPU; GPU-run 5.3% CPU +
+    4.6% GPU.  ZF CPU-run 17.8%; GPU-run 2.2% CPU + 1.2% GPU.  The machine
+    has 8 cores; the GPU has 1536 cores / 4 GB (g2.2xlarge terms).
+    Table 2 max rates: VGG 0.28/3.61 FPS, ZF 0.56/9.15 FPS (CPU/GPU).
+    """
+    table = ProfileTable()
+    cores, gpu_cores = 8.0, 1536.0
+    rows = [
+        # prog, cpu-run cpu%, gpu-run cpu%, gpu-run gpu%, mem, gmem, maxcpu, maxgpu
+        ("vgg16", 0.394, 0.053, 0.046, 0.90, 0.28, 0.28, 3.61),
+        ("zf", 0.178, 0.022, 0.012, 0.55, 0.22, 0.56, 9.15),
+    ]
+    for prog, c_cpu, g_cpu, g_gpu, mem, gmem, max_cpu_fps, max_gpu_fps in rows:
+        table.add(
+            ResourceProfile(
+                program_id=prog,
+                frame_size="640x480",
+                device="cpu",
+                reference_fps=0.2,
+                requirement=(c_cpu * cores, mem, 0.0, 0.0),
+                max_fps=max_cpu_fps,
+            )
+        )
+        table.add(
+            ResourceProfile(
+                program_id=prog,
+                frame_size="640x480",
+                device="accel",
+                reference_fps=0.2,
+                requirement=(g_cpu * cores, mem, g_gpu * gpu_cores, gmem),
+                max_fps=max_gpu_fps,
+            )
+        )
+    return table
+
+
+def _block(out) -> None:
+    """Block until an (possibly jax) output is materialized."""
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    elif isinstance(out, (tuple, list)):
+        for o in out:
+            _block(o)
+    elif isinstance(out, Mapping):
+        for o in out.values():
+            _block(o)

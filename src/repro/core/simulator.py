@@ -1,0 +1,74 @@
+"""Fleet execution simulator (validates the 90%-utilization rule, Fig 5/6).
+
+Models the paper's observed behaviour: analysis performance (actual/desired
+frame rate, averaged over streams) stays at 100% while every resource on an
+instance is under-utilized, and degrades proportionally once a compute
+resource saturates — the streams on that instance share the saturated
+resource fairly, so each achieves ``cap/load`` of its desired rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .binpack.problem import BinType
+from .manager import AllocationPlan
+from .profiler import DIM_ACC, DIM_CPU, ProfileTable
+
+__all__ = ["InstanceLoad", "simulate_plan", "simulate_instance"]
+
+_COMPUTE_DIMS = (DIM_CPU, DIM_ACC)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceLoad:
+    instance_type: str
+    utilization: tuple[float, ...]  # per dim, fraction of raw capacity
+    performance: float  # avg actual/desired frame rate of its streams
+
+
+def simulate_instance(
+    bin_type: BinType, requirement_vectors: Sequence[np.ndarray]
+) -> InstanceLoad:
+    cap = np.asarray(bin_type.capacity, dtype=np.float64)
+    load = np.sum(requirement_vectors, axis=0) if requirement_vectors else np.zeros_like(cap)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        util = np.where(cap > 0, load / np.maximum(cap, 1e-300), 0.0)
+    # Saturated compute resources are shared fairly: every stream on this
+    # instance runs at cap/load of its desired rate for the worst compute dim.
+    slowdown = 1.0
+    for d in _COMPUTE_DIMS:
+        if util[d] > 1.0:
+            slowdown = min(slowdown, 1.0 / util[d])
+    return InstanceLoad(
+        instance_type=bin_type.name,
+        utilization=tuple(util.tolist()),
+        performance=slowdown,
+    )
+
+
+def simulate_plan(plan: AllocationPlan, profiles: ProfileTable) -> dict:
+    """Returns overall performance + per-instance utilizations for a plan."""
+    per_instance: list[InstanceLoad] = []
+    perf_by_stream: list[float] = []
+    for i, bin_ in enumerate(plan.solution.bins):
+        reqs = []
+        for p in plan.placements:
+            if p.instance_index != i:
+                continue
+            prof = profiles.get(
+                p.stream.program.program_id, str(p.stream.frame_size), p.device
+            )
+            assert prof is not None
+            reqs.append(prof.at_fps(p.stream.desired_fps))
+        info = simulate_instance(bin_.bin_type, reqs)
+        per_instance.append(info)
+        perf_by_stream += [info.performance] * len(reqs)
+    overall = float(np.mean(perf_by_stream)) if perf_by_stream else 1.0
+    return {
+        "overall_performance": overall,
+        "instances": per_instance,
+        "meets_target": overall >= 0.9,  # paper: keep overall performance >= 90%
+    }

@@ -1,0 +1,55 @@
+"""Stream and analysis-program abstractions (paper §3.1 factors 2 & 3)."""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["FrameSize", "StreamSpec", "AnalysisProgram", "COMMON_FRAME_SIZES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameSize:
+    width: int
+    height: int
+
+    @property
+    def pixels(self) -> int:
+        return self.width * self.height
+
+    def __str__(self) -> str:
+        return f"{self.width}x{self.height}"
+
+
+#: Paper §3.1.3: "there are only a few common frame sizes among network cameras".
+COMMON_FRAME_SIZES = (
+    FrameSize(640, 480),
+    FrameSize(1280, 720),
+    FrameSize(1920, 1080),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisProgram:
+    """An analysis program (VGG-16, ZF, or any model from the zoo).
+
+    ``run_fn(frames) -> outputs`` is the jit-able callable used for test
+    runs; it is optional because allocation can also work from previously
+    profiled requirement tables.
+    """
+
+    name: str
+    #: identifies the profile-table entry; e.g. "vgg16", "zf", "gemma2-2b".
+    program_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """A network-camera stream to be analyzed (paper Fig. 2 inputs)."""
+
+    name: str
+    program: AnalysisProgram
+    desired_fps: float
+    frame_size: FrameSize = COMMON_FRAME_SIZES[0]
+
+    def __post_init__(self) -> None:
+        if self.desired_fps <= 0:
+            raise ValueError(f"stream {self.name}: fps must be > 0")

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Kernels (each: <name>.py kernel, ops.py wrapper, ref.py oracle):
+  * attention — flash attention (GQA, sliding window, logit softcap)
+  * decode_attention — flash-decode (1 token vs long KV cache)
+  * ssd — Mamba-2 SSD chunked scan
+  * rglru — RG-LRU linear recurrence
+  * grouped_gemm — ragged expert GEMM for dropless MoE
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""Flash attention Pallas TPU kernel (GQA + sliding window + logit softcap).
+
+TPU-native design (DESIGN.md §7): the grid is (batch, q_head, q_blocks,
+kv_blocks) with the kv dimension innermost — TPU grids execute sequentially,
+so the online-softmax running state (acc, m, l) lives in VMEM scratch that
+persists across kv steps and is flushed to the output block on the last
+step. Q/K/V tiles stream HBM→VMEM via BlockSpecs; the (block_q x block_k)
+score tile feeds the MXU with 128-aligned shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_q: int, block_k: int, window: int | None,
+            softcap: float | None):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    iq = pl.program_id(2)
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-37)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    assert causal, "kernel is causal-only (decoder models)"
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+
+    # Layout: heads-major so each (b, h) pair owns contiguous (S, D) tiles.
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KV, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, s // block_q, s // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=d ** -0.5, block_q=block_q, block_k=block_k,
+            window=window, softcap=logit_softcap,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, iq, ik, rep=rep: (b_, h_ // rep, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, iq, ik, rep=rep: (b_, h_ // rep, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)  # back to (B, S, H, D)

@@ -1,0 +1,116 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a long KV cache.
+
+decode_32k / long_500k hot-spot. Grid = (batch, kv_head, cache_blocks)
+with the cache dimension innermost; the online-softmax state for the
+``rep`` query heads sharing this KV head persists in VMEM scratch across
+cache blocks. Slot validity comes from the cache's absolute-position
+buffer (-1 = empty; window masking vs. ``cur_pos``), so ring-buffer
+sliding-window caches decode with the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+_NEG_INF = -2.0e38
+
+
+def _kernel(cur_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, window: int | None, softcap: float | None):
+    il = pl.program_id(2)
+    nl = pl.num_programs(2)
+
+    @pl.when(il == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (rep, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bl, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (rep, bl)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    cur = cur_ref[0]
+    pos = pos_ref[0, :]  # (bl,) absolute positions of the slots
+    valid = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        valid &= pos > cur - window
+    s = jnp.where(valid[None, :], s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (bl, d)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(il == nl - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-37)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "logit_softcap", "block_l", "interpret"),
+)
+def decode_attention(
+    q: jax.Array,  # (B, KV, R, D) — one query token per sequence
+    k: jax.Array,  # (B, L, KV, D) cache keys (rope-applied)
+    v: jax.Array,  # (B, L, KV, D)
+    pos: jax.Array,  # (L,) int32 absolute position per slot (-1 empty)
+    cur_pos: jax.Array,  # scalar int32
+    *,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+    block_l: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, kv, rep, d = q.shape
+    l = k.shape[1]
+    block_l = min(block_l, l)
+    assert l % block_l == 0, (l, block_l)
+
+    pos2 = pos.reshape(1, l)
+    cur = cur_pos.reshape(1).astype(jnp.int32)
+
+    grid = (b, kv, l // block_l)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=d ** -0.5, window=window, softcap=logit_softcap
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # cur_pos
+            pl.BlockSpec((1, 1, rep, d), lambda b_, g, il: (b_, g, 0, 0)),
+            pl.BlockSpec((1, block_l, 1, d),
+                         lambda b_, g, il: (b_, il, g, 0)),
+            pl.BlockSpec((1, block_l, 1, d),
+                         lambda b_, g, il: (b_, il, g, 0)),
+            pl.BlockSpec((1, block_l), lambda b_, g, il: (0, il)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda b_, g, il: (b_, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, d), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur, q, k, v, pos2)
+    return out

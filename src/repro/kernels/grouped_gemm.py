@@ -1,0 +1,99 @@
+"""Grouped (ragged expert) GEMM Pallas TPU kernel for dropless MoE.
+
+Megablocks rethought for TPU (DESIGN.md §7): tokens arrive sorted by
+expert and padded so every expert's segment is a whole number of
+``block_t`` tiles. A scalar-prefetched ``block_expert`` map tells the
+BlockSpec index_map which expert's weight tile to stream for each token
+block — so the MXU sees only dense (block_t x D) @ (D x block_f) tiles and
+no gather ever materializes in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_gemm", "pad_and_sort_tokens"]
+
+
+def _kernel(block_expert_ref, x_ref, w_ref, o_ref):
+    del block_expert_ref  # consumed by the index maps
+    x = x_ref[...]
+    w = w_ref[0]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def grouped_gemm(
+    x: jax.Array,  # (T, D) tokens sorted by expert, block-aligned padding
+    w: jax.Array,  # (E, D, F) expert weights
+    block_expert: jax.Array,  # (T // block_t,) int32 expert id per block
+    *,
+    block_t: int = 128,
+    block_f: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    t, d = x.shape
+    e, _, f = w.shape
+    block_t = min(block_t, t)
+    block_f = min(block_f, f)
+    assert t % block_t == 0 and f % block_f == 0, (t, f, block_t, block_f)
+    assert block_expert.shape == (t // block_t,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t // block_t, f // block_f),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda it, jf, be: (it, 0)),
+            pl.BlockSpec((1, d, block_f), lambda it, jf, be: (be[it], 0, jf)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_f), lambda it, jf, be: (it, jf)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
+        interpret=interpret,
+    )(block_expert.astype(jnp.int32), x, w)
+
+
+def pad_and_sort_tokens(
+    x: jax.Array,  # (T, D)
+    expert_ids: jax.Array,  # (T,) chosen expert per token (single-choice view)
+    num_experts: int,
+    *,
+    block_t: int = 128,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort tokens by expert and pad each segment to a block_t multiple.
+
+    Returns (sorted_padded_x, block_expert map, inverse gather indices such
+    that ``out_sorted[inv]`` restores token order; padded rows map nowhere).
+    """
+    t, d = x.shape
+    order = jnp.argsort(expert_ids, stable=True)
+    counts = jnp.bincount(expert_ids, length=num_experts)
+    padded_counts = ((counts + block_t - 1) // block_t) * block_t
+    seg_starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(padded_counts)[:-1]])
+    # Destination row of each (sorted) token: segment start + rank in segment.
+    sorted_experts = expert_ids[order]
+    rank = jnp.cumsum(jax.nn.one_hot(sorted_experts, num_experts,
+                                     dtype=jnp.int32), axis=0)[
+        jnp.arange(t), sorted_experts] - 1
+    dest = seg_starts[sorted_experts] + rank
+    # Static upper bound on padded length: T + E*(block_t-1), block-rounded.
+    total = ((t + num_experts * (block_t - 1) + block_t - 1) // block_t) * block_t
+    xs = jnp.zeros((total, d), x.dtype).at[dest].set(x[order])
+    inv = jnp.zeros((t,), jnp.int32).at[order].set(dest.astype(jnp.int32))
+    nb = total // block_t
+    block_starts = jnp.arange(nb) * block_t
+    block_expert = jnp.clip(
+        jnp.searchsorted(jnp.cumsum(padded_counts), block_starts, side="right"),
+        0, num_experts - 1,
+    ).astype(jnp.int32)
+    return xs, block_expert, inv

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container,
+unit tests) they run with ``interpret=True``, executing the kernel bodies
+in Python on the same BlockSpec schedule — bit-for-bit the logic the TPU
+will run, minus the hardware.
+
+Every wrapper has a pure-jnp oracle in ``repro.kernels.ref`` and a
+shape/dtype-sweeping allclose test in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import attention as _attn
+from . import decode_attention as _dec
+from . import grouped_gemm as _gg
+from . import rglru as _rglru
+from . import ssd as _ssd
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "ssd_scan",
+    "rglru_scan",
+    "grouped_gemm",
+    "pad_and_sort_tokens",
+]
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, window=None, logit_softcap=None,
+                    block_q: int = 128, block_k: int = 128):
+    return _attn.flash_attention(
+        q, k, v, causal=True, window=window, logit_softcap=logit_softcap,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+
+
+def decode_attention(q, k, v, pos, cur_pos, *, window=None, logit_softcap=None,
+                     block_l: int = 512):
+    return _dec.decode_attention(
+        q, k, v, pos, cur_pos, window=window, logit_softcap=logit_softcap,
+        block_l=block_l, interpret=_interpret(),
+    )
+
+
+def ssd_scan(x, dt, A, Bm, Cm, h0=None, *, chunk: int = 128):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, h0, chunk=chunk,
+                         interpret=_interpret())
+
+
+def rglru_scan(a, b, h0=None, *, block_t: int = 128, block_w: int = 512):
+    return _rglru.rglru_scan_kernel(a, b, h0, block_t=block_t,
+                                    block_w=block_w, interpret=_interpret())
+
+
+def grouped_gemm(x, w, block_expert, *, block_t: int = 128, block_f: int = 128):
+    return _gg.grouped_gemm(x, w, block_expert, block_t=block_t,
+                            block_f=block_f, interpret=_interpret())
+
+
+pad_and_sort_tokens = _gg.pad_and_sort_tokens

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the naive O(full) implementation of its kernel's
+semantics, written for clarity, not speed. Kernel tests sweep shapes and
+dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "decode_attention_ref",
+    "ssd_ref",
+    "rglru_ref",
+    "grouped_gemm_ref",
+]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qr = q.reshape(b, s, kv, rep, d)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qr, k).astype(jnp.float32)
+    scores = scores * (d ** -0.5)
+    if logit_softcap is not None:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, KV, R, D) one query token per sequence
+    k: jax.Array,  # (B, L, KV, D) cache
+    v: jax.Array,  # (B, L, KV, D)
+    pos: jax.Array,  # (L,) absolute position per slot, -1 = empty
+    cur_pos: jax.Array,  # scalar
+    *,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+) -> jax.Array:
+    d = q.shape[-1]
+    scores = jnp.einsum("bgrd,blgd->bgrl", q, k).astype(jnp.float32) * (d ** -0.5)
+    if logit_softcap is not None:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    mask = (pos >= 0) & (pos <= cur_pos)
+    if window is not None:
+        mask &= pos > cur_pos - window
+    scores = jnp.where(mask[None, None, None, :], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgrl,blgd->bgrd", p.astype(v.dtype), v)
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) positive
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    h0: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential (timestep-by-timestep) SSD recurrence."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hstate, t):
+        decay = jnp.exp(dt[:, t] * A[None, :])  # (B,H)
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t].astype(jnp.float32),
+                         Bm[:, t].astype(jnp.float32))
+        hstate = hstate * decay[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Cm[:, t].astype(jnp.float32))
+        return hstate, y
+
+    hfin, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hfin
+
+
+def rglru_ref(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t. a,b: (B,S,W)."""
+    bsz, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), a.dtype)
+
+    def step(h, t):
+        h = a[:, t] * h + b[:, t]
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, jnp.arange(s))
+    return hs.transpose(1, 0, 2)
+
+
+def grouped_gemm_ref(
+    x: jax.Array,  # (T, D) tokens sorted by expert, padded per group
+    w: jax.Array,  # (E, D, F)
+    block_expert: jax.Array,  # (T // block_t,) expert id per token block
+    block_t: int,
+) -> jax.Array:
+    t, d = x.shape
+    nb = t // block_t
+    out = jnp.zeros((t, w.shape[2]), x.dtype)
+    for i in range(nb):
+        xi = x[i * block_t : (i + 1) * block_t]
+        out = out.at[i * block_t : (i + 1) * block_t].set(
+            (xi @ w[block_expert[i]]).astype(x.dtype)
+        )
+    return out

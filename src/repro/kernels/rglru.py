@@ -1,0 +1,72 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t over time, elementwise in the width lanes (VPU
+work, no MXU). Grid = (batch, width_blocks, time_blocks) with time
+innermost; the (1, block_w) state row persists in VMEM scratch across time
+blocks. Inside a block the recurrence advances with a fori_loop over the
+block's timesteps — VMEM-resident, no HBM traffic between steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rglru_scan_kernel"]
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, state_ref, *, block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (block_t, block_w)
+    bb = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + bb[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, state_ref[0])
+    state_ref[...] = h[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w", "interpret"))
+def rglru_scan_kernel(
+    a: jax.Array,  # (B, S, W)
+    b: jax.Array,  # (B, S, W)
+    h0: jax.Array | None = None,  # (B, W)
+    *,
+    block_t: int = 128,
+    block_w: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    bsz, s, w = a.shape
+    block_t = min(block_t, s)
+    block_w = min(block_w, w)
+    assert s % block_t == 0 and w % block_w == 0, (s, w, block_t, block_w)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+
+    grid = (bsz, w // block_w, s // block_t)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w), lambda b_, iw, it: (b_, it, iw)),
+            pl.BlockSpec((1, block_t, block_w), lambda b_, iw, it: (b_, it, iw)),
+            pl.BlockSpec((1, block_w), lambda b_, iw, it: (b_, iw)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_t, block_w), lambda b_, iw, it: (b_, it, iw)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+Per combination this script:
+  1. builds the sharded step (train/prefill/decode per the shape kind),
+  2. ``.lower()``s it against ShapeDtypeStructs (no allocation),
+  3. ``.compile()``s (GSPMD partitioning must succeed = the sharding plan
+     is coherent), prints ``memory_analysis()`` / ``cost_analysis()``,
+  4. parses collective bytes from the post-SPMD HLO,
+  5. writes a JSON artifact under artifacts/dryrun/ for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import model_flops, parse_collectives, roofline_terms
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+#: long_500k policy (DESIGN.md): archs that run it natively.
+NATIVE_LONG = {"mamba2-1.3b", "recurrentgemma-9b", "gemma2-2b"}
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, *,
+            save: bool = True) -> dict:
+    cfg = get_config(arch)
+    seq_len, batch, kind = steps_lib.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+
+    long_context = shape == "long_500k"
+    variant = ""
+    if long_context and arch not in NATIVE_LONG:
+        assert cfg.long_context_window, f"{arch}: no long-context variant"
+        variant = f"-sw{cfg.long_context_window}"
+
+    # Gradient-accumulation factor for the production train program
+    # (SPerf iteration 3): sized so activation temp fits 16 GB/chip.
+    microbatches = 32 if cfg.param_count() > 1e11 else 8
+
+    def lower_combo(the_cfg, analysis: bool):
+        if kind == "train":
+            jitted, (state_shape, abstract), _ = steps_lib.make_train_setup(
+                the_cfg, mesh, multi_pod=multi_pod, batch=batch,
+                seq_len=seq_len, analysis=analysis, microbatches=microbatches,
+            )
+            return jitted.lower(state_shape, abstract)
+        if kind == "prefill":
+            jitted, (pshape, abstract, cshape), _ = steps_lib.make_prefill_setup(
+                the_cfg, mesh, multi_pod=multi_pod, batch=batch,
+                seq_len=seq_len, analysis=analysis,
+            )
+            return jitted.lower(pshape, abstract, cshape)
+        jitted, (pshape, toks, pos, cshape), _ = steps_lib.make_decode_setup(
+            the_cfg, mesh, multi_pod=multi_pod, batch=batch, cache_len=seq_len,
+            long_context=long_context, analysis=analysis,
+        )
+        return jitted.lower(pshape, toks, pos, cshape)
+
+    def analysis_costs(groups: int):
+        """Compile a reduced-depth UNROLLED variant and read its costs."""
+        small = dataclasses.replace(
+            cfg, num_layers=len(cfg.layer_pattern) * groups)
+        comp = lower_combo(small, analysis=True).compile()
+        c = comp.cost_analysis() or {}
+        return (
+            float(c.get("flops", 0.0)),
+            float(c.get("bytes accessed", 0.0)),
+            parse_collectives(comp.as_text()),
+        )
+
+    t0 = time.perf_counter()
+    with mesh:
+        # Pass 1 — PRODUCTION program (lax.scan over depth): proves the
+        # sharding plan compiles and yields memory_analysis.
+        lowered = lower_combo(cfg, analysis=False)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+        # Pass 2 — ANALYSIS: XLA cost analysis counts while-loop bodies
+        # once, so roofline terms need loop-free HLO. Compiling the full
+        # depth unrolled is too slow for 314B-class configs; since layer
+        # groups are homogeneous, compile UNROLLED 1-group and 2-group
+        # variants and extrapolate exactly:
+        #     body = F(2) - F(1);  total = F(1) + (G - 1) * body.
+        t1 = time.perf_counter()
+        f1_flops, f1_bytes, f1_coll = analysis_costs(1)
+        f2_flops, f2_bytes, f2_coll = analysis_costs(2)
+        t_analysis = time.perf_counter() - t1
+
+    g = cfg.num_groups
+    flops_dev = f1_flops + (g - 1) * max(f2_flops - f1_flops, 0.0)
+    bytes_dev = f1_bytes + (g - 1) * max(f2_bytes - f1_bytes, 0.0)
+    coll = {}
+    for op in set(f1_coll) | set(f2_coll):
+        c1, c2 = f1_coll[op], f2_coll[op]
+        coll[op] = {
+            "count": int(c1["count"] + (g - 1) * max(c2["count"] - c1["count"], 0)),
+            "bytes": c1["bytes"] + (g - 1) * max(c2["bytes"] - c1["bytes"], 0.0),
+        }
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_info[attr] = getattr(mem, attr, None)
+    terms = roofline_terms(
+        hlo_flops_per_device=flops_dev,
+        hlo_bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll["total"]["bytes"],
+    )
+    tokens = batch * (1 if kind == "decode" else seq_len)
+    mf = model_flops(cfg, tokens) * (3 if kind == "train" else 1)
+    record = {
+        "arch": arch + variant,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "n_chips": n_chips,
+        "seq_len": seq_len,
+        "batch": batch,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "analysis_compile_s": round(t_analysis, 2),
+        "hlo_flops": flops_dev * n_chips,  # global
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes": bytes_dev * n_chips,  # global
+        "hlo_bytes_per_device": bytes_dev,
+        "collectives": coll,
+        "memory": mem_info,
+        "roofline": terms,
+        "model_flops": mf,
+        "useful_flops_frac": (mf / (flops_dev * n_chips)) if flops_dev else None,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        name = f"{arch}__{shape}__{record['mesh']}.json"
+        with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def _fmt(record: dict) -> str:
+    r = record["roofline"]
+    return (
+        f"{record['arch']:28s} {record['shape']:12s} {record['mesh']:8s} "
+        f"lower {record['lower_s']:6.1f}s compile {record['compile_s']:6.1f}s | "
+        f"flops {record['hlo_flops']:.3e} bytes {record['hlo_bytes']:.3e} "
+        f"coll/dev {record['collectives']['total']['bytes']:.3e} | "
+        f"t_comp {r['compute_s']*1e3:8.2f}ms t_mem {r['memory_s']*1e3:8.2f}ms "
+        f"t_coll {r['collective_s']*1e3:8.2f}ms -> {r['dominant']}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(steps_lib.SHAPES))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"), default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(steps_lib.SHAPES) if (args.all or not args.shape) else (
+        args.shape,)
+    meshes = {"pod": (False,), "multipod": (True,), "both": (False, True)}[
+        args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = os.path.join(ARTIFACT_DIR,
+                                    f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    rec = run_one(arch, shape, mp)
+                    print(_fmt(rec), flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"FAIL {arch} {shape} multipod={mp}: {e}", flush=True)
+                    if not args.continue_on_error:
+                        traceback.print_exc()
+                        raise SystemExit(1)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-runs passed.")
+
+
+if __name__ == "__main__":
+    main()

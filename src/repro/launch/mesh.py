@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "MESH_SHAPES"]
+
+MESH_SHAPES = {
+    False: ((16, 16), ("data", "model")),  # one pod: 256 chips
+    True: ((2, 16, 16), ("pod", "data", "model")),  # two pods: 512 chips
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = MESH_SHAPES[multi_pod]
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

@@ -1,0 +1,271 @@
+"""Sharded step builders shared by dryrun / train / serve launchers.
+
+Each builder returns ``(jitted_fn, abstract_args)`` where ``abstract_args``
+are ShapeDtypeStructs (no allocation) suitable both for ``.lower()``
+dry-runs and as the shape contract for real execution.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.sharding import specs as sh
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = [
+    "SHAPES",
+    "abstract_batch",
+    "make_train_setup",
+    "make_prefill_setup",
+    "make_decode_setup",
+    "needs_fsdp",
+]
+
+#: The assigned input shapes: name -> (seq_len, global_batch, step kind).
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def needs_fsdp(cfg: ModelConfig, *, model_axis: int = 16,
+               budget_bytes: float = 8e9) -> bool:
+    """True when bf16 params per chip exceed budget under pure tensor
+    parallelism — then weights also shard over ``data`` (FSDP)."""
+    return cfg.param_count() * 2 / model_axis > budget_bytes
+
+
+def abstract_batch(cfg: ModelConfig, seq_len: int, batch: int,
+                   *, with_labels: bool) -> dict:
+    """ShapeDtypeStructs for one input batch of the config's modality."""
+    toks = (batch, seq_len, cfg.num_codebooks) if cfg.num_codebooks > 1 else (
+        batch, seq_len)
+    out: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct(toks, jnp.int32)}
+    if cfg.modality == "vision_prefix":
+        text = seq_len - cfg.vision_tokens
+        assert text > 0, "seq shorter than vision prefix"
+        out["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.float32
+        )
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct(out["tokens"].shape, jnp.int32)
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _model_axis(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _param_shardings(cfg, mesh, params_shape, *, fsdp: bool, multi_pod: bool):
+    pspecs = sh.param_specs(params_shape, cfg, model_axis=_model_axis(mesh))
+    if fsdp:
+        pspecs = sh.apply_fsdp(
+            pspecs, params_shape, fsdp_axes=("data",),
+            axis_size=mesh.shape["data"],
+        )
+    return pspecs
+
+
+# ---- train ---------------------------------------------------------------------
+
+
+def make_train_setup(cfg: ModelConfig, mesh, *, multi_pod: bool,
+                     batch: int, seq_len: int,
+                     opt_cfg: AdamWConfig | None = None,
+                     analysis: bool = False,
+                     microbatches: int = 1):
+    """Returns (jitted train_step, (abstract state, abstract batch)).
+
+    ``microbatches=M`` runs gradient accumulation over M sequential
+    micro-batches (activation temp / M; §Perf iteration 3 — required to
+    fit the 1M-token train_4k step in 16 GB/chip for the larger archs).
+    The analysis (cost-counting) pass always uses M=1: a scan body would
+    be counted once, and the math totals are identical anyway.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    if analysis:
+        microbatches = 1
+    microbatches = max(1, microbatches)
+    assert batch % microbatches == 0, (batch, microbatches)
+
+    def init_state(key):
+        params = tfm.init_params(key, cfg)
+        return {"params": params, "opt": init_opt_state(params)}
+
+    state_shape = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    pspecs = _param_shardings(cfg, mesh, state_shape["params"], fsdp=True,
+                              multi_pod=multi_pod)
+    # Optimizer moments follow the (fsdp'd) parameter sharding; the step
+    # counter is replicated.
+    state_specs = {
+        "params": pspecs,
+        "opt": {"mu": pspecs, "nu": pspecs, "step": P()},
+    }
+    batch_specs = sh.train_batch_specs(cfg, multi_pod=multi_pod)
+    abstract = abstract_batch(cfg, seq_len, batch, with_labels=True)
+    # vision_prefix: spec dict must cover exactly the batch keys.
+    batch_specs = {k: batch_specs[k] for k in abstract}
+
+    act_spec = P(sh.data_axes(multi_pod), None, None)
+
+    def loss(params, batch_):
+        return tfm.loss_fn(params, cfg, batch_, remat=True,
+                           unroll=analysis, act_spec=act_spec)
+
+    def train_step(state, batch_):
+        if microbatches == 1:
+            (total, parts), grads = jax.value_and_grad(loss, has_aux=True)(
+                state["params"], batch_
+            )
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]),
+                batch_,
+            )
+
+            def mb_step(carry, one):
+                gsum, lsum = carry
+                (l, parts), g = jax.value_and_grad(loss, has_aux=True)(
+                    state["params"], one
+                )
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), parts
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            (gsum, lsum), parts_stack = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda a: a / microbatches, gsum)
+            total = lsum / microbatches
+            parts = jax.tree.map(lambda a: a.mean(), parts_stack)
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        return (
+            {"params": new_params, "opt": new_opt},
+            {"loss": total, **parts, **om},
+        )
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(_named(mesh, state_specs), _named(mesh, batch_specs)),
+        out_shardings=(_named(mesh, state_specs), None),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_shape, abstract), (state_specs, batch_specs)
+
+
+# ---- prefill ---------------------------------------------------------------------
+
+
+def make_prefill_setup(cfg: ModelConfig, mesh, *, multi_pod: bool,
+                       batch: int, seq_len: int, analysis: bool = False):
+    fsdp = needs_fsdp(cfg, model_axis=_model_axis(mesh))
+
+    params_shape = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = _param_shardings(cfg, mesh, params_shape, fsdp=fsdp,
+                              multi_pod=multi_pod)
+    cache_shape = jax.eval_shape(
+        functools.partial(tfm.init_serve_cache, cfg, batch, seq_len)
+    )
+    cspecs = sh.cache_specs(
+        cfg, batch, multi_pod=multi_pod, n_data=mesh.shape["data"],
+        model_axis=_model_axis(mesh), context_parallel=False,
+    )
+    abstract = abstract_batch(cfg, seq_len, batch, with_labels=False)
+    batch_specs = {
+        k: v for k, v in sh.train_batch_specs(cfg, multi_pod=multi_pod).items()
+        if k in abstract
+    }
+
+    def prefill_step(params, batch_, caches):
+        return tfm.forward_prefill(params, cfg, batch_, caches,
+                                   unroll=analysis)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(
+            _named(mesh, pspecs), _named(mesh, batch_specs), _named(mesh, cspecs)
+        ),
+        out_shardings=(None, _named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    return jitted, (params_shape, abstract, cache_shape), (pspecs, batch_specs, cspecs)
+
+
+# ---- decode ----------------------------------------------------------------------
+
+
+def make_decode_setup(cfg: ModelConfig, mesh, *, multi_pod: bool,
+                      batch: int, cache_len: int, long_context: bool,
+                      analysis: bool = False):
+    fsdp = needs_fsdp(cfg, model_axis=_model_axis(mesh))
+    total_dp = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    # batch too small to shard -> context-parallel the cache sequence dim.
+    context_parallel = batch % total_dp != 0
+
+    params_shape = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = _param_shardings(cfg, mesh, params_shape, fsdp=fsdp,
+                              multi_pod=multi_pod)
+    cache_shape = jax.eval_shape(
+        functools.partial(tfm.init_serve_cache, cfg, batch, cache_len,
+                          long_context=long_context)
+    )
+    cspecs = sh.cache_specs(
+        cfg, batch, multi_pod=multi_pod, n_data=mesh.shape["data"],
+        model_axis=_model_axis(mesh), context_parallel=context_parallel,
+        decode=True,
+    )
+    tok_shape = (batch, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 else (
+        batch, 1)
+    abstract_tokens = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    abstract_pos = jax.ShapeDtypeStruct((), jnp.int32)
+    in_specs = sh.decode_input_specs(
+        cfg, batch, multi_pod=multi_pod, n_data=mesh.shape["data"]
+    )
+
+    def serve_step(params, tokens, cur_pos, caches):
+        return tfm.forward_decode(params, cfg, tokens, cur_pos, caches,
+                                  long_context=long_context, unroll=analysis)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, in_specs["tokens"]),
+            _named(mesh, in_specs["cur_pos"]),
+            _named(mesh, cspecs),
+        ),
+        out_shardings=(None, _named(mesh, cspecs)),
+        donate_argnums=(3,),
+    )
+    return (
+        jitted,
+        (params_shape, abstract_tokens, abstract_pos, cache_shape),
+        (pspecs, in_specs, cspecs),
+    )

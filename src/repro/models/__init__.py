@@ -1,0 +1,2 @@
+"""Model zoo: all assigned architectures + the paper's analysis programs."""
+from .config import ModelConfig  # noqa: F401

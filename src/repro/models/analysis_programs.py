@@ -1,0 +1,180 @@
+"""The paper's analysis programs: VGG-16 [1] and ZF [2] in pure JAX.
+
+The paper runs Faster R-CNN with VGG-16 / ZF backbones to detect objects in
+640x480 MJPEG frames. We implement the backbone + detection-head compute
+faithfully enough for *resource profiling* (conv stacks + FC head at the
+published channel widths); the region-proposal machinery beyond the shared
+conv trunk is folded into the head FLOPs, as the paper's resource manager
+only observes utilization, never detections.
+
+These are the programs the manager "test runs" (paper §3.1.1): on CPU the
+profiler measures real wall-clock; for accelerators it derives occupancy
+from the compiled FLOP/byte counts (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streams import FrameSize
+
+__all__ = [
+    "init_vgg16",
+    "vgg16_forward",
+    "init_zf",
+    "zf_forward",
+    "make_frame",
+    "program_flops",
+    "PROGRAMS",
+]
+
+_VGG_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+            512, 512, 512, "M", 512, 512, 512, "M"]
+# ZF-net: 5 conv layers (96, 256, 384, 384, 256) + pools.
+_ZF_CFG = [(96, 7, 2), "M", (256, 5, 2), "M", (384, 3, 1), (384, 3, 1), (256, 3, 1), "M"]
+
+
+def _conv(x, w, b, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(out + b)
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def init_vgg16(key, num_classes: int = 21) -> dict:
+    """21 classes = PASCAL VOC (the paper detects persons, cars, buses...)."""
+    params, cin = {"convs": []}, 3
+    ks = iter(jax.random.split(key, 32))
+    for spec in _VGG_CFG:
+        if spec == "M":
+            continue
+        w = jax.random.normal(next(ks), (3, 3, cin, spec), jnp.float32) * np.sqrt(
+            2.0 / (9 * cin)
+        )
+        params["convs"].append({"w": w, "b": jnp.zeros((spec,))})
+        cin = spec
+    # Detection head (fc6/fc7 + cls/box): 512*7*7 -> 4096 -> 4096 -> out.
+    params["fc"] = [
+        {"w": jax.random.normal(next(ks), (512 * 7 * 7, 4096)) * 0.005,
+         "b": jnp.zeros((4096,))},
+        {"w": jax.random.normal(next(ks), (4096, 4096)) * 0.01,
+         "b": jnp.zeros((4096,))},
+        {"w": jax.random.normal(next(ks), (4096, num_classes * 5)) * 0.01,
+         "b": jnp.zeros((num_classes * 5,))},
+    ]
+    return params
+
+
+def vgg16_forward(params: dict, frame: jax.Array) -> jax.Array:
+    """frame: (H, W, 3) uint8/float -> detection logits."""
+    x = _preprocess(frame, 224)
+    ci = 0
+    for spec in _VGG_CFG:
+        if spec == "M":
+            x = _maxpool(x)
+        else:
+            p = params["convs"][ci]
+            x = _conv(x, p["w"], p["b"])
+            ci += 1
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fc"]):
+        x = x @ p["w"] + p["b"]
+        if i < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_zf(key, num_classes: int = 21) -> dict:
+    params, cin = {"convs": []}, 3
+    ks = iter(jax.random.split(key, 16))
+    for spec in _ZF_CFG:
+        if spec == "M":
+            continue
+        ch, k, _s = spec
+        w = jax.random.normal(next(ks), (k, k, cin, ch), jnp.float32) * np.sqrt(
+            2.0 / (k * k * cin)
+        )
+        params["convs"].append({"w": w, "b": jnp.zeros((ch,))})
+        cin = ch
+    params["fc"] = [
+        {"w": jax.random.normal(next(ks), (256 * 7 * 7, 4096)) * 0.005,
+         "b": jnp.zeros((4096,))},
+        {"w": jax.random.normal(next(ks), (4096, 4096)) * 0.01,
+         "b": jnp.zeros((4096,))},
+        {"w": jax.random.normal(next(ks), (4096, num_classes * 5)) * 0.01,
+         "b": jnp.zeros((num_classes * 5,))},
+    ]
+    return params
+
+
+def zf_forward(params: dict, frame: jax.Array) -> jax.Array:
+    x = _preprocess(frame, 224)
+    ci = 0
+    for spec in _ZF_CFG:
+        if spec == "M":
+            x = _maxpool(x)
+        else:
+            _ch, _k, s = spec
+            p = params["convs"][ci]
+            x = _conv(x, p["w"], p["b"], stride=s)
+            ci += 1
+    # Global-pad/crop to 7x7 for the head.
+    x = jax.image.resize(x, (x.shape[0], 7, 7, x.shape[3]), "linear")
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fc"]):
+        x = x @ p["w"] + p["b"]
+        if i < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _preprocess(frame: jax.Array, size: int) -> jax.Array:
+    """(H, W, 3) frame -> (1, size, size, 3) normalized float32."""
+    x = frame.astype(jnp.float32) / 255.0
+    x = jax.image.resize(x, (size, size, 3), "linear")
+    return x[None]
+
+
+def make_frame(frame_size: FrameSize) -> np.ndarray:
+    """Synthetic camera frame (the data pipeline's test pattern)."""
+    rng = np.random.RandomState(0)
+    return rng.randint(0, 256, (frame_size.height, frame_size.width, 3), np.uint8)
+
+
+def program_flops(program_id: str, frame_size: FrameSize) -> float:
+    """Analytic FLOPs per frame (for accelerator-side dry-run profiles)."""
+    # Convs resized to 224x224 regardless of camera frame size; the resize
+    # itself is O(pixels) and negligible.
+    if program_id == "vgg16":
+        return 2 * 15.3e9 + 2 * (512 * 49 * 4096 + 4096 * 4096 + 4096 * 105)
+    if program_id == "zf":
+        return 2 * 1.1e9 + 2 * (256 * 49 * 4096 + 4096 * 4096 + 4096 * 105)
+    raise KeyError(program_id)
+
+
+@functools.cache
+def _jitted(program_id: str):
+    key = jax.random.PRNGKey(0)
+    if program_id == "vgg16":
+        params = init_vgg16(key)
+        return jax.jit(lambda f: vgg16_forward(params, f))
+    if program_id == "zf":
+        params = init_zf(key)
+        return jax.jit(lambda f: zf_forward(params, f))
+    raise KeyError(program_id)
+
+
+PROGRAMS = {
+    "vgg16": lambda frame: _jitted("vgg16")(frame),
+    "zf": lambda frame: _jitted("zf")(frame),
+}

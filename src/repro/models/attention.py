@@ -1,0 +1,250 @@
+"""GQA attention: blocked (flash-style) training/prefill path + cached decode.
+
+Design notes
+------------
+* Grouped-query attention throughout (num_kv_heads <= num_heads); MQA is
+  kv=1 (recurrentgemma), MHA is kv=heads (musicgen).
+* The training/prefill path is a *blocked online-softmax* (the flash
+  algorithm expressed at the XLA level with ``lax.scan`` over KV blocks):
+  peak memory is O(S * block) instead of O(S^2), which is what makes the
+  32k-prefill dry-runs fit. The Pallas kernel in ``repro.kernels`` is the
+  TPU-native version of exactly this loop; ``repro.kernels.ref`` holds the
+  naive oracle both are tested against.
+* KV caches tag each slot with its absolute position (``pos`` buffer,
+  -1 = empty). Keys are stored rope-applied at their absolute position, so
+  sliding-window ring buffers need no relative-position rematerialization.
+  Masks derive from the position buffer: ``0 <= pos_slot <= cur`` and, for
+  windowed layers, ``pos_slot > cur - window``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, init_dense, init_rms_norm, rms_norm, rope, softcap
+
+__all__ = [
+    "init_attention",
+    "attention_train",
+    "init_cache",
+    "prefill_into_cache",
+    "attention_decode",
+]
+
+_NEG_INF = -2.0e38
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qk_norm: bool, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": init_dense(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": init_dense(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": init_dense(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": init_dense(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        params["q_norm"] = init_rms_norm(head_dim, dtype)
+        params["k_norm"] = init_rms_norm(head_dim, dtype)
+    return params
+
+
+def _project_qkv(params: dict, x: jax.Array, num_heads: int, num_kv_heads: int,
+                 head_dim: int, positions: jax.Array, rope_theta: float,
+                 norm_eps: float):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, num_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, num_kv_heads, head_dim)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+        k = rms_norm(k, params["k_norm"], norm_eps)
+    sin, cos = rope(positions, head_dim, rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,S,KV,R,hd), k: (B,T,KV,hd) -> (B,KV,R,S,T)."""
+    return jnp.einsum("bsgrh,btgh->bgrst", q, k)
+
+
+def attention_train(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int | None,
+    logit_softcap: float | None,
+    norm_eps: float,
+    block_kv: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Causal self-attention over a full sequence (training & prefill).
+
+    Blocked online-softmax over KV blocks: memory O(B*H*S*block_kv).
+    ``unroll=True`` unrolls the KV-block scan (analysis mode: XLA cost
+    analysis counts while-loop bodies once, so roofline lowering unrolls).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim,
+                           positions, rope_theta, norm_eps)
+    rep = num_heads // num_kv_heads
+    q = q.reshape(b, s, num_kv_heads, rep, head_dim)
+    scale = head_dim ** -0.5
+
+    block_kv = min(block_kv, s)
+    if s % block_kv:
+        block_kv = s  # fall back to one block for ragged small shapes
+    n_blocks = s // block_kv
+    kb = k.reshape(b, n_blocks, block_kv, num_kv_heads, head_dim)
+    vb = v.reshape(b, n_blocks, block_kv, num_kv_heads, head_dim)
+    posb = positions.reshape(n_blocks, block_kv) if positions.ndim == 1 else None
+    assert posb is not None, "attention_train expects positions of shape (S,)"
+    qpos = positions  # (S,)
+
+    def step(carry, inputs):
+        acc, m, l = carry  # acc:(B,KV,R,S,hd) m,l:(B,KV,R,S)
+        kblk, vblk, pblk = inputs  # (B,block,KV,hd), (B,block,KV,hd), (block,)
+        scores = _gqa_scores(q, kblk).astype(jnp.float32) * scale
+        scores = softcap(scores, logit_softcap)
+        mask = pblk[None, :] <= qpos[:, None]  # causal: key pos <= query pos
+        if window is not None:
+            mask &= pblk[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None, :, :], scores, _NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bgrst,btgh->bgrsh", p.astype(vblk.dtype), vblk)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, num_kv_heads, rep, s, head_dim), jnp.float32)
+    m0 = jnp.full((b, num_kv_heads, rep, s), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, num_kv_heads, rep, s), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step,
+        (acc0, m0, l0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), posb),
+        unroll=n_blocks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    out = out.astype(x.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, num_heads * head_dim)
+    return out @ params["wo"]
+
+
+# ---- serving: cache init / prefill / decode ---------------------------------
+
+
+def init_cache(batch: int, cache_len: int, num_kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> dict[str, Any]:
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        # Absolute position stored in each slot; -1 = empty.
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def prefill_into_cache(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int | None,
+    logit_softcap: float | None,
+    norm_eps: float,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    """Run full-sequence attention AND populate the cache (last `L` slots)."""
+    b, s, _ = x.shape
+    out = attention_train(
+        params, x, positions,
+        num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
+        rope_theta=rope_theta, window=window, logit_softcap=logit_softcap,
+        norm_eps=norm_eps, unroll=unroll,
+    )
+    _, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim,
+                           positions, rope_theta, norm_eps)
+    cache_len = cache["k"].shape[1]
+    if cache_len >= s:
+        # Left-aligned fill.
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+            "pos": jax.lax.dynamic_update_slice(
+                cache["pos"], positions.astype(jnp.int32), (0,)
+            ),
+        }
+    else:
+        # Keep only the trailing window (ring layout via slot = pos % L).
+        slots = (positions % cache_len).astype(jnp.int32)
+        keep = positions >= (s - cache_len)
+        idx = jnp.where(keep, slots, cache_len)  # park dropped writes off-end
+        new_cache = {
+            "k": cache["k"].at[:, idx].set(k, mode="drop"),
+            "v": cache["v"].at[:, idx].set(v, mode="drop"),
+            "pos": cache["pos"].at[idx].set(positions.astype(jnp.int32), mode="drop"),
+        }
+    return out, new_cache
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,
+    cur_pos: jax.Array,
+    cache: dict,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int | None,
+    logit_softcap: float | None,
+    norm_eps: float,
+) -> tuple[jax.Array, dict]:
+    """One-token decode: x (B, 1, d), cur_pos scalar int32 (position of x)."""
+    b, s, _ = x.shape
+    assert s == 1
+    positions = cur_pos[None] if cur_pos.ndim == 0 else cur_pos
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim,
+                           positions.reshape(1), rope_theta, norm_eps)
+    cache_len = cache["k"].shape[1]
+    slot = (cur_pos % cache_len).astype(jnp.int32)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0)),
+        "pos": jax.lax.dynamic_update_slice(
+            cache["pos"], cur_pos.reshape(1).astype(jnp.int32), (slot,)
+        ),
+    }
+    rep = num_heads // num_kv_heads
+    q = q.reshape(b, 1, num_kv_heads, rep, head_dim)
+    scale = head_dim ** -0.5
+    scores = jnp.einsum(
+        "bsgrh,btgh->bgrst", q, new_cache["k"]
+    ).astype(jnp.float32) * scale
+    scores = softcap(scores, logit_softcap)
+    pos_buf = new_cache["pos"]
+    mask = (pos_buf >= 0) & (pos_buf <= cur_pos)
+    if window is not None:
+        mask &= pos_buf > cur_pos - window
+    scores = jnp.where(mask[None, None, None, None, :], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgh->bsgrh", p.astype(v.dtype), new_cache["v"])
+    out = out.reshape(b, 1, num_heads * head_dim)
+    return out @ params["wo"], new_cache

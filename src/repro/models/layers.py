@@ -1,0 +1,101 @@
+"""Shared neural-net layers: norms, rope, MLPs, embeddings (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "init_rms_norm",
+    "rope",
+    "apply_rope",
+    "mlp",
+    "init_mlp",
+    "init_dense",
+    "softcap",
+    "activation_fn",
+]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def init_rms_norm(d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # nemotron-4: squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+# ---- rotary position embeddings ---------------------------------------------
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) tables for given integer positions, shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, head_dim/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]  # broadcast over heads axis
+    cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---- MLP ---------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int, gated: bool, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    params = {
+        "up": init_dense(ks[0], d, ff, dtype),
+        "down": init_dense(ks[1], ff, d, dtype),
+    }
+    if gated:
+        params["gate"] = init_dense(ks[2], d, ff, dtype)
+    return params
+
+
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    act = activation_fn(activation)
+    up = x @ params["up"]
+    if "gate" in params:
+        up = act(x @ params["gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["down"]

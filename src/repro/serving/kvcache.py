@@ -1,0 +1,45 @@
+"""Cache bookkeeping utilities for the serving engine.
+
+The per-layer cache *contents* live in ``repro.models`` (attention ring
+buffers, SSD states, RG-LRU states — see ``transformer.init_serve_cache``).
+This module adds the engine-level view: sizing, byte accounting, and
+slot-reset for continuous batching.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+
+__all__ = ["cache_bytes", "make_cache", "reset_slot"]
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               *, long_context: bool = False):
+    return tfm.init_serve_cache(cfg, batch, cache_len, long_context=long_context)
+
+
+def cache_bytes(cache) -> int:
+    return int(sum(
+        np.prod(leaf.shape) * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(cache)
+    ))
+
+
+def reset_slot(cache, slot: int):
+    """Zero one batch row (a finished request's slot) across every layer.
+
+    Position buffers are shared across the batch (synchronized decode), so
+    only the batch-indexed leaves are cleared.
+    """
+    def _reset(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] > 0:  # (G, B, ...) stacked leaves
+            # Stacked over groups: batch axis is 1.
+            if leaf.ndim >= 3:
+                return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+        return leaf
+
+    return jax.tree.map(_reset, cache)

@@ -1,0 +1,24 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample"]
+
+
+def sample(
+    key: jax.Array,
+    logits: jax.Array,  # (B, V) or (B, K, V)
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """Returns sampled token ids with the batch shape of ``logits[..., 0]``."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,9 @@
+"""Sharding rules (PartitionSpecs) for the production meshes."""
+from .specs import (  # noqa: F401
+    apply_fsdp,
+    cache_specs,
+    data_axes,
+    decode_input_specs,
+    param_specs,
+    train_batch_specs,
+)

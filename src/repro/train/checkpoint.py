@@ -1,0 +1,75 @@
+"""Checkpointing: pytree <-> .npz with a path manifest (offline, no orbax).
+
+Arrays are gathered to host (works under pjit: fully-addressable on the
+single-process CPU runtime) and stored flat, keyed by '/'-joined pytree
+paths; restore rebuilds the exact structure and dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore"]
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz cannot round-trip ml_dtypes; store exactly as float32.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return f"[{entry.idx}]"
+    return str(entry)
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    treedef = jax.tree.structure(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    restored = {}
+    for path_entries, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+        key = "/".join(_path_str(p) for p in path_entries)
+        if key not in npz:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = npz[key]
+        ref = np.asarray(leaf)
+        if arr.shape != ref.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != expected {ref.shape}")
+        restored[key] = jax.numpy.asarray(arr).astype(leaf.dtype)
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = [
+        restored["/".join(_path_str(p) for p in path)] for path, _ in leaves_like
+    ]
+    return jax.tree.unflatten(jax.tree.structure(like), ordered)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"

@@ -1,0 +1,74 @@
+"""Training loop: jit'd train_step + host loop (single-device and pjit).
+
+The sharded production variant lives in ``repro.launch.train``; this module
+is the device-count-agnostic core: loss, grads, AdamW update, metrics.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["make_train_step", "train", "TrainState"]
+
+TrainState = dict  # {"params": ..., "opt": ...}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(state: TrainState, batch: dict):
+        def loss(params):
+            return tfm.loss_fn(params, cfg, batch)
+
+        (total, parts), grads = jax.value_and_grad(loss, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        metrics = {"loss": total, **parts, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(key, cfg: ModelConfig) -> TrainState:
+    params = tfm.init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def train(
+    cfg: ModelConfig,
+    batches: Iterator[dict],
+    *,
+    steps: int,
+    opt_cfg: AdamWConfig | None = None,
+    seed: int = 0,
+    log_every: int = 10,
+    log_fn=print,
+) -> tuple[TrainState, list[dict]]:
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    state = init_state(jax.random.PRNGKey(seed), cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        state, metrics = step_fn(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            log_fn(
+                f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}"
+            )
+    return state, history

@@ -1,0 +1,150 @@
+"""Unit + property tests for the MC-VBP solver stack."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binpack import (
+    BinType,
+    Choice,
+    InfeasibleError,
+    Item,
+    Problem,
+    best_fit_decreasing,
+    first_fit_decreasing,
+    solve,
+    solve_arcflow,
+    solve_bruteforce,
+)
+
+
+def _problem(bins, items, cap=0.9):
+    return Problem(bin_types=tuple(bins), items=tuple(items), utilization_cap=cap)
+
+
+def _item(name, *reqs):
+    return Item(name, tuple(Choice(f"c{i}", tuple(r)) for i, r in enumerate(reqs)))
+
+
+class TestBasics:
+    def test_single_item_single_bin(self):
+        p = _problem([BinType("b", (10, 10), 1.0)], [_item("s", (5, 5))])
+        sol, stats = solve(p)
+        assert sol.cost == 1.0 and stats.optimal
+        sol.validate()
+
+    def test_choice_selection_prefers_cheaper_packing(self):
+        # Item fits bin A only via choice 1.
+        p = _problem(
+            [BinType("small", (4, 4), 1.0), BinType("big", (10, 10), 5.0)],
+            [_item("s", (8, 1), (3, 3))],
+        )
+        sol, _ = solve(p)
+        assert sol.cost == 1.0
+        assert sol.assignments[0].choice_index == 1
+
+    def test_utilization_cap_enforced(self):
+        # 10-capacity bin at cap 0.9 holds 9.0, not 9.5.
+        p = _problem([BinType("b", (10,), 1.0)], [_item("s", (9.5,))])
+        with pytest.raises(InfeasibleError):
+            solve(p)
+        p2 = _problem([BinType("b", (10,), 1.0)], [_item("s", (9.0,))])
+        sol, _ = solve(p2)
+        assert sol.cost == 1.0
+
+    def test_infeasible_raises_everywhere(self):
+        p = _problem([BinType("b", (1, 1), 1.0)], [_item("s", (2, 2))])
+        for solver in (solve, solve_arcflow, first_fit_decreasing,
+                       best_fit_decreasing, solve_bruteforce):
+            with pytest.raises(InfeasibleError):
+                solver(p)
+
+    def test_multiple_identical_items_pack_together(self):
+        p = _problem([BinType("b", (10,), 1.0)],
+                     [_item(f"s{i}", (3.0,)) for i in range(6)])
+        sol, _ = solve(p)  # 3 per bin at cap 0.9 -> 2 bins
+        assert sol.cost == 2.0
+
+    def test_dominated_bin_type_never_needed(self):
+        p = _problem(
+            [BinType("bad", (5, 5), 2.0), BinType("good", (5, 5), 1.0)],
+            [_item("s", (4, 4))],
+        )
+        sol, _ = solve(p)
+        assert sol.bins[0].bin_type.name == "good"
+
+
+# -- randomized cross-validation -------------------------------------------------
+
+_dims = st.integers(2, 3)
+
+
+@st.composite
+def tiny_instances(draw):
+    dim = draw(_dims)
+    n_bins = draw(st.integers(1, 3))
+    n_items = draw(st.integers(1, 5))
+    bins = []
+    for i in range(n_bins):
+        cap = tuple(draw(st.integers(4, 12)) for _ in range(dim))
+        cost = draw(st.integers(1, 10)) / 2.0
+        bins.append(BinType(f"b{i}", cap, cost))
+    items = []
+    for j in range(n_items):
+        n_choices = draw(st.integers(1, 2))
+        choices = tuple(
+            Choice(f"c{k}", tuple(draw(st.integers(0, 6)) for _ in range(dim)))
+            for k in range(n_choices)
+        )
+        items.append(Item(f"s{j}", choices))
+    return Problem(bin_types=tuple(bins), items=tuple(items),
+                   utilization_cap=draw(st.sampled_from([0.9, 1.0])))
+
+
+@settings(max_examples=60, deadline=None)
+@given(tiny_instances())
+def test_exact_matches_bruteforce(problem):
+    try:
+        ref = solve_bruteforce(problem)
+    except InfeasibleError:
+        for solver in (solve, solve_arcflow):
+            with pytest.raises(InfeasibleError):
+                solver(problem)
+        return
+    sol_bc, stats = solve(problem)
+    sol_af, _ = solve_arcflow(problem)
+    assert stats.optimal
+    assert abs(sol_bc.cost - ref.cost) < 1e-9, (sol_bc.cost, ref.cost)
+    assert abs(sol_af.cost - ref.cost) < 1e-9, (sol_af.cost, ref.cost)
+    sol_bc.validate()
+    sol_af.validate()
+
+
+@settings(max_examples=40, deadline=None)
+@given(tiny_instances())
+def test_heuristics_feasible_and_bounded(problem):
+    try:
+        exact, _ = solve(problem)
+    except InfeasibleError:
+        return
+    for heur in (first_fit_decreasing, best_fit_decreasing):
+        sol = heur(problem)
+        sol.validate()
+        assert sol.cost >= exact.cost - 1e-9
+
+
+def test_medium_fleet_exact_beats_or_matches_ffd():
+    rng = np.random.RandomState(7)
+    bins = [
+        BinType("cpu", (8, 15, 0, 0), 0.419),
+        BinType("gpu", (8, 15, 1536, 4), 0.650),
+    ]
+    items = []
+    for i in range(14):
+        cpu = (rng.uniform(1, 5), rng.uniform(0.2, 1.0), 0.0, 0.0)
+        gpu = (cpu[0] * 0.15, cpu[1], rng.uniform(30, 200), rng.uniform(0.1, 0.5))
+        items.append(_item(f"s{i}", cpu, gpu))
+    p = _problem(bins, items)
+    sol, stats = solve(p)
+    ffd = first_fit_decreasing(p)
+    assert sol.cost <= ffd.cost + 1e-9
+    sol.validate()

@@ -1,0 +1,63 @@
+"""Catalog + cache bookkeeping unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.catalog import (
+    expand_multi_accelerator,
+    paper_ec2_catalog,
+    tpu_cloud_catalog,
+)
+from repro.serving.kvcache import cache_bytes, make_cache, reset_slot
+
+
+class TestCatalog:
+    def test_paper_catalog_table1(self):
+        cat = {b.name: b for b in paper_ec2_catalog()}
+        assert cat["c4.2xlarge"].capacity == (8, 15, 0, 0)
+        assert cat["c4.2xlarge"].cost == 0.419
+        assert cat["g2.2xlarge"].capacity == (8, 15, 1536, 4)
+        assert cat["g2.2xlarge"].cost == 0.650
+
+    def test_expand_multi_accelerator_layout(self):
+        base = paper_ec2_catalog()[2]  # g2.2xlarge
+        wide = expand_multi_accelerator(base, n_accelerators=4)
+        assert wide.dim == 10
+        assert wide.capacity[2:4] == (1536, 4)  # GPU in slot 0
+        assert wide.capacity[4:] == (0,) * 6  # slots 1-3 empty
+
+    def test_tpu_catalog_scaling(self):
+        cat = {b.name: b for b in tpu_cloud_catalog()}
+        assert cat["v5e-4"].capacity[2] == pytest.approx(4 * 197.0)
+        assert cat["v5e-8"].capacity[3] == pytest.approx(8 * 16.0)
+        # bigger slices cost more but not more per chip
+        per_chip_1 = cat["v5e-1"].cost / 1
+        per_chip_8 = cat["v5e-8"].cost / 8
+        assert per_chip_8 <= per_chip_1
+
+
+class TestCacheBookkeeping:
+    def test_cache_bytes_counts_everything(self):
+        cfg = smoke_variant(get_config("internlm2-1.8b"))
+        cache = make_cache(cfg, batch=2, cache_len=32)
+        expected_kv = (cfg.num_groups * 2 * 32 * cfg.num_kv_heads
+                       * cfg.resolved_head_dim * 2)  # k bf16
+        total = cache_bytes(cache)
+        assert total >= expected_kv * 2  # k + v at least
+
+    def test_long_context_cache_smaller(self):
+        cfg = smoke_variant(get_config("yi-34b"))  # long_context_window=16
+        full = cache_bytes(make_cache(cfg, 1, 128))
+        clamped = cache_bytes(make_cache(cfg, 1, 128, long_context=True))
+        assert clamped < full / 4
+
+    def test_reset_slot_zeroes_one_row(self):
+        cfg = smoke_variant(get_config("internlm2-1.8b"))
+        cache = make_cache(cfg, batch=2, cache_len=8)
+        dirty = jax.tree.map(lambda a: a + 1 if a.ndim >= 3 else a, cache)
+        cleaned = reset_slot(dirty, slot=0)
+        k = cleaned[0]["k"]
+        assert float(jnp.abs(k[:, 0]).max()) == 0.0
+        assert float(jnp.abs(k[:, 1]).max()) > 0.0

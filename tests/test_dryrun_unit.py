@@ -1,0 +1,73 @@
+"""Dry-run machinery unit tests (small mesh, subprocess) + artifact sanity."""
+import glob
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    sys.path.insert(0, "src")
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config, smoke_variant
+    from repro.launch import steps as steps_lib
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = smoke_variant(get_config("internlm2-1.8b"))
+    with mesh:
+        jitted, (st, ab), _ = steps_lib.make_train_setup(
+            cfg, mesh, multi_pod=False, batch=8, seq_len=64, analysis=True,
+            microbatches=2)
+        lowered = jitted.lower(st, ab)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        # decode too
+        jd, (ps, tk, po, cs), _ = steps_lib.make_decode_setup(
+            cfg, mesh, multi_pod=False, batch=8, cache_len=64,
+            long_context=False)
+        cd = jd.lower(ps, tk, po, cs).compile()
+    print(json.dumps({
+        "flops": cost.get("flops", 0.0),
+        "temp": getattr(mem, "temp_size_in_bytes", None),
+        "decode_ok": True,
+    }))
+""")
+
+
+def test_small_mesh_lower_compile_roundtrip():
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT],
+                          capture_output=True, text=True, cwd=ROOT,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["flops"] > 0
+    assert out["decode_ok"]
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART, "*__16x16.json")),
+                    reason="no dry-run artifacts present")
+def test_artifact_schema_and_sanity():
+    """Every artifact has the roofline fields with sane values."""
+    for path in glob.glob(os.path.join(ART, "*__16x16.json")):
+        r = json.load(open(path))
+        assert r["n_chips"] == 256, path
+        t = r["roofline"]
+        for key in ("compute_s", "memory_s", "collective_s", "dominant"):
+            assert key in t, path
+        assert t["compute_s"] >= 0 and t["memory_s"] > 0
+        assert r["hlo_flops"] > 0, path
+        assert r["params"] > 1e8, path
+        # decode steps must be cheaper than train/prefill per-invocation
+        if r["kind"] == "decode":
+            assert t["compute_s"] < 60.0, path

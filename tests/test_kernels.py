@@ -1,0 +1,149 @@
+"""Pallas kernel sweeps: shapes x dtypes, allclose vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kv,d,window,softcap",
+    [
+        (2, 256, 4, 2, 64, None, None),
+        (1, 128, 8, 1, 128, None, 50.0),
+        (2, 256, 4, 4, 64, 64, None),
+        (1, 512, 2, 2, 64, 128, 30.0),
+    ],
+)
+def test_flash_attention(b, s, h, kv, d, window, softcap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    out = ops.flash_attention(q, k, v, window=window, logit_softcap=softcap)
+    expected = ref.attention_ref(q, k, v, window=window, logit_softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,kvh,rep,d,L,cur,window",
+    [
+        (2, 2, 4, 64, 1024, 700, None),
+        (1, 1, 8, 128, 2048, 2047, 512),
+        (3, 4, 1, 64, 512, 100, None),
+        (1, 2, 2, 64, 512, 511, 128),
+    ],
+)
+def test_decode_attention(b, kvh, rep, d, L, cur, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, kvh, rep, d), dtype)
+    k = jax.random.normal(ks[1], (b, L, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, L, kvh, d), dtype)
+    pos = jnp.where(jnp.arange(L) <= cur, jnp.arange(L), -1).astype(jnp.int32)
+    cp = jnp.asarray(cur, jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, cp, window=window)
+    expected = ref.decode_attention_ref(q, k, v, pos, cp, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [(2, 256, 4, 64, 32, 64), (1, 128, 2, 32, 128, 128), (1, 256, 2, 64, 64, 32)],
+)
+def test_ssd_scan(b, s, h, p, n, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    h0 = jax.random.normal(ks[5], (b, h, p, n)) * 0.1
+    y, hf = ops.ssd_scan(x, dt, A, Bm, Cm, h0, chunk=chunk)
+    yr, hr = ref.ssd_ref(x, dt, A, Bm, Cm, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_kernel_matches_xla_chunked_path():
+    """Kernel vs the model's XLA-level chunked implementation."""
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(KEY, 5)
+    b, s, h, p, n = 2, 128, 4, 32, 64
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    y1, h1 = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32)
+    y2, h2 = ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,w,bt,bw", [(2, 256, 512, 64, 128), (1, 64, 128, 64, 128)])
+def test_rglru_scan(b, s, w, bt, bw):
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w)))
+    bb = jax.random.normal(ks[1], (b, s, w)) * 0.3
+    h0 = jax.random.normal(ks[2], (b, w)) * 0.1
+    h = ops.rglru_scan(a, bb, h0, block_t=bt, block_w=bw)
+    hr = ref.rglru_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_kernel_matches_associative_scan():
+    from repro.models.rglru import rglru_scan as assoc
+
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 128, 256)))
+    bb = jax.random.normal(ks[1], (2, 128, 256)) * 0.3
+    h0 = jax.random.normal(ks[2], (2, 256)) * 0.1
+    h1 = ops.rglru_scan(a, bb, h0, block_t=64, block_w=128)
+    h2 = assoc(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,e,f,bt", [(512, 64, 4, 128, 128), (256, 128, 8, 256, 64)])
+def test_grouped_gemm(t, d, e, f, bt, dtype):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    w = jax.random.normal(ks[1], (e, d, f), dtype) * 0.1
+    eids = jax.random.randint(ks[2], (t,), 0, e)
+    xs, bmap, inv = ops.pad_and_sort_tokens(x, eids, e, block_t=bt)
+    out = ops.grouped_gemm(xs, w, bmap, block_t=bt, block_f=min(128, f))
+    restored = out[inv]
+    direct = jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                        w[eids].astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(restored, np.float32), np.asarray(direct), **_tol(dtype)
+    )
+
+
+def test_grouped_gemm_empty_expert():
+    """Experts with zero tokens must not corrupt neighbors."""
+    t, d, e, f, bt = 128, 32, 4, 64, 64
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32)
+    w = jax.random.normal(ks[1], (e, d, f)) * 0.1
+    eids = jnp.zeros((t,), jnp.int32).at[64:].set(3)  # experts 1, 2 empty
+    xs, bmap, inv = ops.pad_and_sort_tokens(x, eids, e, block_t=bt)
+    out = ops.grouped_gemm(xs, w, bmap, block_t=bt, block_f=64)[inv]
+    direct = jnp.einsum("td,tdf->tf", x, w[eids])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               atol=1e-5, rtol=1e-5)

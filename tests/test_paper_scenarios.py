@@ -1,0 +1,138 @@
+"""Validation against the paper's own published numbers (Tables 2-6, Fig 5-6)."""
+import numpy as np
+import pytest
+
+from repro.core.binpack import BinType, InfeasibleError
+from repro.core.manager import ResourceManager
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_plan
+from repro.core.strategies import ST1, ST2, ST3
+from repro.core.streams import AnalysisProgram, StreamSpec
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+
+#: Paper §4.1: scenario experiments price c4.2xlarge / g2.2xlarge only.
+CATALOG = (
+    BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+    BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
+)
+
+SCENARIOS = {
+    1: [StreamSpec("v1", VGG, 0.25)] + [StreamSpec(f"z{i}", ZF, 0.55) for i in range(3)],
+    2: [StreamSpec("v1", VGG, 0.20), StreamSpec("z1", ZF, 0.50)],
+    3: [StreamSpec(f"v{i}", VGG, 0.20) for i in range(2)]
+       + [StreamSpec(f"z{i}", ZF, 8.0) for i in range(10)],
+}
+
+#: Paper Table 6 (scenario, strategy) -> (hourly cost, {type: count}).
+TABLE6 = {
+    (1, "ST1"): (1.676, {"c4.2xlarge": 4}),
+    (1, "ST2"): (0.650, {"g2.2xlarge": 1}),
+    (1, "ST3"): (0.650, {"g2.2xlarge": 1}),
+    (2, "ST1"): (0.419, {"c4.2xlarge": 1}),
+    (2, "ST2"): (0.650, {"g2.2xlarge": 1}),
+    (2, "ST3"): (0.419, {"c4.2xlarge": 1}),
+    (3, "ST1"): None,  # Fail
+    (3, "ST2"): (7.150, {"g2.2xlarge": 11}),
+    (3, "ST3"): (6.919, {"g2.2xlarge": 10, "c4.2xlarge": 1}),
+}
+
+
+@pytest.fixture(scope="module")
+def manager():
+    return ResourceManager(CATALOG, paper_profile_table())
+
+
+@pytest.mark.parametrize("scenario,strategy", sorted(TABLE6))
+def test_table6_reproduction(manager, scenario, strategy):
+    strat = {"ST1": ST1, "ST2": ST2, "ST3": ST3}[strategy]
+    expected = TABLE6[(scenario, strategy)]
+    if expected is None:
+        with pytest.raises(InfeasibleError):
+            manager.allocate(SCENARIOS[scenario], strat)
+        return
+    cost, counts = expected
+    plan = manager.allocate(SCENARIOS[scenario], strat)
+    assert plan.optimal
+    assert plan.hourly_cost == pytest.approx(cost, abs=1e-3)
+    assert plan.instance_counts() == counts
+
+
+def test_headline_savings(manager):
+    """Paper abstract: 'reduce up to 61% of the cost'."""
+    s1 = {s.name: manager.allocate(SCENARIOS[1], s) for s in (ST1, ST3)}
+    savings = 1 - s1["ST3"].hourly_cost / s1["ST1"].hourly_cost
+    assert savings == pytest.approx(0.61, abs=0.005)
+
+    s2_st2 = manager.allocate(SCENARIOS[2], ST2)
+    s2_st3 = manager.allocate(SCENARIOS[2], ST3)
+    assert 1 - s2_st3.hourly_cost / s2_st2.hourly_cost == pytest.approx(0.36, abs=0.01)
+
+    s3_st2 = manager.allocate(SCENARIOS[3], ST2)
+    s3_st3 = manager.allocate(SCENARIOS[3], ST3)
+    assert 1 - s3_st3.hourly_cost / s3_st2.hourly_cost == pytest.approx(0.03, abs=0.005)
+
+
+def test_st3_never_worse(manager):
+    """Paper §4.4: ST3 'always has the lowest cost'."""
+    for sid, streams in SCENARIOS.items():
+        st3 = manager.allocate(streams, ST3).hourly_cost
+        for strat in (ST1, ST2):
+            try:
+                other = manager.allocate(streams, strat).hourly_cost
+            except InfeasibleError:
+                continue
+            assert st3 <= other + 1e-9, (sid, strat.name)
+
+
+def test_table2_speedups():
+    """GPU speedup 12.89x (VGG) / 16.34x (ZF) from the profile table."""
+    table = paper_profile_table()
+    for prog, speedup in (("vgg16", 12.89), ("zf", 16.34)):
+        cpu = table.get(prog, "640x480", "cpu")
+        gpu = table.get(prog, "640x480", "accel")
+        assert gpu.max_fps / cpu.max_fps == pytest.approx(speedup, abs=0.01)
+
+
+def test_fig5_linearity():
+    """CPU/GPU requirements scale linearly with frame rate (paper Fig. 5)."""
+    prof = paper_profile_table().get("vgg16", "640x480", "accel")
+    r1 = prof.at_fps(1.0)
+    r2 = prof.at_fps(2.0)
+    assert r2[0] == pytest.approx(2 * r1[0])  # CPU compute scales
+    assert r2[2] == pytest.approx(2 * r1[2])  # GPU compute scales
+    assert r2[1] == pytest.approx(r1[1])  # memory does not
+    assert r2[3] == pytest.approx(r1[3])  # GPU memory does not
+
+
+def test_fig6_stream_scaling_and_overload():
+    """Utilization grows ~linearly with streams; performance drops past 90%."""
+    table = paper_profile_table()
+    mgr = ResourceManager(CATALOG, table)
+    plans = {}
+    for n in (1, 2, 4):
+        streams = [StreamSpec(f"v{i}", VGG, 0.5) for i in range(n)]
+        plan = mgr.allocate(streams, ST2)
+        sim = simulate_plan(plan, table)
+        plans[n] = sim
+        assert sim["overall_performance"] >= 0.9  # manager keeps its target
+    # Manually overload one instance: 2x the streams one GPU box can hold.
+    from repro.core.simulator import simulate_instance
+
+    prof = table.get("vgg16", "640x480", "accel")
+    reqs = [prof.at_fps(3.0) for _ in range(10)]  # 10 x 3fps >> capacity
+    info = simulate_instance(CATALOG[1], reqs)
+    assert info.performance < 0.9
+
+
+def test_multi_gpu_dimension_expansion():
+    """Paper §3.2: dimension 2 + 2N with N GPUs per instance."""
+    from repro.core.catalog import expand_multi_accelerator, paper_ec2_catalog
+
+    cat = paper_ec2_catalog(include_multi_gpu=True)
+    g28 = next(b for b in cat if b.name == "g2.8xlarge")
+    assert g28.dim == 2 + 2 * 4
+    c4 = next(b for b in cat if b.name == "c4.2xlarge")
+    assert c4.dim == 2 + 2 * 4
+    assert all(c == 0 for c in c4.capacity[2:])

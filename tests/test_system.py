@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests: manager plan -> engines actually serving."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.catalog import tpu_cloud_catalog
+from repro.core.manager import ResourceManager
+from repro.core.profiler import ProfileTable, ResourceProfile, TPU_V5E
+from repro.core.simulator import simulate_plan
+from repro.core.streams import AnalysisProgram, FrameSize, StreamSpec
+from repro.models import transformer as tfm
+from repro.roofline.analysis import model_flops
+from repro.serving import Request, ServingEngine
+
+
+def _profiles(archs):
+    table = ProfileTable()
+    for arch in archs:
+        cfg = get_config(arch)
+        flops_tok = model_flops(cfg, 1) * 1.15
+        mem_gb = cfg.param_count() * 2 / 1e9 + 2.0
+        cores = flops_tok / 75e9
+        table.add(ResourceProfile(arch, "0x0", "cpu", 1.0,
+                                  (cores, mem_gb, 0, 0), max_fps=16.0 / cores))
+        occ = TPU_V5E.occupancy_per_frame(flops_tok, cfg.param_count() * 2)
+        table.add(ResourceProfile(arch, "0x0", "accel", 1.0,
+                                  (cores * 0.05, mem_gb * 0.25, occ * 197.0,
+                                   mem_gb), max_fps=1.0 / occ))
+    return table
+
+
+def test_plan_to_serving_roundtrip():
+    """The full paper loop: profile -> pack -> boot engines -> serve."""
+    archs = ("internlm2-1.8b",)
+    table = _profiles(archs)
+    mgr = ResourceManager(tpu_cloud_catalog(), table)
+    streams = [
+        StreamSpec(f"cam{i}", AnalysisProgram("p", archs[0]), 20.0,
+                   FrameSize(0, 0))
+        for i in range(3)
+    ]
+    plan = mgr.allocate(streams)
+    assert plan.optimal
+    assert len(plan.placements) == 3
+    sim = simulate_plan(plan, table)
+    assert sim["meets_target"]  # the manager's 90% guarantee holds
+
+    # Boot an engine for the first instance and serve.
+    cfg = smoke_variant(get_config(archs[0]))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, batch_slots=2, max_seq=48)
+    for i in range(3):
+        engine.submit(Request(rid=i, prompt=np.arange(5) % cfg.vocab_size,
+                              max_new_tokens=4))
+    results = engine.run()
+    assert len(results) == 3
+    assert all(len(r.tokens) == 4 for r in results)
+
+
+def test_high_rate_forces_accelerator():
+    """A rate beyond any CPU's max_fps must select the accel choice."""
+    archs = ("internlm2-1.8b",)
+    table = _profiles(archs)
+    cpu_prof = table.get(archs[0], "0x0", "cpu")
+    accel_prof = table.get(archs[0], "0x0", "accel")
+    too_fast = min(cpu_prof.max_fps * 2, accel_prof.max_fps * 0.8)
+    assert too_fast > cpu_prof.max_fps
+    mgr = ResourceManager(tpu_cloud_catalog(), table)
+    plan = mgr.allocate([
+        StreamSpec("hot", AnalysisProgram("p", archs[0]), too_fast,
+                   FrameSize(0, 0))
+    ])
+    assert plan.placements[0].device == "accel"
+    assert plan.placements[0].instance_type.startswith("v5e")
+
+
+def test_utilization_cap_respected_in_plan():
+    archs = ("internlm2-1.8b",)
+    table = _profiles(archs)
+    mgr = ResourceManager(tpu_cloud_catalog(), table, utilization_cap=0.9)
+    streams = [
+        StreamSpec(f"s{i}", AnalysisProgram("p", archs[0]), 10.0,
+                   FrameSize(0, 0))
+        for i in range(6)
+    ]
+    plan = mgr.allocate(streams)
+    for bin_ in plan.solution.bins:
+        for used, cap in zip(bin_.load, bin_.bin_type.capacity):
+            if cap > 0:
+                assert used <= cap * 0.9 + 1e-9
+
+
+def test_solver_backends_agree_via_manager():
+    archs = ("internlm2-1.8b", "gemma2-2b")
+    table = _profiles(archs)
+    streams = [
+        StreamSpec(f"s{i}", AnalysisProgram("p", archs[i % 2]), 8.0 + i,
+                   FrameSize(0, 0))
+        for i in range(5)
+    ]
+    costs = {}
+    for solver in ("auto", "bincompletion", "arcflow"):
+        mgr = ResourceManager(tpu_cloud_catalog(), table, solver=solver)
+        costs[solver] = mgr.allocate(streams).hourly_cost
+    assert costs["auto"] == pytest.approx(costs["bincompletion"])
+    assert costs["auto"] == pytest.approx(costs["arcflow"])
