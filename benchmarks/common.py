@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -11,6 +13,23 @@ ROWS: list[tuple[str, float, str]] = []
 def record(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str, prefix: str = "", meta: dict | None = None) -> str:
+    """Dump recorded rows (optionally filtered by name prefix) as JSON.
+
+    The artifact is the stable interface for `scripts/perf_diff.py`:
+    {"meta": {...}, "rows": {name: {"us": float, "derived": str}}}.
+    """
+    rows = {
+        name: {"us": us, "derived": derived}
+        for name, us, derived in ROWS
+        if name.startswith(prefix)
+    }
+    payload = {"meta": meta or {}, "rows": rows}
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return str(p)
 
 
 def time_us(fn, *, iters: int = 3, warmup: int = 1) -> float:

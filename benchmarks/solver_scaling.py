@@ -3,6 +3,15 @@
 Random heterogeneous fleets of growing size; reports solve time and cost
 gap of FFD vs the exact optimum (quantifying what the paper's exact
 formulation buys over a greedy allocator).
+
+Post-vectorization this sweep covers what the seed implementation could
+not: n=200 exact (budgeted) bin-completion solves, and n=500 arc-flow
+fleets over multi-kind (5–10 stream class) catalogs, where the solver
+reports its LP lower bound so budgeted runs carry a certified optimality
+gap.  `SEED_BASELINE_US` pins the seed (pre-vectorization) timings
+measured on the same scenarios, so the emitted speedup column tracks the
+refactor's win; `BENCH_solver.json` (via `common.write_json`) is the
+artifact `scripts/perf_diff.py solver` diffs against future PRs.
 """
 from __future__ import annotations
 
@@ -13,13 +22,33 @@ from repro.core.binpack import (
     first_fit_decreasing, solve, solve_arcflow,
 )
 
-from .common import record, time_us
+from .common import record, time_us, write_json
+
+
+def _timed(fn):
+    """One measured call (the big solves are too slow to run thrice)."""
+    import time
+
+    t0 = time.perf_counter()
+    result = fn()
+    return (time.perf_counter() - t0) * 1e6, result
 
 CATALOG = (
     BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
     BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),
     BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
 )
+
+#: Seed-implementation wall times (µs) on this module's scenarios, recorded
+#: before the ProblemTensors vectorization (same machine class, max_nodes =
+#: 60k).  The benchmark reports current time / seed time per row.
+SEED_BASELINE_US = {
+    "solver/n8/exact": 5_900.0,
+    "solver/n12/exact": 72_800.0,
+    "solver/n16/exact": 477_700.0,
+    "solver/n16/arcflow": 51_600.0,
+    "solver/n16/ffd": 2_470.0,
+}
 
 
 def _fleet(n: int, seed: int, n_kinds: int = 3):
@@ -41,6 +70,11 @@ def _fleet(n: int, seed: int, n_kinds: int = 3):
     return Problem(bin_types=CATALOG, items=tuple(items))
 
 
+def _speedup(name: str, us: float) -> str:
+    base = SEED_BASELINE_US.get(name)
+    return f" speedup_vs_seed={base / us:.1f}x" if base and us > 0 else ""
+
+
 def run() -> dict:
     out = {}
     for n in (4, 8, 12, 16):
@@ -54,27 +88,82 @@ def run() -> dict:
         gap = (ffd.cost - sol.cost) / sol.cost if sol.cost else 0.0
         record(
             f"solver/n{n}/exact", t_exact,
-            f"cost=${sol.cost:.3f} nodes={stats.nodes} optimal={stats.optimal}",
+            f"cost=${sol.cost:.3f} nodes={stats.nodes} optimal={stats.optimal}"
+            + _speedup(f"solver/n{n}/exact", t_exact),
         )
         record(
             f"solver/n{n}/arcflow", t_af,
             f"cost=${af.cost:.3f} patterns={af_stats.n_patterns} "
-            f"classes={af_stats.n_classes} agree={abs(af.cost-sol.cost)<1e-6}",
+            f"classes={af_stats.n_classes} agree={abs(af.cost-sol.cost)<1e-6}"
+            + _speedup(f"solver/n{n}/arcflow", t_af),
         )
         record(f"solver/n{n}/ffd", t_ffd,
-               f"cost=${ffd.cost:.3f} gap_vs_exact={gap:.1%}")
+               f"cost=${ffd.cost:.3f} gap_vs_exact={gap:.1%}"
+               + _speedup(f"solver/n{n}/ffd", t_ffd))
         out[n] = {"exact": sol.cost, "ffd": ffd.cost, "arcflow": af.cost}
-    # Large fleets: arc-flow DP only (exact; identical-stream grouping keeps
+
+    # Mid-size fleets: arc-flow DP (exact; identical-stream grouping keeps
     # the demand lattice small — this is why the paper's VPSolver scales).
     for n in (24, 48, 96):
         p = _fleet(n, seed=n)
-        t_af = time_us(lambda: solve_arcflow(p), iters=1)
-        af, af_stats = solve_arcflow(p)
+        t_af, (af, af_stats) = _timed(lambda: solve_arcflow(p))
         ffd = first_fit_decreasing(p)
         record(
             f"solver/n{n}/arcflow_only", t_af,
             f"cost=${af.cost:.3f} ffd=${ffd.cost:.3f} "
-            f"gain_vs_ffd={(ffd.cost - af.cost) / ffd.cost:.0%}",
+            f"gain_vs_ffd={(ffd.cost - af.cost) / ffd.cost:.0%} "
+            f"optimal={af_stats.optimal}",
         )
         out[n] = {"arcflow": af.cost, "ffd": ffd.cost}
+
+    # Large-fleet frontier (seed implementation topped out at n=96 / 16):
+    # n=200 exact (budgeted B&B returns the incumbent), n=200/n=500
+    # multi-kind arc-flow (which certifies its gap against the covering-LP
+    # lower bound when the state budget is hit), and a 10-class n=500
+    # catalog on the budgeted B&B + heuristics.
+    p200 = _fleet(200, seed=200, n_kinds=5)
+    t_exact, (sol, stats) = _timed(lambda: solve(p200, max_nodes=20_000))
+    record(
+        "solver/n200k5/exact", t_exact,
+        f"cost=${sol.cost:.3f} nodes={stats.nodes} optimal={stats.optimal}",
+    )
+    out["200exact"] = {"exact": sol.cost}
+    for n, kinds, budget in ((200, 5, 40_000), (500, 5, 40_000)):
+        p = _fleet(n, seed=n, n_kinds=kinds)
+        t_af, (af, af_stats) = _timed(
+            lambda: solve_arcflow(p, max_dp_states=budget)
+        )
+        af.validate()
+        ffd = first_fit_decreasing(p)
+        gap = (
+            (af.cost - af_stats.lp_bound) / af_stats.lp_bound
+            if af_stats.lp_bound > 0
+            else 0.0
+        )
+        record(
+            f"solver/n{n}k{kinds}/arcflow", t_af,
+            f"cost=${af.cost:.3f} ffd=${ffd.cost:.3f} lp_bound=${af_stats.lp_bound:.3f} "
+            f"gap<={gap:.2%} states={af_stats.dp_states} optimal={af_stats.optimal}",
+        )
+        out[f"{n}k{kinds}"] = {"arcflow": af.cost, "ffd": ffd.cost,
+                               "lp_bound": af_stats.lp_bound}
+    p10 = _fleet(500, seed=500, n_kinds=10)
+    t_ffd, ffd10 = _timed(lambda: first_fit_decreasing(p10))
+    t_bc, (bc10, bc_stats) = _timed(lambda: solve(p10, max_nodes=5_000))
+    record(
+        "solver/n500k10/ffd", t_ffd,
+        f"cost=${ffd10.cost:.3f} bins={len(ffd10.bins)}",
+    )
+    record(
+        "solver/n500k10/exact_budget", t_bc,
+        f"cost=${bc10.cost:.3f} nodes={bc_stats.nodes} optimal={bc_stats.optimal} "
+        f"gain_vs_ffd={(ffd10.cost - bc10.cost) / ffd10.cost:.0%}",
+    )
+    out["500k10"] = {"ffd": ffd10.cost, "exact_budget": bc10.cost}
+
+    write_json(
+        "BENCH_solver.json",
+        prefix="solver/",
+        meta={"seed_baseline_us": SEED_BASELINE_US},
+    )
     return out

@@ -1,14 +1,38 @@
-"""Diff two dry-run artifacts (before/after a perf change).
+"""Diff two perf artifacts (before/after a perf change).
 
-Usage: python scripts/perf_diff.py before.json after.json
+Usage:
+  python scripts/perf_diff.py before.json after.json
+
+Handles two artifact shapes:
+  * dry-run artifacts (launch/dryrun.py output): roofline + collective
+    metric comparison, as before;
+  * benchmark row artifacts ({"meta": ..., "rows": {name: {"us": ...}}}),
+    e.g. BENCH_solver.json emitted by benchmarks/solver_scaling.py —
+    rows are matched by name and wall-time deltas reported, so solver PRs
+    can diff their timings against the recorded baseline.
 """
 import json
 import sys
 
 
-def main() -> None:
-    a = json.load(open(sys.argv[1]))
-    b = json.load(open(sys.argv[2]))
+def diff_rows(a: dict, b: dict) -> None:
+    rows_a, rows_b = a["rows"], b["rows"]
+    names = sorted(set(rows_a) | set(rows_b))
+    print(f"{'row':34s} {'before us':>12s} {'after us':>12s} {'delta':>8s}")
+    for name in names:
+        x = rows_a.get(name, {}).get("us")
+        y = rows_b.get(name, {}).get("us")
+        if x is None or y is None:
+            status = "added" if x is None else "removed"
+            x_s = f"{x:12.1f}" if x is not None else f"{'-':>12s}"
+            y_s = f"{y:12.1f}" if y is not None else f"{'-':>12s}"
+            print(f"{name:34s} {x_s} {y_s} {status:>8s}")
+            continue
+        delta = (y - x) / x if x else float("nan")
+        print(f"{name:34s} {x:12.1f} {y:12.1f} {delta:+8.1%}")
+
+
+def diff_dryrun(a: dict, b: dict) -> None:
     print(f"{'metric':28s} {'before':>14s} {'after':>14s} {'delta':>8s}")
     rows = [
         ("flops/dev", a["hlo_flops_per_device"], b["hlo_flops_per_device"]),
@@ -35,6 +59,20 @@ def main() -> None:
             d = (y - x) / x if x else float("nan")
             print(f"  {op:26s} {x:14.4g} {y:14.4g} {d:+8.1%}")
     print(f"dominant: {a['roofline']['dominant']} -> {b['roofline']['dominant']}")
+
+
+def main() -> None:
+    a = json.load(open(sys.argv[1]))
+    b = json.load(open(sys.argv[2]))
+    if "rows" in a and "rows" in b:
+        diff_rows(a, b)
+    elif "rows" in a or "rows" in b:
+        sys.exit(
+            "artifact shape mismatch: one file is a benchmark-row artifact "
+            "and the other a dry-run artifact — diff like with like"
+        )
+    else:
+        diff_dryrun(a, b)
 
 
 if __name__ == "__main__":

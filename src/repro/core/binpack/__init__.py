@@ -1,4 +1,29 @@
-"""Multiple-choice vector bin packing (the paper's core formulation)."""
+"""Multiple-choice vector bin packing (the paper's core formulation).
+
+## The `ProblemTensors` architecture
+
+Every solver in this package runs on one shared, precomputed dense view of
+the `Problem`, built lazily by `Problem.tensors()` and cached on the
+(frozen) instance:
+
+* `req` — a padded `(n_items, max_choices, dim)` float64 requirement
+  tensor; padded choice slots hold `+inf` so they fail every fit test
+  without masking;
+* `min_req` / `req_sum` — per-item cheapest-per-dim demand and per-choice
+  totals, feeding the solvers' lower bounds and tie-break keys;
+* `caps` / `costs` — the effective (utilization-capped) capacity matrix
+  and cost vector over bin types;
+* `frac` / `fits_alone` / `cheapest_host` — per (item, choice, bin type)
+  utilization fractions, single-item fit booleans, and the memoized
+  cheapest cost of hosting an item alone.
+
+Consumers: `heuristics` (vectorized FFD/BFD — batched sort keys, one
+`(bins, choices, dim)` broadcast fit test per item), `bincompletion`
+(exact branch-and-bound with incremental suffix-demand bounds),
+`arcflow` (pattern DP with covering-LP dual bounds), and the manager's
+strategy sweep, which derives restricted tensors for ST1/ST2 via
+`ProblemTensors.restrict` instead of rebuilding from the object model.
+"""
 from .problem import (
     Assignment,
     BinType,
@@ -7,6 +32,7 @@ from .problem import (
     Item,
     OpenBin,
     Problem,
+    ProblemTensors,
     Solution,
     build_solution,
 )
@@ -23,6 +49,7 @@ __all__ = [
     "Item",
     "OpenBin",
     "Problem",
+    "ProblemTensors",
     "Solution",
     "build_solution",
     "best_fit_decreasing",

@@ -16,6 +16,19 @@ signature, which collapses the permutation symmetry of identical bins) or
 an admissible lower bound combining a per-dimension cost-density relaxation
 with a cheapest-forced-new-bin bound.
 
+Per-node cost is kept O(dim) + one small vectorized fit test by maintaining
+everything incrementally on the shared `ProblemTensors` cache:
+
+* suffix demand sums over the FFD order are precomputed once, so the
+  density bound reads one row instead of re-stacking the remaining items;
+* the total open residual is a running vector updated on place/unplace;
+* the best capacity-per-dollar densities are constants hoisted out of the
+  node loop entirely;
+* the forced-new-bin bound is only evaluated when the density bound alone
+  fails to prune, uses the memoized per-item cheapest hosting cost, and
+  tests all remaining items against all open bins in one broadcast;
+* the open-bin fit test is one `(bins, choices)` comparison per node.
+
 Optimality is certified when the search space is exhausted (`stats.optimal`).
 A node budget keeps worst cases bounded; on exhaustion the incumbent (never
 worse than FFD/BFD) is returned with `optimal=False`.
@@ -38,6 +51,7 @@ from .problem import (
 __all__ = ["solve", "SolveStats"]
 
 _EPS = 1e-9
+_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -48,10 +62,10 @@ class SolveStats:
     incumbent_updates: int = 0
 
 
-def _non_dominated_bins(problem: Problem) -> list[BinType]:
-    """Drop bin types that cost >= another type with >= capacity everywhere."""
-    keep: list[BinType] = []
-    for bt in problem.bin_types:
+def _non_dominated_bins(problem: Problem) -> list[int]:
+    """Indices of bin types not dominated by a cheaper >=-capacity type."""
+    keep: list[int] = []
+    for i, bt in enumerate(problem.bin_types):
         dominated = False
         for other in problem.bin_types:
             if other is bt:
@@ -67,95 +81,82 @@ def _non_dominated_bins(problem: Problem) -> list[BinType]:
                 dominated = True
                 break
         if not dominated:
-            keep.append(bt)
-    return keep or list(problem.bin_types)
-
-
-def _lower_bound(
-    current_cost: float,
-    remaining_reqs: list[np.ndarray],
-    residuals: list[np.ndarray],
-    bin_types: list[BinType],
-    problem: Problem,
-) -> float:
-    """Admissible lower bound on the total cost of any completion."""
-    if not remaining_reqs:
-        return current_cost
-    dim = problem.dim
-    # Per-dim density bound: every remaining item consumes at least its
-    # cheapest-choice demand in each dim; open residuals absorb demand for
-    # free; extra demand costs at least 1/best(cap_d per $).
-    min_req = np.stack([r.min(axis=0) for r in remaining_reqs])  # (n_rem, dim)
-    demand = min_req.sum(axis=0)
-    open_resid = (
-        np.stack(residuals).sum(axis=0) if residuals else np.zeros(dim)
-    )
-    extra = np.maximum(0.0, demand - open_resid)
-    best_density = np.zeros(dim)  # capacity per dollar, per dim
-    for bt in bin_types:
-        cap = problem.effective_capacity(bt)
-        if bt.cost <= _EPS:
-            # Free bin with capacity: that dim is unconstrained.
-            best_density = np.where(cap > 0, np.inf, best_density)
-        else:
-            best_density = np.maximum(best_density, cap / bt.cost)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        dim_lb = np.where(
-            extra > _EPS,
-            extra / np.where(best_density > 0, best_density, np.inf),
-            0.0,
-        )
-    lb_density = float(np.max(dim_lb)) if dim > 0 else 0.0
-
-    # Forced-new-bin bound: if some remaining item fits in no open residual
-    # (under any choice), at least the cheapest bin type hosting it is needed.
-    lb_forced = 0.0
-    for reqs in remaining_reqs:
-        fits_open = False
-        for resid in residuals:
-            if np.any(np.all(reqs <= resid[None, :] + _EPS, axis=1)):
-                fits_open = True
-                break
-        if fits_open:
-            continue
-        cheapest = np.inf
-        for bt in bin_types:
-            cap = problem.effective_capacity(bt)
-            if np.any(np.all(reqs <= cap[None, :] + _EPS, axis=1)):
-                cheapest = min(cheapest, bt.cost)
-        lb_forced = max(lb_forced, cheapest if np.isfinite(cheapest) else 0.0)
-
-    return current_cost + max(lb_density, lb_forced)
+            keep.append(i)
+    return keep or list(range(len(problem.bin_types)))
 
 
 def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, SolveStats]:
     """Exact (within `max_nodes`) minimum-cost MC-VBP solve."""
-    for item in problem.items:
-        if not problem.feasible_somewhere(item):
-            raise InfeasibleError(
-                f"item {item.name}: no (choice, bin type) fits even when alone"
-            )
+    t = problem.tensors()
+    bad = np.where(~np.isfinite(t.cheapest_host))[0]
+    if bad.size:
+        item = problem.items[int(bad[0])]
+        raise InfeasibleError(
+            f"item {item.name}: no (choice, bin type) fits even when alone"
+        )
 
     stats = SolveStats()
-    bin_types = _non_dominated_bins(problem)
-    reqs = problem.choice_matrix()
+    nd = _non_dominated_bins(problem)
     n = len(problem.items)
+    dim = problem.dim
 
-    # FFD order (decreasing tightness) mirrors the heuristics' order.
-    def tightness(i: int) -> float:
-        best = np.inf
-        for req in reqs[i]:
-            for bt in bin_types:
-                cap = problem.effective_capacity(bt)
-                with np.errstate(divide="ignore", invalid="ignore"):
-                    frac = np.where(cap > 0, req / np.maximum(cap, 1e-300),
-                                    np.where(req > 0, np.inf, 0.0))
-                f = float(np.max(frac)) if frac.size else 0.0
-                if f <= 1.0 + _EPS:
-                    best = min(best, f)
-        return best
+    # FFD order (decreasing tightness; dominated types never give the min
+    # fraction, so the full-catalog key is identical).
+    order = np.argsort(-t.min_frac(_EPS), kind="stable")
 
-    order = sorted(range(n), key=tightness, reverse=True)
+    # --- hoisted constants ------------------------------------------------
+    # Requirements re-indexed into search order: row d is item order[d].
+    req_o = np.ascontiguousarray(t.req[order])  # (n, C, dim), +inf padded
+    req_o_l = req_o.tolist()  # python floats for the O(dim) bookkeeping
+    req_sum_o_l = t.req_sum[order].tolist()  # (n, C)
+    cheapest_o = t.cheapest_host[order]  # (n,)
+    # Suffix sums of per-item min requirements: density-bound demand for the
+    # items still unplaced at depth d is one O(dim) row read.  The suffix
+    # max of the cheapest hosting cost bounds the forced-new-bin term from
+    # above, letting most nodes skip its broadcast entirely.
+    suffix = np.zeros((n + 1, dim))
+    if n:
+        suffix[:n] = np.cumsum(t.min_req[order][::-1], axis=0)[::-1]
+    suffix_l = suffix.tolist()
+    suffix_max_cheapest = [0.0] * (n + 1)
+    for d in range(n - 1, -1, -1):
+        suffix_max_cheapest[d] = max(
+            suffix_max_cheapest[d + 1], float(cheapest_o[d])
+        )
+    cheapest_l = cheapest_o.tolist()
+    # Depths visited in decreasing cheapest-host order: the forced-new-bin
+    # scan walks this and stops at the first non-fitting item (it yields the
+    # max) or once no remaining item can beat the density bound.
+    by_cheapest = sorted(range(n), key=lambda d: -cheapest_l[d])
+    # Valid (flat choice offsets) per depth for scalar fit tests.
+    choice_idx_l = [
+        [c for c in range(t.req.shape[1]) if t.choice_mask[order[d], c]]
+        for d in range(n)
+    ]
+
+    # Best capacity-per-dollar per dim (a node-invariant, shared via
+    # ProblemTensors; dominated types never set the per-dim max).
+    best_density = t.best_density.tolist()
+
+    # New-bin branching order: cheapest non-dominated types first (stable).
+    nd_sorted = sorted(nd, key=lambda i: float(t.costs[i]))
+    new_caps_eps = [t.caps[i] + _EPS for i in nd_sorted]
+    new_caps_eps_l = [(t.caps[i] + _EPS).tolist() for i in nd_sorted]
+    new_caps_l = [t.caps[i].tolist() for i in nd_sorted]
+    new_costs = [float(t.costs[i]) for i in nd_sorted]
+    new_cap_sums = [float(t.cap_sums[i]) for i in nd_sorted]
+    new_types = [problem.bin_types[i] for i in nd_sorted]
+    # New-bin moves per depth, precomputed: the (type, fitting choices)
+    # pairs are node-invariant, so no per-node fit test is needed there.
+    fits_new_o = t.fits_alone[order][:, :, nd_sorted]  # (n, C, n_nd)
+    new_moves = [
+        [
+            (type_i, np.nonzero(fits_new_o[d, :, type_i])[0].tolist())
+            for type_i in range(len(nd_sorted))
+            if fits_new_o[d, :, type_i].any()
+        ]
+        for d in range(n)
+    ]
 
     # Incumbent from heuristics.
     incumbent = min(
@@ -165,16 +166,93 @@ def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, Solve
     best_cost = incumbent.cost
     best_raw: tuple[list[tuple[int, int, int]], list[BinType]] | None = None
 
-    placements: list[tuple[int, int, int]] = []
+    # --- mutable search state --------------------------------------------
+    cap_bins = 8
+    # Open-bin residuals, stored pre-shifted by +_EPS so every fit test is a
+    # bare comparison (matches `req <= resid + eps` bit for bit).
+    resid_eps = np.zeros((cap_bins, dim))
+    resid_l: list[list[float]] = [[0.0] * dim for _ in range(cap_bins)]
+    bin_tot = [0.0] * cap_bins  # per-bin residual totals (move sort key)
+    n_open = 0
+    resid_sum = [0.0] * dim  # running sum of all open residuals
     opened: list[BinType] = []
-    residuals: list[np.ndarray] = []
+    placements: list[tuple[int, int, int]] = []
     cost = 0.0
+    order_l = order.tolist()
+    # Hot counters kept as locals; folded back into `stats` after the search.
+    node_count = 0
+    pruned_count = 0
+    aborted = False
+
+    def lower_bound(depth: int) -> float:
+        """Admissible completion bound; O(dim) density part first, the
+        broadcasted forced-new-bin part only when it could actually prune."""
+        row = suffix_l[depth]
+        lb = 0.0
+        for d in range(dim):
+            extra = row[d] - resid_sum[d]
+            if extra > _EPS:
+                bd = best_density[d]
+                if 0.0 < bd < _INF:
+                    v = extra / bd
+                    if v > lb:
+                        lb = v
+        if cost + lb >= best_cost - _EPS:
+            return lb
+        # Forced-new-bin: any remaining item fitting no open residual forces
+        # at least its cheapest hosting bin.  The suffix max of cheapest
+        # hosting costs caps this term, so skip the broadcast when the
+        # density part already dominates it or even the upper envelope
+        # cannot prune — either way the decision is unchanged.
+        smc = suffix_max_cheapest[depth]
+        if lb >= smc or cost + smc < best_cost - _EPS:
+            return lb
+        if not n_open:
+            return smc if smc > lb else lb
+        if n - depth > 32:
+            # Large fleets: one broadcast beats the scalar scan.
+            fits = (
+                (req_o[depth:, :, None, :] <= resid_eps[None, None, :n_open, :])
+                .all(3)
+                .reshape(n - depth, -1)
+                .any(1)
+            )
+            forced = cheapest_o[depth:][~fits]
+            if forced.size:
+                v = float(forced.max())
+                if v > lb:
+                    lb = v
+            return lb
+        for d in by_cheapest:
+            if d < depth:
+                continue
+            ch = cheapest_l[d]
+            if ch <= lb:
+                break
+            reqs = req_o_l[d]
+            fits = False
+            for c in choice_idx_l[d]:
+                rc = reqs[c]
+                for b in range(n_open):
+                    rb = resid_l[b]
+                    for dd in range(dim):
+                        if rc[dd] > rb[dd]:
+                            break
+                    else:
+                        fits = True
+                        break
+                if fits:
+                    break
+            if not fits:
+                return ch  # max over non-fitting: first in desc order
+        return lb
 
     def recurse(depth: int) -> None:
-        nonlocal cost, best_cost, best_raw
-        stats.nodes += 1
-        if stats.nodes > max_nodes:
-            stats.optimal = False
+        nonlocal cost, best_cost, best_raw, n_open, resid_eps, resid_l, bin_tot, cap_bins
+        nonlocal node_count, pruned_count, aborted
+        node_count += 1
+        if node_count > max_nodes:
+            aborted = True
             return
         if depth == n:
             if cost < best_cost - _EPS:
@@ -182,59 +260,102 @@ def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, Solve
                 best_raw = (list(placements), list(opened))
                 stats.incumbent_updates += 1
             return
-        remaining = [reqs[order[d]] for d in range(depth, n)]
-        lb = _lower_bound(cost, remaining, residuals, bin_types, problem)
-        if lb >= best_cost - _EPS:
-            stats.pruned += 1
+        if cost + lower_bound(depth) >= best_cost - _EPS:
+            pruned_count += 1
             return
 
-        item_i = order[depth]
-        item_reqs = reqs[item_i]
+        item_i = order_l[depth]
+        item_reqs = req_o[depth]  # (C, dim)
+        item_reqs_l = req_o_l[depth]
+        item_sums = req_sum_o_l[depth]
 
         # Moves into open bins, deduplicated by (residual signature, choice).
-        seen_resid: set[tuple[bytes, int]] = set()
-        moves: list[tuple[float, int, int]] = []  # (sort key, choice, bin index)
-        for bin_i, resid in enumerate(residuals):
-            sig = resid.round(9).tobytes()
-            for choice_i, req in enumerate(item_reqs):
-                if (sig, choice_i) in seen_resid:
-                    continue
-                if np.all(req <= resid + _EPS):
-                    seen_resid.add((sig, choice_i))
+        if n_open:
+            fit = (item_reqs[None, :, :] <= resid_eps[:n_open, None, :]).all(2)
+            flat = fit.ravel().nonzero()[0]  # bin-major, choice-minor order
+            if flat.size:
+                n_c = fit.shape[1]
+                sig_buf = resid_eps[:n_open].round(9).tobytes()
+                row_bytes = dim * 8
+                seen: set[tuple[bytes, int]] = set()
+                moves: list[tuple[float, int, int]] = []
+                for pos in flat.tolist():
+                    bin_i, choice_i = divmod(pos, n_c)
+                    key = (
+                        sig_buf[bin_i * row_bytes : (bin_i + 1) * row_bytes],
+                        choice_i,
+                    )
+                    if key in seen:
+                        continue
+                    seen.add(key)
                     # Prefer tight placements (small residual after).
-                    after = float(np.sum(resid - req))
-                    moves.append((after, choice_i, bin_i))
-        moves.sort()
-        for _, choice_i, bin_i in moves:
-            req = item_reqs[choice_i]
-            residuals[bin_i] = residuals[bin_i] - req
-            placements.append((item_i, choice_i, bin_i))
-            recurse(depth + 1)
-            placements.pop()
-            residuals[bin_i] = residuals[bin_i] + req
-            if not stats.optimal:
-                return
-
-        # Moves opening a new bin (cheapest types first).
-        for bt in sorted(bin_types, key=lambda b: b.cost):
-            if cost + bt.cost >= best_cost - _EPS:
-                continue
-            cap = problem.effective_capacity(bt)
-            for choice_i, req in enumerate(item_reqs):
-                if np.all(req <= cap + _EPS):
-                    opened.append(bt)
-                    residuals.append(cap - req)
-                    placements.append((item_i, choice_i, len(opened) - 1))
-                    cost += bt.cost
+                    moves.append(
+                        (bin_tot[bin_i] - item_sums[choice_i], choice_i, bin_i)
+                    )
+                moves.sort()
+                for _, choice_i, bin_i in moves:
+                    req = item_reqs[choice_i]
+                    req_l = item_reqs_l[choice_i]
+                    resid_eps[bin_i] -= req
+                    bin_tot[bin_i] -= item_sums[choice_i]
+                    rl = resid_l[bin_i]
+                    for d in range(dim):
+                        resid_sum[d] -= req_l[d]
+                        rl[d] -= req_l[d]
+                    placements.append((item_i, choice_i, bin_i))
                     recurse(depth + 1)
-                    cost -= bt.cost
                     placements.pop()
-                    residuals.pop()
-                    opened.pop()
-                    if not stats.optimal:
+                    for d in range(dim):
+                        resid_sum[d] += req_l[d]
+                        rl[d] += req_l[d]
+                    bin_tot[bin_i] += item_sums[choice_i]
+                    resid_eps[bin_i] += req
+                    if aborted:
                         return
 
+        # Moves opening a new bin (cheapest types first; fit lists are
+        # precomputed per depth).
+        for type_i, choices in new_moves[depth]:
+            bt_cost = new_costs[type_i]
+            if cost + bt_cost >= best_cost - _EPS:
+                continue
+            cap_eps = new_caps_eps[type_i]
+            cap_eps_l = new_caps_eps_l[type_i]
+            cap_l = new_caps_l[type_i]
+            for choice_i in choices:
+                req = item_reqs[choice_i]
+                req_l = item_reqs_l[choice_i]
+                if n_open == cap_bins:
+                    cap_bins *= 2
+                    resid_eps = np.vstack([resid_eps, np.zeros_like(resid_eps)])
+                    resid_l = resid_l + [[0.0] * dim for _ in range(cap_bins // 2)]
+                    bin_tot = bin_tot + [0.0] * len(bin_tot)
+                bin_i = n_open
+                resid_eps[bin_i] = cap_eps - req
+                resid_l[bin_i] = [
+                    cap_eps_l[d] - req_l[d] for d in range(dim)
+                ]
+                bin_tot[bin_i] = new_cap_sums[type_i] - item_sums[choice_i]
+                for d in range(dim):
+                    resid_sum[d] += cap_l[d] - req_l[d]
+                opened.append(new_types[type_i])
+                placements.append((item_i, choice_i, bin_i))
+                n_open += 1
+                cost += bt_cost
+                recurse(depth + 1)
+                cost -= bt_cost
+                n_open -= 1
+                placements.pop()
+                opened.pop()
+                for d in range(dim):
+                    resid_sum[d] -= cap_l[d] - req_l[d]
+                if aborted:
+                    return
+
     recurse(0)
+    stats.nodes = node_count
+    stats.pruned = pruned_count
+    stats.optimal = not aborted
 
     if best_raw is None:
         # Heuristic incumbent was already optimal (or node budget hit).

@@ -1,4 +1,4 @@
-"""Multiple-choice FFD / BFD heuristics for MC-VBP.
+"""Multiple-choice FFD / BFD heuristics for MC-VBP (vectorized).
 
 Used (a) as the incumbent/upper bound for the exact branch-and-bound, and
 (b) as the production path for very large fleets (hundreds of streams)
@@ -14,6 +14,11 @@ heterogeneous costed bins:
   best-fit), preferring placements that need no new bin,
 * when a new bin must be opened we pick the bin type minimizing
   cost-per-packed-fraction for this item (a cost-density greedy).
+
+All per-item work runs on the shared `ProblemTensors` cache: the sort keys
+and the new-bin scores are one batched computation each, and the fit test
+against open bins is a single `(bins, choices, dim)` broadcast per item
+instead of a Python loop over bins and choices.
 """
 from __future__ import annotations
 
@@ -29,83 +34,92 @@ from .problem import (
 
 __all__ = ["first_fit_decreasing", "best_fit_decreasing"]
 
-
-def _choice_fraction(req: np.ndarray, cap: np.ndarray) -> float:
-    """Max utilization fraction of `req` inside capacity `cap` (inf if misfit)."""
-    with np.errstate(divide="ignore", invalid="ignore"):
-        frac = np.where(cap > 0, req / np.maximum(cap, 1e-300), np.where(req > 0, np.inf, 0.0))
-    return float(np.max(frac)) if frac.size else 0.0
-
-
-def _item_sort_key(problem: Problem, item_idx: int) -> float:
-    caps = [problem.effective_capacity(bt) for bt in problem.bin_types]
-    reqs = problem.choice_matrix()[item_idx]
-    best = np.inf
-    for req in reqs:
-        for cap in caps:
-            f = _choice_fraction(req, cap)
-            if f <= 1.0 + 1e-12:
-                best = min(best, f)
-    return -best if np.isfinite(best) else -np.inf
+_FIT_EPS = 1e-9  # absolute slack on capacity comparisons
+_FRAC_EPS = 1e-12  # relative slack on utilization fractions
 
 
 def _pack(problem: Problem, best_fit: bool) -> Solution:
+    t = problem.tensors()
     n = len(problem.items)
-    order = sorted(range(n), key=lambda i: _item_sort_key(problem, i))
-    reqs = problem.choice_matrix()
+    dim = problem.dim
+
+    infeasible = np.where(~np.isfinite(t.cheapest_host))[0]
+    if infeasible.size:
+        item = problem.items[int(infeasible[0])]
+        raise InfeasibleError(
+            f"item {item.name}: no (choice, bin type) fits even when alone"
+        )
+
+    # Decreasing minimum normalized size; stable sort keeps input order on
+    # ties, matching the previous sorted(..., key=...) behaviour.
+    order = np.argsort(-t.min_frac(_FRAC_EPS), kind="stable")
+
+    # New-bin score per (item, bin type, choice): cheap bins the item nearly
+    # fills win over expensive bins it barely dents. +inf marks misfits.
+    # Computed for the whole fleet in one batch.
+    frac_tb = np.swapaxes(t.frac, 1, 2)  # (n, n_bt, max_choices)
+    fits_new = (frac_tb <= 1.0 + _FRAC_EPS) & t.choice_mask[:, None, :]
+    open_score = np.where(
+        fits_new,
+        t.costs[None, :, None] - 0.5 * t.costs[None, :, None] * np.minimum(frac_tb, 1.0),
+        np.inf,
+    )
 
     opened: list[BinType] = []
-    loads: list[np.ndarray] = []
+    # Growable dense state for the open bins.
+    cap_bins = 8
+    loads = np.zeros((cap_bins, dim))
+    caps_open = np.zeros((cap_bins, dim))
+    n_open = 0
     placements: list[tuple[int, int, int]] = []
 
-    for item_i in order:
-        item = problem.items[item_i]
-        if not problem.feasible_somewhere(item):
-            raise InfeasibleError(
-                f"item {item.name}: no (choice, bin type) fits even when alone"
-            )
-        best_place: tuple[float, int, int] | None = None  # (score, choice, bin)
-        # Try existing bins first.
-        for bin_i, (bt, load) in enumerate(zip(opened, loads)):
-            cap = problem.effective_capacity(bt)
-            for choice_i, req in enumerate(reqs[item_i]):
-                new_load = load + req
-                if np.all(new_load <= cap + 1e-9):
-                    if not best_fit:
-                        best_place = (0.0, choice_i, bin_i)
-                        break
-                    # best-fit: maximize residual tightness (min slack)
-                    slack = float(np.max((cap - new_load) / np.maximum(cap, 1e-300)))
-                    score = slack
-                    if best_place is None or score < best_place[0]:
-                        best_place = (score, choice_i, bin_i)
-            if best_place is not None and not best_fit:
-                break
-        if best_place is not None:
-            _, choice_i, bin_i = best_place
-            loads[bin_i] = loads[bin_i] + reqs[item_i][choice_i]
+    for item_i in order.tolist():
+        reqs = t.req[item_i]  # (max_choices, dim); padded rows are +inf
+        placed = False
+        if n_open:
+            new_loads = loads[:n_open, None, :] + reqs[None, :, :]
+            fit = (
+                np.all(new_loads <= caps_open[:n_open, None, :] + _FIT_EPS, axis=-1)
+                & t.choice_mask[item_i][None, :]
+            )  # (bins, choices); padded choices never fit
+            if not best_fit:
+                flat = fit.ravel()
+                pos = int(flat.argmax())
+                if flat[pos]:
+                    bin_i, choice_i = divmod(pos, fit.shape[1])
+                    placed = True
+            else:
+                # best-fit: minimize residual slack; argmin's first-minimum
+                # rule reproduces the bin-major, choice-minor tie-break.
+                slack = (
+                    (caps_open[:n_open, None, :] - new_loads)
+                    / np.maximum(caps_open[:n_open, None, :], 1e-300)
+                ).max(axis=-1)
+                score = np.where(fit, slack, np.inf)
+                pos = int(score.argmin())
+                if np.isfinite(score.ravel()[pos]):
+                    bin_i, choice_i = divmod(pos, fit.shape[1])
+                    placed = True
+        if placed:
+            loads[bin_i] += reqs[choice_i]
             placements.append((item_i, choice_i, bin_i))
             continue
-        # Open a new bin: choose (bin type, choice) minimizing cost density.
-        best_open: tuple[float, int, BinType] | None = None
-        for bt in problem.bin_types:
-            cap = problem.effective_capacity(bt)
-            for choice_i, req in enumerate(reqs[item_i]):
-                frac = _choice_fraction(req, cap)
-                if frac <= 1.0 + 1e-12:
-                    density = bt.cost * max(frac, 1e-9)  # prefer cheap AND tight
-                    # Primary: cost of the bin per unit of item packed; use
-                    # cost*frac so a cheap bin the item nearly fills wins over
-                    # an expensive bin it barely dents.
-                    score = bt.cost - 0.5 * bt.cost * min(frac, 1.0)
-                    del density
-                    if best_open is None or score < best_open[0]:
-                        best_open = (score, choice_i, bt)
-        assert best_open is not None  # feasible_somewhere guaranteed
-        _, choice_i, bt = best_open
-        opened.append(bt)
-        loads.append(reqs[item_i][choice_i].copy())
-        placements.append((item_i, choice_i, len(opened) - 1))
+
+        # Open a new bin: precomputed (bin type, choice) score, first minimum
+        # wins (bin-type-major order, matching the old nested loops).
+        scores = open_score[item_i]
+        pos = int(scores.argmin())
+        assert np.isfinite(scores.ravel()[pos])  # cheapest_host guaranteed a fit
+        bt_i, choice_i = divmod(pos, scores.shape[1])
+        if n_open == cap_bins:
+            cap_bins *= 2
+            loads = np.vstack([loads, np.zeros_like(loads)])
+            caps_open = np.vstack([caps_open, np.zeros_like(caps_open)])
+        opened.append(problem.bin_types[bt_i])
+        loads[n_open] = reqs[choice_i]
+        caps_open[n_open] = t.caps[bt_i]
+        placements.append((item_i, choice_i, n_open))
+        n_open += 1
 
     return build_solution(problem, placements, opened)
 

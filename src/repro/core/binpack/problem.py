@@ -13,11 +13,16 @@ This is the paper's formulation (Kaseb et al. 2018, section 3.2):
 
 All quantities are floats; solvers treat `capacity * utilization_cap` as
 the effective capacity (the paper de-rates to 90%).
+
+`Problem.tensors()` returns a `ProblemTensors` cache — one padded
+`(n_items, max_choices, dim)` requirement tensor plus derived per-item /
+per-bin-type arrays — computed once per `Problem` and shared by every
+solver (bin-completion, FFD/BFD, arc-flow) so the hot allocation path
+never re-stacks Python requirement lists.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Sequence
 
 import numpy as np
@@ -27,6 +32,7 @@ __all__ = [
     "Choice",
     "Item",
     "Problem",
+    "ProblemTensors",
     "Assignment",
     "OpenBin",
     "Solution",
@@ -125,6 +131,169 @@ class Problem:
                     return True
         return False
 
+    def tensors(self) -> "ProblemTensors":
+        """The solver-shared vectorized view, built once and cached.
+
+        The instance is frozen, so the cache is stashed with
+        ``object.__setattr__`` — field equality/hashing are unaffected.
+        """
+        cached = self.__dict__.get("_tensors")
+        if cached is None:
+            cached = ProblemTensors.build(self)
+            object.__setattr__(self, "_tensors", cached)
+        return cached
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemTensors:
+    """Precomputed dense representation of a `Problem`, shared by all solvers.
+
+    Padded choice slots hold ``+inf`` requirements so they fail every fit
+    test without extra masking; reductions that must ignore padding use
+    `choice_mask`.
+    """
+
+    req: np.ndarray  # (n_items, max_choices, dim), +inf padded
+    choice_mask: np.ndarray  # (n_items, max_choices) bool
+    n_choices: np.ndarray  # (n_items,) int
+    req_sum: np.ndarray  # (n_items, max_choices) total demand per choice
+    min_req: np.ndarray  # (n_items, dim) per-dim min over valid choices
+    caps: np.ndarray  # (n_bin_types, dim) effective capacities
+    cap_sums: np.ndarray  # (n_bin_types,)
+    costs: np.ndarray  # (n_bin_types,)
+    frac: np.ndarray  # (n_items, max_choices, n_bin_types) max util fraction
+    fits_alone: np.ndarray  # (n_items, max_choices, n_bin_types) bool, abs eps
+    cheapest_host: np.ndarray  # (n_items,) min cost hosting the item alone
+    best_density: np.ndarray  # (dim,) best capacity-per-dollar over bin types
+
+    @staticmethod
+    def build(problem: Problem) -> "ProblemTensors":
+        n = len(problem.items)
+        dim = problem.dim
+        n_bt = len(problem.bin_types)
+        max_c = max((len(it.choices) for it in problem.items), default=1)
+        req = np.full((n, max_c, dim), np.inf, dtype=np.float64)
+        mask = np.zeros((n, max_c), dtype=bool)
+        for i, it in enumerate(problem.items):
+            for c, ch in enumerate(it.choices):
+                req[i, c] = ch.requirement
+                mask[i, c] = True
+        caps = np.asarray(
+            [bt.capacity for bt in problem.bin_types], dtype=np.float64
+        ).reshape(n_bt, dim) * problem.utilization_cap
+        costs = np.asarray([bt.cost for bt in problem.bin_types], dtype=np.float64)
+        if dim and n:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ratio = np.where(
+                    caps[None, None, :, :] > 0,
+                    req[:, :, None, :] / np.maximum(caps[None, None, :, :], 1e-300),
+                    np.where(req[:, :, None, :] > 0, np.inf, 0.0),
+                )
+            frac = ratio.max(axis=-1)
+            min_req = req.min(axis=1)
+            with np.errstate(invalid="ignore"):
+                fits_alone = np.all(
+                    req[:, :, None, :] <= caps[None, None, :, :] + 1e-9, axis=-1
+                )
+        else:
+            frac = np.zeros((n, max_c, n_bt))
+            min_req = np.zeros((n, dim))
+            fits_alone = np.broadcast_to(mask[:, :, None], (n, max_c, n_bt)).copy()
+        host_cost = np.where(fits_alone, costs[None, None, :], np.inf)
+        cheapest_host = (
+            host_cost.min(axis=(1, 2)) if n else np.zeros(0, dtype=np.float64)
+        )
+        return ProblemTensors(
+            req=req,
+            choice_mask=mask,
+            n_choices=mask.sum(axis=1),
+            req_sum=req.sum(axis=-1) if dim else np.zeros((n, max_c)),
+            min_req=min_req,
+            caps=caps,
+            cap_sums=caps.sum(axis=-1) if dim else np.zeros(n_bt),
+            costs=costs,
+            frac=frac,
+            fits_alone=fits_alone,
+            cheapest_host=cheapest_host,
+            best_density=ProblemTensors._best_density(caps, costs),
+        )
+
+    @staticmethod
+    def _best_density(caps: np.ndarray, costs: np.ndarray) -> np.ndarray:
+        """(dim,) best capacity-per-dollar per dimension over the catalog:
+        the admissible density bound's denominator, shared by the solvers.
+        A zero-cost bin type with capacity in a dim makes that dim free
+        (+inf).  Dominated bin types never beat the max, so computing over
+        the full catalog matches computing over the non-dominated subset."""
+        dim = caps.shape[1] if caps.ndim == 2 else 0
+        best = np.zeros(dim)
+        for t in range(caps.shape[0]):
+            cost_t = float(costs[t])
+            if cost_t <= 1e-9:
+                best = np.where(caps[t] > 0, np.inf, best)
+            else:
+                best = np.maximum(best, caps[t] / cost_t)
+        return best
+
+    def min_frac(self, eps: float) -> np.ndarray:
+        """(n_items,) min utilization fraction over (choice, bin type) pairs
+        whose fraction is within `1 + eps`; `inf` where nothing fits."""
+        ok = np.where(self.frac <= 1.0 + eps, self.frac, np.inf)
+        return ok.min(axis=(1, 2)) if ok.size else np.full(ok.shape[0], np.inf)
+
+    def restrict(
+        self,
+        bin_indices: Sequence[int],
+        choice_indices: np.ndarray,
+        choice_mask: np.ndarray,
+    ) -> "ProblemTensors":
+        """Slice these tensors down to a sub-problem (fewer bin types and/or
+        fewer choices per item) without touching the Python object model.
+
+        `choice_indices` is `(n_items, new_max_choices)` of positions into
+        this tensor's choice axis, valid where `choice_mask` is True.  Used
+        by the manager's strategy sweep: ST1/ST2 are restrictions of the
+        full ST3 problem, so their tensors are views of one build.
+        """
+        bin_idx = list(bin_indices)
+        gather = np.where(choice_mask, choice_indices, 0)
+        req = np.take_along_axis(self.req, gather[:, :, None], axis=1)
+        req = np.where(choice_mask[:, :, None], req, np.inf)
+        req_sum = np.where(
+            choice_mask, np.take_along_axis(self.req_sum, gather, axis=1), np.inf
+        )
+        frac = np.take_along_axis(self.frac, gather[:, :, None], axis=1)[
+            :, :, bin_idx
+        ]
+        frac = np.where(choice_mask[:, :, None], frac, np.inf)
+        fits_alone = (
+            np.take_along_axis(self.fits_alone, gather[:, :, None], axis=1)[
+                :, :, bin_idx
+            ]
+            & choice_mask[:, :, None]
+        )
+        costs = self.costs[bin_idx]
+        host_cost = np.where(fits_alone, costs[None, None, :], np.inf)
+        n = req.shape[0]
+        return ProblemTensors(
+            req=req,
+            choice_mask=choice_mask,
+            n_choices=choice_mask.sum(axis=1),
+            req_sum=req_sum,
+            min_req=req.min(axis=1) if req.size else np.zeros((n, self.min_req.shape[1])),
+            caps=self.caps[bin_idx],
+            cap_sums=self.cap_sums[bin_idx],
+            costs=costs,
+            frac=frac,
+            fits_alone=fits_alone,
+            cheapest_host=(
+                host_cost.min(axis=(1, 2)) if n else np.zeros(0, dtype=np.float64)
+            ),
+            best_density=ProblemTensors._best_density(
+                self.caps[bin_idx], costs
+            ),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class Assignment:
@@ -188,8 +357,9 @@ def build_solution(
         loads[bin_i] += np.asarray(
             problem.items[item_i].choices[choice_i].requirement
         )
-    # Drop unused bins, remapping indices.
-    keep = [i for i in range(len(opened)) if any(p[2] == i for p in placements)]
+    # Drop unused bins, remapping indices (single pass over placements).
+    used = {p[2] for p in placements}
+    keep = [i for i in range(len(opened)) if i in used]
     remap = {old: new for new, old in enumerate(keep)}
     bins = tuple(
         OpenBin(bin_type=opened[i], load=tuple(loads[i].tolist())) for i in keep

@@ -12,6 +12,7 @@ Pipeline (paper Fig. 2):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
@@ -19,7 +20,7 @@ import numpy as np
 from .binpack import bincompletion, heuristics
 from .binpack.problem import BinType, InfeasibleError, Item, Problem, Solution
 from .profiler import ProfileTable
-from .strategies import ST3, Strategy
+from .strategies import ALL_STRATEGIES, ST3, Strategy
 from .streams import StreamSpec
 
 __all__ = ["AllocationPlan", "PlacedStream", "ResourceManager"]
@@ -83,10 +84,18 @@ class ResourceManager:
         self.utilization_cap = utilization_cap
         self.solver = solver
         self.max_nodes = max_nodes
+        # formulate() memo: repeated allocations of the same fleet (solver
+        # cross-checks, simulator re-plans, benchmark timing loops) reuse
+        # one Problem instance and therefore one ProblemTensors build.
+        self._formulate_cache: dict[tuple, Problem] = {}
 
     def formulate(
         self, streams: Sequence[StreamSpec], strategy: Strategy = ST3
     ) -> Problem:
+        key = (tuple(streams), strategy.name)
+        cached = self._formulate_cache.get(key)
+        if cached is not None:
+            return cached
         bins = strategy.filter_bins(self.catalog)
         if not bins:
             raise InfeasibleError(f"{strategy.name}: no instance types remain")
@@ -103,14 +112,85 @@ class ResourceManager:
                     )
                 item = Item(name=item.name, choices=choices)
             items.append(item)
-        return Problem(
+        problem = Problem(
             bin_types=bins, items=tuple(items), utilization_cap=self.utilization_cap
         )
+        if len(self._formulate_cache) > 64:
+            self._formulate_cache.clear()
+        self._formulate_cache[key] = problem
+        return problem
 
     def allocate(
         self, streams: Sequence[StreamSpec], strategy: Strategy = ST3
     ) -> AllocationPlan:
         problem = self.formulate(streams, strategy)
+        return self._plan(streams, problem, strategy)
+
+    def allocate_sweep(
+        self,
+        streams: Sequence[StreamSpec],
+        strategies: Sequence[Strategy] = ALL_STRATEGIES,
+    ) -> dict[str, AllocationPlan | None]:
+        """Allocate under several strategies, building `ProblemTensors` once.
+
+        The full (all-bins, all-choices) problem's tensor cache is built a
+        single time; each restricted strategy (ST1: CPU bins/choices, ST2:
+        accelerator bins/choices, ...) gets its tensors sliced from it via
+        `ProblemTensors.restrict` instead of re-deriving from the object
+        model.  Infeasible strategies map to None (paper Table 6 "Fail")."""
+        full = self.formulate(streams, ST3)
+        full_t = full.tensors()
+        plans: dict[str, AllocationPlan | None] = {}
+        for strat in strategies:
+            try:
+                problem = self.formulate(streams, strat)
+            except InfeasibleError:
+                plans[strat.name] = None
+                continue
+            if "_tensors" not in problem.__dict__ and problem is not full:
+                derived = self._restricted_tensors(full, full_t, problem, strat)
+                if derived is not None:
+                    object.__setattr__(problem, "_tensors", derived)
+            try:
+                plans[strat.name] = self._plan(streams, problem, strat)
+            except InfeasibleError:
+                plans[strat.name] = None
+        return plans
+
+    @staticmethod
+    def _restricted_tensors(full, full_t, problem, strategy):
+        """Slice the full problem's tensors down to a strategy's problem."""
+        bin_pos = {id(bt): i for i, bt in enumerate(full.bin_types)}
+        try:
+            bin_indices = [bin_pos[id(bt)] for bt in problem.bin_types]
+        except KeyError:
+            return None
+        allowed = strategy.filter_choice_labels()
+        keep = [
+            (
+                list(range(len(item.choices)))
+                if allowed is None
+                else [
+                    k for k, c in enumerate(item.choices) if c.label in allowed
+                ]
+            )
+            for item in full.items
+        ]
+        max_c = max((len(k) for k in keep), default=1)
+        n = len(full.items)
+        choice_indices = np.zeros((n, max_c), dtype=np.intp)
+        choice_mask = np.zeros((n, max_c), dtype=bool)
+        for i, ks in enumerate(keep):
+            choice_indices[i, : len(ks)] = ks
+            choice_mask[i, : len(ks)] = True
+        return full_t.restrict(bin_indices, choice_indices, choice_mask)
+
+    def _plan(
+        self,
+        streams: Sequence[StreamSpec],
+        problem: Problem,
+        strategy: Strategy,
+    ) -> AllocationPlan:
         solution, optimal = self._solve(problem)
         placements = tuple(
             PlacedStream(
@@ -146,13 +226,23 @@ class ResourceManager:
         if self.solver == "bincompletion":
             sol, st = bincompletion.solve(problem, max_nodes=self.max_nodes)
             return sol, st.optimal
-        # auto
+        # auto.  math.prod: the demand lattice size is exact under arbitrary
+        # precision — np.prod silently wrapped to a negative int64 on large
+        # fleets and mis-routed them to arc-flow.
         classes, demands, _ = arcflow.group_items(problem)
-        if len(classes) <= 6 and int(np.prod([d + 1 for d in demands])) <= 200_000:
-            try:
-                sol, st = arcflow.solve_arcflow(problem)
-                return sol, st.optimal
-            except MemoryError:
-                pass
+        if len(classes) <= 6 and math.prod(d + 1 for d in demands) <= 200_000:
+            sol, st = arcflow.solve_arcflow(problem)
+            if st.optimal:
+                return sol, True
+            # Budgeted arc-flow returned its incumbent: cross-check with the
+            # (also budgeted) exact B&B and keep the cheaper plan — or the
+            # arc-flow plan with certified optimality if the B&B proves the
+            # same cost optimal.
+            bc_sol, bc_st = bincompletion.solve(problem, max_nodes=self.max_nodes)
+            if bc_sol.cost < sol.cost - 1e-9:
+                return bc_sol, bc_st.optimal
+            if bc_st.optimal and bc_sol.cost <= sol.cost + 1e-9:
+                return sol, True
+            return sol, False
         sol, st = bincompletion.solve(problem, max_nodes=self.max_nodes)
         return sol, st.optimal

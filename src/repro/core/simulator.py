@@ -50,19 +50,21 @@ def simulate_instance(
 
 
 def simulate_plan(plan: AllocationPlan, profiles: ProfileTable) -> dict:
-    """Returns overall performance + per-instance utilizations for a plan."""
+    """Returns overall performance + per-instance utilizations for a plan.
+
+    Placements are bucketed by instance in one pass — the former
+    per-instance rescan was O(instances x placements), which dominated
+    repeated re-plan/simulate loops on large fleets."""
+    by_instance: list[list[np.ndarray]] = [[] for _ in plan.solution.bins]
+    for p in plan.placements:
+        prof = profiles.get(
+            p.stream.program.program_id, str(p.stream.frame_size), p.device
+        )
+        assert prof is not None
+        by_instance[p.instance_index].append(prof.at_fps(p.stream.desired_fps))
     per_instance: list[InstanceLoad] = []
     perf_by_stream: list[float] = []
-    for i, bin_ in enumerate(plan.solution.bins):
-        reqs = []
-        for p in plan.placements:
-            if p.instance_index != i:
-                continue
-            prof = profiles.get(
-                p.stream.program.program_id, str(p.stream.frame_size), p.device
-            )
-            assert prof is not None
-            reqs.append(prof.at_fps(p.stream.desired_fps))
+    for bin_, reqs in zip(plan.solution.bins, by_instance):
         info = simulate_instance(bin_.bin_type, reqs)
         per_instance.append(info)
         perf_by_stream += [info.performance] * len(reqs)

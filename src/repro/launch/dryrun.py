@@ -80,6 +80,8 @@ def run_one(arch: str, shape: str, multi_pod: bool, *,
             cfg, num_layers=len(cfg.layer_pattern) * groups)
         comp = lower_combo(small, analysis=True).compile()
         c = comp.cost_analysis() or {}
+        if isinstance(c, (list, tuple)):  # older jax wraps it in a list
+            c = c[0] if c else {}
         return (
             float(c.get("flops", 0.0)),
             float(c.get("bytes accessed", 0.0)),

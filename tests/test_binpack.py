@@ -1,7 +1,10 @@
-"""Unit + property tests for the MC-VBP solver stack."""
+"""Unit tests for the MC-VBP solver stack (no hypothesis needed).
+
+The randomized hypothesis cross-validation lives in
+tests/test_binpack_properties.py so these always run.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.binpack import (
     BinType,
@@ -71,65 +74,6 @@ class TestBasics:
         )
         sol, _ = solve(p)
         assert sol.bins[0].bin_type.name == "good"
-
-
-# -- randomized cross-validation -------------------------------------------------
-
-_dims = st.integers(2, 3)
-
-
-@st.composite
-def tiny_instances(draw):
-    dim = draw(_dims)
-    n_bins = draw(st.integers(1, 3))
-    n_items = draw(st.integers(1, 5))
-    bins = []
-    for i in range(n_bins):
-        cap = tuple(draw(st.integers(4, 12)) for _ in range(dim))
-        cost = draw(st.integers(1, 10)) / 2.0
-        bins.append(BinType(f"b{i}", cap, cost))
-    items = []
-    for j in range(n_items):
-        n_choices = draw(st.integers(1, 2))
-        choices = tuple(
-            Choice(f"c{k}", tuple(draw(st.integers(0, 6)) for _ in range(dim)))
-            for k in range(n_choices)
-        )
-        items.append(Item(f"s{j}", choices))
-    return Problem(bin_types=tuple(bins), items=tuple(items),
-                   utilization_cap=draw(st.sampled_from([0.9, 1.0])))
-
-
-@settings(max_examples=60, deadline=None)
-@given(tiny_instances())
-def test_exact_matches_bruteforce(problem):
-    try:
-        ref = solve_bruteforce(problem)
-    except InfeasibleError:
-        for solver in (solve, solve_arcflow):
-            with pytest.raises(InfeasibleError):
-                solver(problem)
-        return
-    sol_bc, stats = solve(problem)
-    sol_af, _ = solve_arcflow(problem)
-    assert stats.optimal
-    assert abs(sol_bc.cost - ref.cost) < 1e-9, (sol_bc.cost, ref.cost)
-    assert abs(sol_af.cost - ref.cost) < 1e-9, (sol_af.cost, ref.cost)
-    sol_bc.validate()
-    sol_af.validate()
-
-
-@settings(max_examples=40, deadline=None)
-@given(tiny_instances())
-def test_heuristics_feasible_and_bounded(problem):
-    try:
-        exact, _ = solve(problem)
-    except InfeasibleError:
-        return
-    for heur in (first_fit_decreasing, best_fit_decreasing):
-        sol = heur(problem)
-        sol.validate()
-        assert sol.cost >= exact.cost - 1e-9
 
 
 def test_medium_fleet_exact_beats_or_matches_ffd():

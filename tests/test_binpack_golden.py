@@ -1,0 +1,227 @@
+"""Golden-equivalence tests for the vectorized solver stack.
+
+The bin-packing layer was rearchitected around `ProblemTensors` (one padded
+requirement tensor shared by all solvers) with incremental bound
+maintenance in bin-completion, batched FFD/BFD, and an LP-guided arc-flow
+DP.  These tests pin the refactor to the pre-refactor (seed) solvers: on
+each recorded fleet scenario every solver must return a `validate()`-clean
+solution whose cost is identical to the seed implementation's, and the
+infeasible scenario must still raise everywhere.
+
+The expected costs below were recorded by running the seed solvers on
+exactly these scenarios (see CHANGES.md for the PR).
+"""
+import numpy as np
+import pytest
+
+from repro.core.binpack import (
+    BinType,
+    Choice,
+    InfeasibleError,
+    Item,
+    Problem,
+    best_fit_decreasing,
+    first_fit_decreasing,
+    solve,
+    solve_arcflow,
+)
+
+CPU_BINS = (
+    BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+    BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),
+)
+GPU_BIN = (BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),)
+FULL = CPU_BINS + GPU_BIN
+
+
+def _fleet(n, seed, n_kinds, catalog, gpu_only=False, cpu_only=False):
+    """Deterministic random fleet; must match the seed-recording script."""
+    rng = np.random.RandomState(seed)
+    kinds = []
+    for _ in range(n_kinds):
+        cpu = rng.uniform(1.0, 5.0)
+        kinds.append(
+            (
+                (cpu, rng.uniform(0.2, 1.0), 0.0, 0.0),
+                (
+                    cpu * 0.13,
+                    rng.uniform(0.2, 1.0),
+                    rng.uniform(30, 300),
+                    rng.uniform(0.1, 0.6),
+                ),
+            )
+        )
+    items = []
+    for i in range(n):
+        c, g = kinds[i % n_kinds]
+        if cpu_only:
+            choices = (Choice("cpu", c),)
+        elif gpu_only:
+            choices = (Choice("accel", g),)
+        else:
+            choices = (Choice("cpu", c), Choice("accel", g))
+        items.append(Item(f"s{i}", choices))
+    return Problem(bin_types=catalog, items=tuple(items))
+
+
+def _tight_caps():
+    return Problem(
+        bin_types=FULL,
+        items=tuple(
+            Item(
+                f"s{i}",
+                (
+                    Choice("cpu", (6.0, 1.0, 0.0, 0.0)),
+                    Choice("accel", (0.9, 1.0, 700.0, 2.0)),
+                ),
+            )
+            for i in range(8)
+        ),
+    )
+
+
+# name -> (problem factory, seed-recorded costs per solver)
+GOLDEN = {
+    "hetero3": (
+        lambda: _fleet(10, 42, 3, FULL),
+        dict(exact=0.65, arcflow=0.65, ffd=1.257, bfd=1.257),
+    ),
+    "hetero5": (
+        lambda: _fleet(12, 7, 5, FULL),
+        dict(exact=1.069, arcflow=1.069, ffd=2.514, bfd=2.514),
+    ),
+    "gpu_only": (
+        lambda: _fleet(9, 3, 3, GPU_BIN, gpu_only=True),
+        dict(exact=1.3, arcflow=1.3, ffd=1.3, bfd=1.3),
+    ),
+    "cpu_only": (
+        lambda: _fleet(10, 11, 4, CPU_BINS, cpu_only=True),
+        dict(exact=1.675, arcflow=1.675, ffd=2.095, bfd=2.095),
+    ),
+    "single_bin_many": (
+        lambda: _fleet(
+            12, 5, 2, (BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),), cpu_only=True
+        ),
+        dict(exact=1.675, arcflow=1.675, ffd=1.675, bfd=1.675),
+    ),
+    "tight_caps": (
+        _tight_caps,
+        dict(exact=2.6, arcflow=2.6, ffd=3.352, bfd=3.352),
+    ),
+}
+
+SOLVERS = {
+    "exact": lambda p: solve(p)[0],
+    "arcflow": lambda p: solve_arcflow(p)[0],
+    "ffd": first_fit_decreasing,
+    "bfd": best_fit_decreasing,
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(GOLDEN))
+@pytest.mark.parametrize("solver", sorted(SOLVERS))
+def test_cost_identical_to_seed(scenario, solver):
+    factory, expected = GOLDEN[scenario]
+    sol = SOLVERS[solver](factory())
+    sol.validate()
+    assert abs(sol.cost - expected[solver]) < 1e-3, (
+        f"{scenario}/{solver}: {sol.cost} != seed {expected[solver]}"
+    )
+
+
+@pytest.mark.parametrize("scenario", sorted(GOLDEN))
+def test_exact_solvers_certify_optimality(scenario):
+    factory, _ = GOLDEN[scenario]
+    p = factory()
+    _, stats_bc = solve(p)
+    _, stats_af = solve_arcflow(p)
+    assert stats_bc.optimal
+    assert stats_af.optimal
+
+
+def test_infeasible_raises_in_every_solver():
+    p = Problem(
+        bin_types=(BinType("b", (2, 2, 0, 0), 1.0),),
+        items=(Item("s", (Choice("cpu", (5.0, 1.0, 0.0, 0.0)),)),),
+    )
+    for fn in SOLVERS.values():
+        with pytest.raises(InfeasibleError):
+            fn(p)
+
+
+def test_exact_never_worse_than_heuristics():
+    for scenario, (factory, _) in GOLDEN.items():
+        p = factory()
+        exact = solve(p)[0].cost
+        assert exact <= first_fit_decreasing(p).cost + 1e-9, scenario
+        assert exact <= best_fit_decreasing(p).cost + 1e-9, scenario
+
+
+def test_problem_tensors_cached_and_shared():
+    p = _fleet(10, 42, 3, FULL)
+    t1 = p.tensors()
+    solve(p)
+    solve_arcflow(p)
+    first_fit_decreasing(p)
+    assert p.tensors() is t1  # one build serves every solver
+
+
+def test_tensor_restriction_matches_direct_build():
+    """ProblemTensors.restrict (used by the manager's strategy sweep) must
+    agree with building the restricted problem from scratch."""
+    full = _fleet(10, 42, 3, FULL)
+    t = full.tensors()
+    # Restrict to CPU-only choices and CPU-only bins, as ST1 does.
+    keep_bins = [0, 1]
+    n = len(full.items)
+    choice_indices = np.zeros((n, 1), dtype=np.intp)  # "cpu" is choice 0
+    choice_mask = np.ones((n, 1), dtype=bool)
+    derived = t.restrict(keep_bins, choice_indices, choice_mask)
+    direct = Problem(
+        bin_types=CPU_BINS,
+        items=tuple(
+            Item(it.name, (it.choices[0],)) for it in full.items
+        ),
+    ).tensors()
+    np.testing.assert_allclose(derived.req, direct.req)
+    np.testing.assert_allclose(derived.min_req, direct.min_req)
+    np.testing.assert_allclose(derived.caps, direct.caps)
+    np.testing.assert_allclose(derived.costs, direct.costs)
+    np.testing.assert_allclose(derived.frac, direct.frac)
+    np.testing.assert_array_equal(derived.fits_alone, direct.fits_alone)
+    np.testing.assert_allclose(derived.cheapest_host, direct.cheapest_host)
+
+
+def test_allocate_sweep_matches_per_strategy_allocate():
+    """The tensor-sharing sweep must produce the same plans (cost and
+    feasibility pattern) as independent per-strategy allocations."""
+    from repro.core.manager import ResourceManager
+    from repro.core.profiler import paper_profile_table
+    from repro.core.strategies import ALL_STRATEGIES
+    from repro.core.streams import AnalysisProgram, StreamSpec
+
+    vgg = AnalysisProgram("VGG-16", "vgg16")
+    zf = AnalysisProgram("ZF", "zf")
+    catalog = (
+        BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+        BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
+    )
+    scenarios = [
+        [StreamSpec("v1", vgg, 0.25)]
+        + [StreamSpec(f"z{i}", zf, 0.55) for i in range(3)],
+        [StreamSpec(f"v{i}", vgg, 0.20) for i in range(2)]
+        + [StreamSpec(f"z{i}", zf, 8.0) for i in range(10)],
+    ]
+    for streams in scenarios:
+        mgr = ResourceManager(catalog, paper_profile_table())
+        sweep = mgr.allocate_sweep(streams)
+        for strat in ALL_STRATEGIES:
+            try:
+                expected = mgr.allocate(streams, strat)
+            except InfeasibleError:
+                assert sweep[strat.name] is None, strat.name
+                continue
+            got = sweep[strat.name]
+            assert got is not None, strat.name
+            assert abs(got.hourly_cost - expected.hourly_cost) < 1e-9
+            got.solution.validate()

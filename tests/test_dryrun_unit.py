@@ -21,8 +21,10 @@ _SCRIPT = textwrap.dedent("""
     from repro.configs import get_config, smoke_variant
     from repro.launch import steps as steps_lib
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):  # absent on older jax releases
+        mesh_kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **mesh_kwargs)
     cfg = smoke_variant(get_config("internlm2-1.8b"))
     with mesh:
         jitted, (st, ab), _ = steps_lib.make_train_setup(
@@ -31,6 +33,8 @@ _SCRIPT = textwrap.dedent("""
         lowered = jitted.lower(st, ab)
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax wraps it in a list
+            cost = cost[0] if cost else {}
         mem = compiled.memory_analysis()
         # decode too
         jd, (ps, tk, po, cs), _ = steps_lib.make_decode_setup(

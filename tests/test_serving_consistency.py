@@ -32,8 +32,13 @@ def _tokens(cfg, b, s):
 def test_prefill_decode_matches_train(arch):
     cfg = smoke_variant(get_config(arch))
     if cfg.num_experts:
-        # Make routing capacity-drop-free so train == serve exactly.
-        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.num_experts))
+        # Make routing capacity-drop-free so train == serve exactly, and run
+        # in float32: under bf16, near-tied gate scores can round differently
+        # on the train vs decode path and flip the top-k expert choice —
+        # an expected routing property, not a cache-consistency bug.
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=float(cfg.num_experts), dtype="float32"
+        )
     params = tfm.init_params(KEY, cfg)
     b, s, p = 2, 24, 16
     tokens = _tokens(cfg, b, s)
