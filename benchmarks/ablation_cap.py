@@ -35,7 +35,10 @@ def run() -> dict:
     for cap in (0.6, 0.7, 0.8, 0.9, 1.0):
         mgr = ResourceManager(CATALOG, table, utilization_cap=cap)
         plan = mgr.allocate(streams)
-        sim = simulate_plan(plan, table)
+        # The sweep judges every cap against the paper's fixed >= 90%
+        # performance goal (that is the ablation); the explicit target
+        # makes the choice visible instead of leaning on the default.
+        sim = simulate_plan(plan, table, target=0.9)
         peak = max(max(i.utilization) for i in sim["instances"])
         record(
             f"ablation_cap/{cap:.1f}", 0.0,

@@ -1,0 +1,163 @@
+"""Beyond-paper: live fleet churn — warm-start re-planning vs from-scratch.
+
+Replays a 500-stream, 200-event churn trace (camera joins/leaves, frame
+rate renegotiations, instance price drift) through the manager's
+`FleetController` and measures what the incremental re-planner buys:
+
+* per-event warm re-plan latency vs a from-scratch `allocate` of the same
+  fleet (sampled — cold solves are seconds each at this scale),
+* plan quality: the certified optimality gap of every warm plan (cost vs
+  the covering-LP lower bound) and the warm/cold cost ratio on the
+  sampled events,
+* churn behaviour: migration counts and warm/full mode mix.
+
+Emits ``BENCH_replan.json`` (the `scripts/perf_diff.py` row format, meta
+carries the headline speedup) which `scripts/check_bench.py` gates: the
+warm-start speedup must stay above its stored floor.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.catalog import paper_ec2_catalog
+from repro.core.manager import ResourceManager
+from repro.core.profiler import paper_profile_table
+from repro.core.streams import (
+    AnalysisProgram,
+    PriceChanged,
+    StreamAdded,
+    StreamRateChanged,
+    StreamRemoved,
+    StreamSpec,
+)
+
+from .common import record, write_json
+
+N_STREAMS = 500
+N_EVENTS = 200
+COLD_EVERY = 25  # sample a from-scratch solve every k-th event
+MAX_NODES = 20_000
+
+_VGG = AnalysisProgram("VGG-16", "vgg16")
+_ZF = AnalysisProgram("ZF", "zf")
+#: Five stream kinds (the paper's two programs at renegotiable rates) —
+#: the identical-stream multiplicity real camera fleets show.
+KINDS = [(_VGG, 0.25), (_VGG, 0.2), (_ZF, 0.5), (_ZF, 2.0), (_ZF, 5.0)]
+
+
+def _initial_fleet() -> list[StreamSpec]:
+    return [
+        StreamSpec(f"s{i}", *KINDS[i % len(KINDS)]) for i in range(N_STREAMS)
+    ]
+
+
+def _trace(ctrl, rng) -> list:
+    """One random churn event against the controller's live fleet."""
+    roll = rng.rand()
+    if roll < 0.30:
+        name = f"j{rng.randint(10**9)}"
+        return StreamAdded(StreamSpec(name, *KINDS[rng.randint(len(KINDS))]))
+    if roll < 0.55:
+        live = ctrl.fleet
+        return StreamRemoved(live[rng.randint(len(live))].name)
+    if roll < 0.95:
+        live = ctrl.fleet
+        s = live[rng.randint(len(live))]
+        rates = [fps for prog, fps in KINDS if prog.program_id == s.program.program_id]
+        return StreamRateChanged(s.name, rates[rng.randint(len(rates))])
+    bt = ("c4.2xlarge", "c4.8xlarge", "g2.2xlarge")[rng.randint(3)]
+    base = {"c4.2xlarge": 0.419, "c4.8xlarge": 1.675, "g2.2xlarge": 0.650}[bt]
+    return PriceChanged(bt, round(base * (1.0 + 0.05 * rng.randn()), 4))
+
+
+def run() -> dict:
+    rng = np.random.RandomState(1802)
+    table = paper_profile_table()
+    mgr = ResourceManager(paper_ec2_catalog(), table, max_nodes=MAX_NODES)
+    streams = _initial_fleet()
+
+    t0 = time.perf_counter()
+    mgr.allocate(streams)
+    t_reset = (time.perf_counter() - t0) * 1e6
+    ctrl = mgr.controller()
+    record(
+        "replan/reset", t_reset,
+        f"cost=${ctrl.plan.hourly_cost:.2f} bins={len(ctrl.plan.instances)} "
+        f"n={N_STREAMS}",
+    )
+
+    warm_us: list[float] = []
+    single_warm_us: list[float] = []  # single-stream events only (the AC)
+    cold_us: list[float] = []
+    cost_ratio: list[float] = []
+    gaps: list[float] = []
+    migrations = 0
+    modes = {"warm": 0, "full": 0, "noop": 0}
+    for i in range(N_EVENTS):
+        ev = _trace(ctrl, rng)
+        t0 = time.perf_counter()
+        r = ctrl.apply(ev)
+        dt = (time.perf_counter() - t0) * 1e6
+        modes[r.mode] = modes.get(r.mode, 0) + 1
+        migrations += len(r.migrated)
+        gaps.append(r.gap)
+        if r.mode == "noop":
+            continue
+        warm_us.append(dt)
+        if not isinstance(ev, PriceChanged):
+            single_warm_us.append(dt)
+        if i % COLD_EVERY == 0:
+            # From-scratch solve of the identical fleet on a fresh manager
+            # (no memoized formulation/tensors, same solver budget).
+            cold_mgr = ResourceManager(
+                tuple(mgr.catalog), table, max_nodes=MAX_NODES
+            )
+            fleet = list(ctrl.fleet)
+            t0 = time.perf_counter()
+            cold_plan = cold_mgr.allocate(fleet)
+            cold_us.append((time.perf_counter() - t0) * 1e6)
+            cost_ratio.append(r.plan.hourly_cost / cold_plan.hourly_cost)
+
+    med_single = float(np.median(single_warm_us))
+    med_cold = float(np.median(cold_us))
+    speedup = med_cold / med_single
+    record(
+        "replan/warm_event", float(np.median(warm_us)),
+        f"p90={np.percentile(warm_us, 90):.0f}us max_gap={max(gaps):.3%} "
+        f"modes={modes} migrations={migrations}",
+    )
+    record(
+        "replan/warm_single_stream", med_single,
+        f"single-stream events only (n={len(single_warm_us)})",
+    )
+    record(
+        "replan/cold_solve", med_cold,
+        f"sampled every {COLD_EVERY} events (n={len(cold_us)})",
+    )
+    record(
+        "replan/speedup_warm_vs_cold", 0.0,
+        f"{speedup:.1f}x (warm {med_single/1e3:.1f}ms vs cold "
+        f"{med_cold/1e3:.1f}ms) cost_ratio_mean={np.mean(cost_ratio):.4f}",
+    )
+    out = {
+        "speedup_warm_vs_cold": speedup,
+        "median_warm_us": med_single,
+        "median_cold_us": med_cold,
+        "cost_ratio_mean": float(np.mean(cost_ratio)),
+        "max_certified_gap": float(max(gaps)),
+        "modes": modes,
+        "migrations": migrations,
+    }
+    write_json(
+        "BENCH_replan.json",
+        prefix="replan/",
+        meta={
+            "n_streams": N_STREAMS,
+            "n_events": N_EVENTS,
+            "max_nodes": MAX_NODES,
+            **{k: v for k, v in out.items() if not isinstance(v, dict)},
+        },
+    )
+    return out

@@ -9,20 +9,36 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
   table6_strategies  — paper Table 6 (ST1/ST2/ST3 costs, 61/36/3% savings)
   solver_scaling     — beyond-paper solver study (exact vs arc-flow vs FFD)
   tpu_allocation     — beyond-paper TPU-cloud allocation scenario
+  churn_replan       — live-churn warm-start re-planning vs from-scratch
   roofline_report    — §Roofline table from dry-run artifacts
+
+Suites that emit a gated artifact (currently ``churn_replan`` →
+``BENCH_replan.json``) are checked against their stored regression floors
+by ``scripts/check_bench.py`` after they run; a floor violation fails the
+harness like any suite error.
 """
 import argparse
+import pathlib
+import subprocess
 import sys
 import traceback
+
+#: suite name -> artifact its run() emits, gated by scripts/check_bench.py.
+GATED_ARTIFACTS = {"churn": "BENCH_replan.json"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument(
+        "--no-gate", action="store_true",
+        help="skip the check_bench.py regression floors",
+    )
     args = ap.parse_args()
 
     from . import (
         ablation_cap,
+        churn_replan,
         fig5_framerate,
         fig6_streams,
         roofline_report,
@@ -42,6 +58,7 @@ def main() -> None:
         "solver": solver_scaling,
         "tpu": tpu_allocation,
         "ablation": ablation_cap,
+        "churn": churn_replan,
         "roofline": roofline_report,
     }
     selected = args.only or list(suites)
@@ -53,6 +70,13 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+            continue
+        artifact = GATED_ARTIFACTS.get(name)
+        if artifact and not args.no_gate:
+            gate = pathlib.Path(__file__).parent.parent / "scripts" / "check_bench.py"
+            proc = subprocess.run([sys.executable, str(gate), artifact])
+            if proc.returncode != 0:
+                failed.append(f"{name} (regression gate)")
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -31,7 +31,7 @@ def main() -> None:
 
     for strategy in ALL_STRATEGIES:
         plan = manager.allocate(streams, strategy)
-        sim = simulate_plan(plan, table)
+        sim = simulate_plan(plan, table, target=manager.utilization_cap)
         print(f"\n=== {strategy.name}: {strategy.description}")
         print(plan.summary())
         print(f"simulated performance: {sim['overall_performance']:.0%} "

@@ -68,7 +68,7 @@ def main() -> None:
     plan = manager.allocate(streams)
     print("=== allocation plan (exact MC-VBP solve)")
     print(plan.summary())
-    sim = simulate_plan(plan, table)
+    sim = simulate_plan(plan, table, target=manager.utilization_cap)
     print(f"simulated fleet performance: {sim['overall_performance']:.0%}\n")
 
     # Boot one engine per planned instance and serve its streams' requests.

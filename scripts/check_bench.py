@@ -1,0 +1,72 @@
+"""Benchmark regression gate: fail when a stored floor is violated.
+
+Usage:
+  python scripts/check_bench.py BENCH_replan.json [more.json ...]
+
+Each known artifact carries floors on headline metrics recorded in its
+``meta`` block (see ``benchmarks/common.write_json``).  The floors are
+deliberately conservative — far below the measured values on the
+recording machine — so the gate trips on real regressions (an algorithmic
+change that quietly kills the warm-start path), not on machine noise.
+Wired into ``benchmarks/run.py``: gated suites run the check after
+emitting their artifact.
+
+Exit code 0 = all floors met; 1 = violation or malformed artifact.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+#: artifact name -> {meta key: (comparator, floor/ceiling, description)}.
+FLOORS: dict[str, dict[str, tuple[str, float, str]]] = {
+    "BENCH_replan.json": {
+        # Acceptance: warm-start single-stream re-plan >= 5x faster than a
+        # from-scratch solve on the 500-stream churn benchmark (measured
+        # ~50x on the recording machine).
+        "speedup_warm_vs_cold": (">=", 5.0, "warm-start speedup floor"),
+        # Warm plans must stay within their certified optimality gap
+        # budget (the controller's fallback threshold plus slack).
+        "max_certified_gap": ("<=", 0.15, "certified gap ceiling"),
+        # And must not cost materially more than the cold plans they avoid.
+        "cost_ratio_mean": ("<=", 1.10, "warm/cold cost-ratio ceiling"),
+    },
+}
+
+
+def check(path: str) -> list[str]:
+    name = path.rsplit("/", 1)[-1]
+    rules = FLOORS.get(name)
+    if rules is None:
+        return [f"{name}: no floors registered (add it to FLOORS)"]
+    try:
+        meta = json.load(open(path))["meta"]
+    except (OSError, ValueError, KeyError) as e:
+        return [f"{name}: unreadable artifact ({e})"]
+    problems = []
+    for key, (op, bound, what) in rules.items():
+        value = meta.get(key)
+        if value is None:
+            problems.append(f"{name}: meta[{key!r}] missing ({what})")
+            continue
+        ok = value >= bound if op == ">=" else value <= bound
+        status = "ok" if ok else "FAIL"
+        print(f"{name}: {key} = {value:.4g} (need {op} {bound}) {status}")
+        if not ok:
+            problems.append(f"{name}: {what} violated: {value:.4g} !{op} {bound}")
+    return problems
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    problems = []
+    for path in sys.argv[1:]:
+        problems += check(path)
+    if problems:
+        print("\n".join(problems), file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

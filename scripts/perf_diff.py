@@ -7,15 +7,41 @@ Handles two artifact shapes:
   * dry-run artifacts (launch/dryrun.py output): roofline + collective
     metric comparison, as before;
   * benchmark row artifacts ({"meta": ..., "rows": {name: {"us": ...}}}),
-    e.g. BENCH_solver.json emitted by benchmarks/solver_scaling.py —
-    rows are matched by name and wall-time deltas reported, so solver PRs
-    can diff their timings against the recorded baseline.
+    e.g. BENCH_solver.json emitted by benchmarks/solver_scaling.py or
+    BENCH_replan.json from benchmarks/churn_replan.py — rows are matched
+    by name and wall-time deltas reported, so solver PRs can diff their
+    timings against the recorded baseline.  Numeric headline metrics the
+    emitter stored in "meta" (e.g. the re-plan artifact's
+    speedup_warm_vs_cold / max_certified_gap) are diffed alongside the
+    rows; scripts/check_bench.py gates the same keys against floors.
 """
 import json
 import sys
 
 
+def diff_meta(a: dict, b: dict) -> None:
+    keys = [
+        k
+        for k in sorted(set(a.get("meta", {})) | set(b.get("meta", {})))
+        if isinstance(a.get("meta", {}).get(k), (int, float))
+        or isinstance(b.get("meta", {}).get(k), (int, float))
+    ]
+    shown = False
+    for k in keys:
+        x, y = a["meta"].get(k), b["meta"].get(k)
+        if not (isinstance(x, (int, float)) and isinstance(y, (int, float))):
+            continue
+        if not shown:
+            print(f"{'meta metric':34s} {'before':>12s} {'after':>12s} {'delta':>8s}")
+            shown = True
+        delta = (y - x) / x if x else float("nan")
+        print(f"{k:34s} {x:12.4g} {y:12.4g} {delta:+8.1%}")
+    if shown:
+        print()
+
+
 def diff_rows(a: dict, b: dict) -> None:
+    diff_meta(a, b)
     rows_a, rows_b = a["rows"], b["rows"]
     names = sorted(set(rows_a) | set(rows_b))
     print(f"{'row':34s} {'before us':>12s} {'after us':>12s} {'delta':>8s}")

@@ -36,9 +36,18 @@ from .problem import (
     Solution,
     build_solution,
 )
-from .heuristics import best_fit_decreasing, first_fit_decreasing
-from .bincompletion import SolveStats, solve
-from .arcflow import ArcflowStats, solve_arcflow
+from .heuristics import (
+    HAS_JAX,
+    batched_fleet_costs,
+    best_fit_decreasing,
+    best_fit_decreasing_jax,
+    first_fit_decreasing,
+    first_fit_decreasing_jax,
+    pack_jax,
+    placement_scores,
+)
+from .bincompletion import SolveStats, pinned_solution, root_lower_bound, solve
+from .arcflow import ArcflowStats, dual_prices, solve_arcflow
 from .bruteforce import solve_bruteforce
 
 __all__ = [
@@ -52,11 +61,20 @@ __all__ = [
     "ProblemTensors",
     "Solution",
     "build_solution",
+    "HAS_JAX",
+    "batched_fleet_costs",
     "best_fit_decreasing",
+    "best_fit_decreasing_jax",
     "first_fit_decreasing",
+    "first_fit_decreasing_jax",
+    "pack_jax",
+    "placement_scores",
     "SolveStats",
+    "pinned_solution",
+    "root_lower_bound",
     "solve",
     "ArcflowStats",
+    "dual_prices",
     "solve_arcflow",
     "solve_bruteforce",
 ]

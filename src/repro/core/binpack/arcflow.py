@@ -52,7 +52,15 @@ from .problem import (
     build_solution,
 )
 
-__all__ = ["solve_arcflow", "ArcflowStats", "group_items", "enumerate_patterns"]
+__all__ = [
+    "solve_arcflow",
+    "ArcflowStats",
+    "group_items",
+    "enumerate_patterns",
+    "class_key",
+    "item_class_keys",
+    "dual_prices",
+]
 
 _EPS = 1e-9
 
@@ -96,6 +104,92 @@ def group_items(problem: Problem) -> tuple[list[np.ndarray], list[int], list[lis
         demands[c] += 1
         members[c].append(i)
     return classes, demands, members
+
+
+def class_key(choice_matrix: np.ndarray) -> bytes:
+    """Canonical byte key of one item class's (n_choices, dim) requirements.
+
+    Independent of fleet-level choice-axis padding, so the same stream kind
+    maps to the same key across different fleets (used by the controller to
+    price classes under churn)."""
+    return np.ascontiguousarray(
+        np.asarray(choice_matrix, dtype=np.float64).round(9)
+    ).tobytes()
+
+
+def item_class_keys(problem: Problem) -> list[bytes]:
+    """Per-item class keys (see `class_key`), one `tensors()` read."""
+    t = problem.tensors()
+    n_choices = t.n_choices.tolist()
+    return [
+        class_key(t.req[i, : n_choices[i]]) for i in range(len(problem.items))
+    ]
+
+
+def dual_prices(
+    problem: Problem, max_patterns: int = 200_000
+) -> tuple[dict[bytes, float], float]:
+    """Covering-LP dual prices per item class, reusable across fleet churn.
+
+    Returns ``(prices, lp_value)`` where ``prices[class_key] = y_c >= 0``
+    and ``lp_value = Σ demand_c · y_c`` is a certified lower bound on the
+    optimum for *this* problem.  Crucially the patterns are enumerated to
+    *capacity* maximality (per-class counts capped by what physically fits
+    in the largest bin, not by this fleet's demands), so dual feasibility
+    — ``pattern · y <= pattern cost`` for every feasible packing — is a
+    property of the catalog alone.  The prices therefore remain admissible
+    for ANY fleet over the same bin types and utilization cap: price
+    unseen classes at 0 and ``Σ demand'_c · y_c`` lower-bounds that
+    fleet's optimum.  This is what lets a live controller certify re-plan
+    gaps without re-solving an LP per event.
+    """
+    class_reqs, demands, _members = group_items(problem)
+    n_classes = len(class_reqs)
+    if n_classes == 0:
+        return {}, 0.0
+    caps = np.asarray(
+        [problem.effective_capacity(bt) for bt in problem.bin_types]
+    )
+    # Physical per-class count ceiling: any packing of n copies (choices
+    # freely mixed) satisfies n·min_choice_req[d] <= cap[d] per dimension,
+    # so n <= min over binding dims of cap_d / min_req_d.  (Per-choice
+    # "fits alone" counts would NOT be valid here: choices stressing
+    # disjoint dimensions can mix to beat every single-choice count.)
+    # Replaces the fleet's demand as the enumeration cap so patterns are
+    # capacity-maximal.
+    enum_demands = []
+    unbounded = []
+    for r in class_reqs:
+        r_min = np.asarray(r, dtype=np.float64).min(axis=0)  # (dim,)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            per_bin = np.where(
+                r_min[None, :] > _EPS,
+                np.floor(caps / np.maximum(r_min[None, :], 1e-300) + _EPS),
+                np.inf,
+            ).min(axis=-1)  # (n_bins,)
+        best = float(per_bin.max()) if per_bin.size else 0.0
+        unbounded.append(not np.isfinite(best) or best > 4096.0)
+        enum_demands.append(int(min(max(best, 1.0), 4096.0)))
+    pat_counts, pat_costs, _reps, truncated = _pattern_columns(
+        problem, class_reqs, enum_demands, max_patterns
+    )
+    if truncated or not pat_counts:
+        # A truncated enumeration breaks the admissibility argument (the
+        # LP would only be dual-feasible for the patterns it saw): no
+        # certificate is honest here, so price everything at zero and let
+        # callers fall back to the density bound.
+        return {class_key(r): 0.0 for r in class_reqs}, 0.0
+    pat_mat = np.asarray(pat_counts, dtype=np.float64)
+    pat_cost_arr = np.asarray(pat_costs, dtype=np.float64)
+    demands_f = np.asarray(demands, dtype=np.float64)
+    dual_y, _primal = _covering_lp(pat_mat, pat_cost_arr, demands_f)
+    # A class whose per-bin count had to be clamped could, in principle,
+    # pack denser than any enumerated pattern — its price is only safe at 0.
+    dual_y = np.where(unbounded, 0.0, dual_y)
+    prices = {
+        class_key(r): float(y) for r, y in zip(class_reqs, dual_y.tolist())
+    }
+    return prices, float(demands_f @ dual_y)
 
 
 def enumerate_patterns(
@@ -172,6 +266,67 @@ def enumerate_patterns(
 
     rec(0, np.asarray(cap, dtype=np.float64).tolist())
     return patterns
+
+
+def _pattern_columns(
+    problem: Problem,
+    class_reqs: Sequence[np.ndarray],
+    demands: Sequence[int],
+    max_patterns: int = 200_000,
+) -> tuple[list[list[int]], list[float], list[tuple[float, BinType, tuple]]]:
+    """Deduplicated, domination-pruned pattern columns over all bin types.
+
+    Patterns are reduced to per-class count vectors (choice splits covering
+    the same classes are interchangeable for the covering search; only the
+    cheapest representative matters), then dominated count vectors —
+    another column covering >= per class at <= cost with something strict —
+    are dropped in one chunked broadcast.  Returns (pat_counts, pat_costs,
+    pat_reps); all empty when nothing packs.
+    """
+    n_classes = len(class_reqs)
+    by_counts: dict[tuple[int, ...], tuple[float, BinType, tuple]] = {}
+    truncated = False
+    for bt in problem.bin_types:
+        cap = problem.effective_capacity(bt)
+        pats = enumerate_patterns(cap, class_reqs, demands, max_patterns)
+        # enumerate_patterns stops silently at its budget; record it so
+        # callers needing the FULL maximal-pattern set (dual_prices'
+        # admissibility argument) can degrade instead of over-certifying.
+        truncated = truncated or len(pats) >= max_patterns
+        for pat in pats:
+            vec = [0] * n_classes
+            for (class_i, _choice_i), cnt in pat:
+                vec[class_i] += cnt
+            key = tuple(vec)
+            old = by_counts.get(key)
+            if old is None or bt.cost < old[0] - _EPS:
+                by_counts[key] = (bt.cost, bt, pat)
+    if not by_counts:
+        return [], [], [], truncated
+
+    count_mat = np.asarray(list(by_counts.keys()), dtype=np.int64)
+    cost_arr = np.asarray([v[0] for v in by_counts.values()], dtype=np.float64)
+    # Skipped for very large pattern sets where the quadratic pass would
+    # cost more than it saves (reduced-cost column fixing prunes those).
+    n_pat = count_mat.shape[0]
+    keep_mask = np.ones(n_pat, dtype=bool)
+    if n_pat <= 6000:
+        chunk = max(1, min(n_pat, 4_000_000 // max(1, n_pat)))
+        for lo in range(0, n_pat, chunk):
+            hi = min(n_pat, lo + chunk)
+            geq = (count_mat[None, :, :] >= count_mat[lo:hi, None, :]).all(-1)
+            cheaper = cost_arr[None, :] <= cost_arr[lo:hi, None] + _EPS
+            strict = (count_mat[None, :, :] > count_mat[lo:hi, None, :]).any(-1) | (
+                cost_arr[None, :] < cost_arr[lo:hi, None] - _EPS
+            )
+            dominated = (geq & cheaper & strict).any(axis=1)
+            keep_mask[lo:hi] &= ~dominated
+    kept = np.where(keep_mask)[0]
+    reps = list(by_counts.values())
+    pat_counts = [count_mat[i].tolist() for i in kept.tolist()]
+    pat_costs = [float(cost_arr[i]) for i in kept.tolist()]
+    pat_reps = [reps[i] for i in kept.tolist()]
+    return pat_counts, pat_costs, pat_reps, truncated
 
 
 def _covering_lp(
@@ -259,47 +414,17 @@ def solve_arcflow(
         return build_solution(problem, [], []), stats
 
     # --- pattern generation, deduplicated to per-class count vectors ------
-    # Choice splits covering the same classes are interchangeable for the
-    # covering search; keep the cheapest representative per count vector.
-    by_counts: dict[tuple[int, ...], tuple[float, BinType, tuple]] = {}
-    for bt in problem.bin_types:
-        cap = problem.effective_capacity(bt)
-        for pat in enumerate_patterns(cap, class_reqs, demands):
-            vec = [0] * n_classes
-            for (class_i, _choice_i), cnt in pat:
-                vec[class_i] += cnt
-            key = tuple(vec)
-            old = by_counts.get(key)
-            if old is None or bt.cost < old[0] - _EPS:
-                by_counts[key] = (bt.cost, bt, pat)
-    if not by_counts:
+    # Truncation is survivable here (the DP still searches the enumerated
+    # patterns and the LP duals only prune within that set) but the result
+    # can no longer be certified optimal — better patterns may exist.
+    pat_counts, pat_costs, pat_reps, truncated = _pattern_columns(
+        problem, class_reqs, demands
+    )
+    if not pat_counts:
         raise InfeasibleError("no feasible packing exists")
-
-    count_mat = np.asarray(list(by_counts.keys()), dtype=np.int64)
-    cost_arr = np.asarray([v[0] for v in by_counts.values()], dtype=np.float64)
-    # Drop dominated patterns: another covers >= per class at <= cost (with
-    # something strict).  Chunked so the comparison stays one broadcast;
-    # skipped for very large pattern sets where the quadratic pass would
-    # cost more than it saves (column fixing below prunes those anyway).
-    n_pat = count_mat.shape[0]
-    keep_mask = np.ones(n_pat, dtype=bool)
-    if n_pat <= 6000:
-        chunk = max(1, min(n_pat, 4_000_000 // max(1, n_pat)))
-        for lo in range(0, n_pat, chunk):
-            hi = min(n_pat, lo + chunk)
-            geq = (count_mat[None, :, :] >= count_mat[lo:hi, None, :]).all(-1)
-            cheaper = cost_arr[None, :] <= cost_arr[lo:hi, None] + _EPS
-            strict = (count_mat[None, :, :] > count_mat[lo:hi, None, :]).any(-1) | (
-                cost_arr[None, :] < cost_arr[lo:hi, None] - _EPS
-            )
-            dominated = (geq & cheaper & strict).any(axis=1)
-            keep_mask[lo:hi] &= ~dominated
-    kept = np.where(keep_mask)[0]
-    reps = list(by_counts.values())
-    pat_counts = [count_mat[i].tolist() for i in kept.tolist()]
-    pat_costs = [float(cost_arr[i]) for i in kept.tolist()]
-    pat_reps = [reps[i] for i in kept.tolist()]
     stats.n_patterns = len(pat_counts)
+    if truncated:
+        stats.optimal = False
 
     pat_mat = np.asarray(pat_counts, dtype=np.float64)  # (P, K)
     pat_cost_arr = np.asarray(pat_costs, dtype=np.float64)

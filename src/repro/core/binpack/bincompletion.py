@@ -32,23 +32,44 @@ everything incrementally on the shared `ProblemTensors` cache:
 Optimality is certified when the search space is exhausted (`stats.optimal`).
 A node budget keeps worst cases bounded; on exhaustion the incumbent (never
 worse than FFD/BFD) is returned with `optimal=False`.
+
+Warm starts (the live re-planning loop): `solve` accepts
+
+* ``incumbent=`` — a feasible `Solution` whose cost seeds the upper bound.
+  A near-optimal incumbent (e.g. the previous plan repaired after a fleet
+  event) prunes most of the tree immediately, so re-plans certify in a
+  tiny fraction of a cold solve's nodes.  If the search finds nothing
+  strictly cheaper, the incumbent object itself is returned.
+* ``pinned=`` — pre-opened bins (`OpenBin`: type + existing load) whose
+  contents are fixed.  The solver packs only `problem.items` (the
+  displaced/new streams) into the pinned bins' residual effective capacity
+  or freshly opened bins, minimizing total cost (pinned bin costs are
+  included as a constant).  The returned solution is built over an
+  *augmented* problem in which each pinned bin's existing load appears as
+  one ghost item (name ``__pinned<j>``, single choice labelled
+  ``pinned``) assigned to bin ``j`` — see `pinned_solution` — so
+  `Solution.validate` holds exactly.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
 from .heuristics import best_fit_decreasing, first_fit_decreasing
 from .problem import (
     BinType,
+    Choice,
     InfeasibleError,
+    Item,
+    OpenBin,
     Problem,
     Solution,
     build_solution,
 )
 
-__all__ = ["solve", "SolveStats"]
+__all__ = ["solve", "SolveStats", "pinned_solution", "root_lower_bound"]
 
 _EPS = 1e-9
 _INF = float("inf")
@@ -85,8 +106,74 @@ def _non_dominated_bins(problem: Problem) -> list[int]:
     return keep or list(range(len(problem.bin_types)))
 
 
-def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, SolveStats]:
-    """Exact (within `max_nodes`) minimum-cost MC-VBP solve."""
+def root_lower_bound(problem: Problem) -> float:
+    """Admissible lower bound on any feasible solution's cost, O(n·dim).
+
+    The search's depth-0 bound with no open bins: the per-dimension
+    cost-density relaxation over total minimum demand, and the cheapest
+    host forced by the hardest single item (any solution contains a bin
+    that hosts that item, so costs at least its cheapest lone host).
+    """
+    t = problem.tensors()
+    n = t.req.shape[0]
+    if n == 0:
+        return 0.0
+    lb = 0.0
+    total = t.min_req.sum(axis=0)
+    for d in range(total.shape[0]):
+        bd = float(t.best_density[d])
+        if total[d] > _EPS and 0.0 < bd < _INF:
+            lb = max(lb, float(total[d]) / bd)
+    finite = t.cheapest_host[np.isfinite(t.cheapest_host)]
+    if finite.size:
+        lb = max(lb, float(finite.max()))
+    return lb
+
+
+def pinned_solution(
+    problem: Problem,
+    pinned: Sequence[OpenBin],
+    placements: Sequence[tuple[int, int, int]],
+    opened_new: Sequence[BinType],
+) -> Solution:
+    """Build a validated `Solution` for a pinned sub-solve.
+
+    `placements` are (item, choice, bin) triples over `problem.items`,
+    where bins ``0..len(pinned)-1`` are the pinned bins (in order) and
+    higher indices refer to `opened_new`.  Each pinned bin's existing load
+    becomes a ghost item appended after `problem.items`, so the standard
+    feasibility validation applies to the combined loads.  The solution's
+    cost covers pinned and new bins alike (the full fleet's hourly cost).
+    """
+    n = len(problem.items)
+    ghosts = tuple(
+        Item(f"__pinned{j}", (Choice("pinned", tuple(ob.load)),))
+        for j, ob in enumerate(pinned)
+    )
+    aug = Problem(
+        bin_types=problem.bin_types,
+        items=problem.items + ghosts,
+        utilization_cap=problem.utilization_cap,
+    )
+    all_placements = [(n + j, 0, j) for j in range(len(pinned))] + list(placements)
+    opened = [ob.bin_type for ob in pinned] + list(opened_new)
+    return build_solution(aug, all_placements, opened)
+
+
+def solve(
+    problem: Problem,
+    max_nodes: int = 2_000_000,
+    *,
+    incumbent: Solution | None = None,
+    pinned: Sequence[OpenBin] | None = None,
+) -> tuple[Solution, SolveStats]:
+    """Exact (within `max_nodes`) minimum-cost MC-VBP solve.
+
+    See the module docstring for the warm-start (`incumbent`) and
+    pinned-bin (`pinned`) semantics.  With `pinned`, costs — including the
+    returned solution's and any `incumbent`'s — are total fleet costs
+    (pinned bins included), so comparisons are apples-to-apples.
+    """
     t = problem.tensors()
     bad = np.where(~np.isfinite(t.cheapest_host))[0]
     if bad.size:
@@ -99,6 +186,21 @@ def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, Solve
     nd = _non_dominated_bins(problem)
     n = len(problem.items)
     dim = problem.dim
+    pinned = tuple(pinned or ())
+    n_pinned = len(pinned)
+    # Validate pinned loads up front (before any incumbent construction
+    # touches them): a pinned bin must respect its effective capacity.
+    pinned_resid: list[np.ndarray] = []
+    for j, ob in enumerate(pinned):
+        resid = problem.effective_capacity(ob.bin_type) - np.asarray(
+            ob.load, dtype=np.float64
+        )
+        if np.any(resid < -1e-6):
+            raise ValueError(
+                f"pinned bin {j} ({ob.bin_type.name}) overflows its "
+                f"effective capacity"
+            )
+        pinned_resid.append(np.maximum(resid, 0.0))
 
     # FFD order (decreasing tightness; dominated types never give the min
     # fraction, so the full-catalog key is identical).
@@ -158,16 +260,34 @@ def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, Solve
         for d in range(n)
     ]
 
-    # Incumbent from heuristics.
-    incumbent = min(
+    # Incumbent pool: FFD/BFD pack the free items into fresh bins (with
+    # pinned bins this ignores their residual space but stays feasible and
+    # keeps the guarantee "never worse than the heuristics"), plus the
+    # caller's warm start.  The cheapest seeds the upper bound and is
+    # returned as-is when the search finds nothing strictly better.
+    incumbent_sol = min(
         (first_fit_decreasing(problem), best_fit_decreasing(problem)),
         key=lambda s: s.cost,
     )
-    best_cost = incumbent.cost
+    if n_pinned:
+        incumbent_sol = pinned_solution(
+            problem,
+            pinned,
+            [
+                (a.item_index, a.choice_index, a.bin_index + n_pinned)
+                for a in incumbent_sol.assignments
+            ],
+            [b.bin_type for b in incumbent_sol.bins],
+        )
+    if incumbent is not None and incumbent.cost < incumbent_sol.cost - _EPS:
+        incumbent_sol = incumbent
+    best_cost = incumbent_sol.cost
     best_raw: tuple[list[tuple[int, int, int]], list[BinType]] | None = None
 
     # --- mutable search state --------------------------------------------
     cap_bins = 8
+    while cap_bins < n_pinned + 4:
+        cap_bins *= 2
     # Open-bin residuals, stored pre-shifted by +_EPS so every fit test is a
     # bare comparison (matches `req <= resid + eps` bit for bit).
     resid_eps = np.zeros((cap_bins, dim))
@@ -178,6 +298,20 @@ def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, Solve
     opened: list[BinType] = []
     placements: list[tuple[int, int, int]] = []
     cost = 0.0
+    # Pinned bins enter the search pre-opened: residual = effective
+    # capacity minus the existing load, cost counted as a constant.  They
+    # behave exactly like bins the search opened itself, except no branch
+    # ever closes them (they sit below the n_open floor).
+    for j, ob in enumerate(pinned):
+        resid = pinned_resid[j]
+        resid_eps[j] = resid + _EPS
+        resid_l[j] = resid.tolist()
+        bin_tot[j] = float(resid.sum())
+        for d in range(dim):
+            resid_sum[d] += float(resid[d])
+        opened.append(ob.bin_type)
+        cost += ob.bin_type.cost
+    n_open = n_pinned
     order_l = order.tolist()
     # Hot counters kept as locals; folded back into `stats` after the search.
     node_count = 0
@@ -358,8 +492,11 @@ def solve(problem: Problem, max_nodes: int = 2_000_000) -> tuple[Solution, Solve
     stats.optimal = not aborted
 
     if best_raw is None:
-        # Heuristic incumbent was already optimal (or node budget hit).
-        return incumbent, stats
+        # The seed incumbent was already optimal (or node budget hit).
+        return incumbent_sol, stats
     raw_placements, raw_opened = best_raw
-    sol = build_solution(problem, raw_placements, raw_opened)
+    if n_pinned:
+        sol = pinned_solution(problem, pinned, raw_placements, raw_opened[n_pinned:])
+    else:
+        sol = build_solution(problem, raw_placements, raw_opened)
     return sol, stats

@@ -19,8 +19,26 @@ All per-item work runs on the shared `ProblemTensors` cache: the sort keys
 and the new-bin scores are one batched computation each, and the fit test
 against open bins is a single `(bins, choices, dim)` broadcast per item
 instead of a Python loop over bins and choices.
+
+## The JAX kernel
+
+`_pack_core` is the same fit-test + scoring pass in a purely functional
+form: a `lax.scan` over items with fixed-size open-bin state, so it jits
+once per fleet shape and `jax.vmap` batches it over many fleets —
+thousands of candidate repair placements or what-if fleets (autoscaling
+lookahead) score in ONE dispatch (`batched_fleet_costs`).  All arithmetic
+runs in float64 (under `jax.experimental.enable_x64`), with the argmin /
+argmax first-occurrence rule shared by numpy and XLA, so the chosen
+placements are bit-equivalent to the numpy path — which stays as the
+reference implementation and the default for single fleets.
+`placement_scores` exposes the kernel's fit + slack scoring for a single
+(items × open bins) candidate matrix, used by the controller's repair
+step.  Everything degrades to numpy when JAX is unavailable
+(`HAS_JAX = False`).
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -28,21 +46,39 @@ from .problem import (
     BinType,
     InfeasibleError,
     Problem,
+    ProblemTensors,
     Solution,
     build_solution,
 )
 
-__all__ = ["first_fit_decreasing", "best_fit_decreasing"]
+try:  # pragma: no cover - exercised via HAS_JAX gating
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+
+    HAS_JAX = True
+except Exception:  # pragma: no cover
+    jax = None
+    HAS_JAX = False
+
+__all__ = [
+    "first_fit_decreasing",
+    "best_fit_decreasing",
+    "first_fit_decreasing_jax",
+    "best_fit_decreasing_jax",
+    "pack_jax",
+    "batched_fleet_costs",
+    "placement_scores",
+    "placement_scores_np",
+    "HAS_JAX",
+]
 
 _FIT_EPS = 1e-9  # absolute slack on capacity comparisons
 _FRAC_EPS = 1e-12  # relative slack on utilization fractions
 
 
-def _pack(problem: Problem, best_fit: bool) -> Solution:
-    t = problem.tensors()
-    n = len(problem.items)
-    dim = problem.dim
-
+def _check_feasible(problem: Problem, t: ProblemTensors) -> None:
     infeasible = np.where(~np.isfinite(t.cheapest_host))[0]
     if infeasible.size:
         item = problem.items[int(infeasible[0])]
@@ -50,13 +86,17 @@ def _pack(problem: Problem, best_fit: bool) -> Solution:
             f"item {item.name}: no (choice, bin type) fits even when alone"
         )
 
-    # Decreasing minimum normalized size; stable sort keeps input order on
-    # ties, matching the previous sorted(..., key=...) behaviour.
-    order = np.argsort(-t.min_frac(_FRAC_EPS), kind="stable")
 
-    # New-bin score per (item, bin type, choice): cheap bins the item nearly
-    # fills win over expensive bins it barely dents. +inf marks misfits.
-    # Computed for the whole fleet in one batch.
+def _pack_inputs(t: ProblemTensors) -> tuple[np.ndarray, np.ndarray]:
+    """(order, open_score): the packing pass's precomputed inputs.
+
+    Shared verbatim by the numpy and JAX paths so their decisions coincide.
+    `order` is decreasing minimum normalized size (stable, matching the
+    original sorted(..., key=...) behaviour).  `open_score` scores opening
+    a new bin per (item, bin type, choice): cheap bins the item nearly
+    fills win over expensive bins it barely dents; +inf marks misfits.
+    """
+    order = np.argsort(-t.min_frac(_FRAC_EPS), kind="stable")
     frac_tb = np.swapaxes(t.frac, 1, 2)  # (n, n_bt, max_choices)
     fits_new = (frac_tb <= 1.0 + _FRAC_EPS) & t.choice_mask[:, None, :]
     open_score = np.where(
@@ -64,6 +104,15 @@ def _pack(problem: Problem, best_fit: bool) -> Solution:
         t.costs[None, :, None] - 0.5 * t.costs[None, :, None] * np.minimum(frac_tb, 1.0),
         np.inf,
     )
+    return order, open_score
+
+
+def _pack(problem: Problem, best_fit: bool) -> Solution:
+    t = problem.tensors()
+    n = len(problem.items)
+    dim = problem.dim
+    _check_feasible(problem, t)
+    order, open_score = _pack_inputs(t)
 
     opened: list[BinType] = []
     # Growable dense state for the open bins.
@@ -130,3 +179,221 @@ def first_fit_decreasing(problem: Problem) -> Solution:
 
 def best_fit_decreasing(problem: Problem) -> Solution:
     return _pack(problem, best_fit=True)
+
+
+# --------------------------------------------------------------------------
+# JAX kernel: the same pass as `_pack`, as a pure function of arrays.
+# --------------------------------------------------------------------------
+
+
+def _pack_core(req, choice_mask, open_score, order, caps, costs, *, best_fit):
+    """One fleet's FFD/BFD pass as a `lax.scan` (jit- and vmap-able).
+
+    Inputs (all float64 under enable_x64):
+      req         (n, C, dim)  +inf-padded requirement tensor
+      choice_mask (n, C)       valid-choice booleans; an all-False row is a
+                               padding *item* and is skipped (what-if
+                               batches pad fleets to a common n with these)
+      open_score  (n, n_bt, C) new-bin scores from `_pack_inputs`
+      order       (n,)         processing order (FFD key, computed outside)
+      caps        (n_bt, dim)  effective capacities;  costs (n_bt,)
+
+    Returns ((bin_of_step, choice_of_step, new_bin_type_of_step), n_open,
+    total_cost): per processed item (in `order` order) the bin index it
+    landed in, the chosen choice, and the bin type opened at that step
+    (-1 when it reused an open bin; all -1 for padding items).
+    """
+    n, n_choices, _dim = req.shape
+
+    def step(state, xs):
+        loads, caps_open, open_mask, n_open, total_cost = state
+        req_i, mask_i, score_i = xs
+        valid = mask_i.any()
+        new_loads = loads[:, None, :] + req_i[None, :, :]
+        fit = (
+            jnp.all(new_loads <= caps_open[:, None, :] + _FIT_EPS, axis=-1)
+            & mask_i[None, :]
+            & open_mask[:, None]
+        )
+        any_fit = fit.any()
+        if best_fit:
+            # Minimize residual slack; argmin's first-minimum rule matches
+            # np.argmin, reproducing the bin-major, choice-minor tie-break.
+            slack = (
+                (caps_open[:, None, :] - new_loads)
+                / jnp.maximum(caps_open[:, None, :], 1e-300)
+            ).max(axis=-1)
+            pos = jnp.argmin(jnp.where(fit, slack, jnp.inf))
+        else:
+            pos = jnp.argmax(fit.ravel())
+        npos = jnp.argmin(score_i.ravel())  # (n_bt, C): type-major like numpy
+        use_open = valid & any_fit
+        opened_now = valid & ~any_fit
+        choice_i = jnp.where(use_open, pos % n_choices, npos % n_choices)
+        bin_i = jnp.where(use_open, pos // n_choices, n_open)
+        bt_i = npos // n_choices
+        delta = jnp.where(valid, req_i[choice_i], jnp.zeros_like(req_i[0]))
+        loads = loads.at[bin_i].add(delta)
+        caps_open = jnp.where(
+            opened_now, caps_open.at[n_open].set(caps[bt_i]), caps_open
+        )
+        open_mask = jnp.where(
+            opened_now, open_mask.at[n_open].set(True), open_mask
+        )
+        total_cost = total_cost + jnp.where(opened_now, costs[bt_i], 0.0)
+        n_open = n_open + opened_now
+        rec = (
+            jnp.where(valid, bin_i, -1),
+            jnp.where(valid, choice_i, -1),
+            jnp.where(opened_now, bt_i, -1),
+        )
+        return (loads, caps_open, open_mask, n_open, total_cost), rec
+
+    dim = req.shape[2]
+    init = (
+        jnp.zeros((n, dim), dtype=req.dtype),
+        jnp.zeros((n, dim), dtype=req.dtype),
+        jnp.zeros((n,), dtype=bool),
+        jnp.asarray(0, dtype=jnp.int32),
+        jnp.asarray(0.0, dtype=req.dtype),
+    )
+    xs = (req[order], choice_mask[order], open_score[order])
+    (_, _, _, n_open, total_cost), recs = lax.scan(step, init, xs)
+    return recs, n_open, total_cost
+
+
+@functools.lru_cache(maxsize=None)
+def _single_kernel(best_fit: bool):
+    return jax.jit(functools.partial(_pack_core, best_fit=best_fit))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_kernel(best_fit: bool):
+    return jax.jit(
+        jax.vmap(
+            functools.partial(_pack_core, best_fit=best_fit),
+            in_axes=(0, 0, 0, 0, None, None),
+        )
+    )
+
+
+def pack_jax(problem: Problem, *, best_fit: bool = False) -> Solution:
+    """FFD/BFD via the JAX kernel; placements match `_pack` exactly."""
+    if not HAS_JAX:  # graceful degradation, same result by construction
+        return _pack(problem, best_fit)
+    t = problem.tensors()
+    _check_feasible(problem, t)
+    order, open_score = _pack_inputs(t)
+    with enable_x64():
+        recs, n_open, _cost = _single_kernel(best_fit)(
+            t.req, t.choice_mask, open_score, order, t.caps, t.costs
+        )
+        bin_rec, choice_rec, bt_rec = (np.asarray(r) for r in recs)
+        n_open = int(n_open)
+    placements = [
+        (int(order[d]), int(choice_rec[d]), int(bin_rec[d]))
+        for d in range(order.shape[0])
+    ]
+    opened: list[BinType | None] = [None] * n_open
+    for d in range(order.shape[0]):
+        if bt_rec[d] >= 0:
+            opened[int(bin_rec[d])] = problem.bin_types[int(bt_rec[d])]
+    assert all(bt is not None for bt in opened)
+    return build_solution(problem, placements, opened)
+
+
+def first_fit_decreasing_jax(problem: Problem) -> Solution:
+    return pack_jax(problem, best_fit=False)
+
+
+def best_fit_decreasing_jax(problem: Problem) -> Solution:
+    return pack_jax(problem, best_fit=True)
+
+
+def batched_fleet_costs(
+    problems: "list[Problem]", *, best_fit: bool = False
+) -> np.ndarray:
+    """Heuristic packing cost of many what-if fleets in one dispatch.
+
+    All fleets must share the same bin types; fleets and choice axes are
+    padded to common (n, C) with all-False choice masks (the kernel skips
+    padding items).  Falls back to a per-fleet numpy loop without JAX.
+    """
+    if not problems:
+        return np.zeros(0)
+    if not HAS_JAX:
+        return np.asarray(
+            [_pack(p, best_fit).cost for p in problems], dtype=np.float64
+        )
+    ts = [p.tensors() for p in problems]
+    for p, t in zip(problems, ts):
+        _check_feasible(p, t)
+        assert np.array_equal(t.caps, ts[0].caps) and np.array_equal(
+            t.costs, ts[0].costs
+        ), "batched_fleet_costs requires a shared catalog"
+    n_max = max(t.req.shape[0] for t in ts)
+    c_max = max(t.req.shape[1] for t in ts)
+    n_bt, dim = ts[0].caps.shape[0], ts[0].caps.shape[1]
+    reqs = np.full((len(ts), n_max, c_max, dim), np.inf)
+    masks = np.zeros((len(ts), n_max, c_max), dtype=bool)
+    scores = np.full((len(ts), n_max, n_bt, c_max), np.inf)
+    orders = np.zeros((len(ts), n_max), dtype=np.int64)
+    for b, t in enumerate(ts):
+        n, c = t.req.shape[0], t.req.shape[1]
+        order, open_score = _pack_inputs(t)
+        reqs[b, :n, :c] = t.req
+        masks[b, :n, :c] = t.choice_mask
+        scores[b, :n, :, :c] = open_score
+        # Padding items processed last, as no-ops (all-False mask).
+        orders[b, :n] = order
+        orders[b, n:] = np.arange(n, n_max)
+    with enable_x64():
+        _recs, _n_open, costs = _batched_kernel(best_fit)(
+            reqs, masks, scores, orders, ts[0].caps, ts[0].costs
+        )
+        return np.asarray(costs, dtype=np.float64)
+
+
+def placement_scores(
+    req: np.ndarray, choice_mask: np.ndarray, resid: np.ndarray
+) -> np.ndarray:
+    """Best-fit slack score for every (item, choice, open bin) candidate.
+
+    `req` is (k, C, dim) (+inf padded), `resid` is (P, dim) residual
+    effective capacity.  Returns (k, C, P): the tightest-fit score (the
+    BFD rule's residual slack, lower is tighter), +inf where the candidate
+    does not fit.  One broadcast — the controller scores every repair
+    candidate for every displaced stream in a single dispatch (JAX when
+    available, numpy otherwise).
+    """
+    if HAS_JAX:
+        with enable_x64():
+            r = jnp.asarray(req)[:, :, None, :]  # (k, C, 1, dim)
+            rb = jnp.asarray(resid)[None, None, :, :]  # (1, 1, P, dim)
+            fit = jnp.all(r <= rb + _FIT_EPS, axis=-1) & jnp.asarray(
+                choice_mask
+            )[:, :, None]
+            slack = ((rb - r) / jnp.maximum(rb, 1e-300)).max(axis=-1)
+            # np.array (not asarray): device buffers come back read-only,
+            # and callers update columns in place between placements.
+            return np.array(jnp.where(fit, slack, jnp.inf))
+    return placement_scores_np(req, choice_mask, resid)
+
+
+def placement_scores_np(
+    req: np.ndarray, choice_mask: np.ndarray, resid: np.ndarray
+) -> np.ndarray:
+    """Numpy `placement_scores` (identical arithmetic).
+
+    Used as the no-JAX fallback and for cheap incremental updates — a
+    caller that batched the full candidate matrix once can rescore a
+    single bin's column here without another device dispatch.
+    """
+    r = np.asarray(req)[:, :, None, :]
+    rb = np.asarray(resid)[None, None, :, :]
+    with np.errstate(invalid="ignore"):
+        fit = np.all(r <= rb + _FIT_EPS, axis=-1) & np.asarray(choice_mask)[
+            :, :, None
+        ]
+        slack = ((rb - r) / np.maximum(rb, 1e-300)).max(axis=-1)
+    return np.where(fit, slack, np.inf)

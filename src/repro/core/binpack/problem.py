@@ -241,6 +241,103 @@ class ProblemTensors:
         ok = np.where(self.frac <= 1.0 + eps, self.frac, np.inf)
         return ok.min(axis=(1, 2)) if ok.size else np.full(ok.shape[0], np.inf)
 
+    def drop_items(self, keep: Sequence[int]) -> "ProblemTensors":
+        """Slice the item axis down to `keep` (in the given order).
+
+        The complement of `append_items`: together they let a live
+        controller carry one tensor build across fleet-churn events
+        (remove departed streams, append joined ones) instead of
+        re-deriving the full `(n, C, dim)` stack from the object model.
+        Bin-type arrays are shared, per-item arrays are numpy slices.
+        """
+        idx = np.asarray(list(keep), dtype=np.intp)
+        return ProblemTensors(
+            req=self.req[idx],
+            choice_mask=self.choice_mask[idx],
+            n_choices=self.n_choices[idx],
+            req_sum=self.req_sum[idx],
+            min_req=self.min_req[idx],
+            caps=self.caps,
+            cap_sums=self.cap_sums,
+            costs=self.costs,
+            frac=self.frac[idx],
+            fits_alone=self.fits_alone[idx],
+            cheapest_host=self.cheapest_host[idx],
+            best_density=self.best_density,
+        )
+
+    def append_items(self, other: "ProblemTensors") -> "ProblemTensors":
+        """Concatenate another tensor set's items after this one's.
+
+        Both sides must be built over the same bin types (caps/costs are
+        taken from `self` and asserted equal).  Choice axes are padded to
+        the wider of the two with the canonical +inf/False padding, so the
+        result is semantically identical to a cold `build` of the combined
+        problem (solvers never read padded slots).
+        """
+        assert self.caps.shape == other.caps.shape and np.array_equal(
+            self.caps, other.caps
+        ), "append_items requires identical bin types"
+        assert np.array_equal(self.costs, other.costs), (
+            "append_items requires identical bin costs"
+        )
+        max_c = max(self.req.shape[1], other.req.shape[1])
+
+        def _pad(t: "ProblemTensors"):
+            extra = max_c - t.req.shape[1]
+            if extra == 0:
+                return t.req, t.choice_mask, t.req_sum, t.frac, t.fits_alone
+            n, _, dim = t.req.shape
+            n_bt = t.frac.shape[2]
+            pad3 = np.full((n, extra, dim), np.inf)
+            padm = np.zeros((n, extra), dtype=bool)
+            pad2 = np.full((n, extra), np.inf)
+            padf = np.full((n, extra, n_bt), np.inf)
+            padb = np.zeros((n, extra, n_bt), dtype=bool)
+            return (
+                np.concatenate([t.req, pad3], axis=1),
+                np.concatenate([t.choice_mask, padm], axis=1),
+                np.concatenate([t.req_sum, pad2], axis=1),
+                np.concatenate([t.frac, padf], axis=1),
+                np.concatenate([t.fits_alone, padb], axis=1),
+            )
+
+        a, b = _pad(self), _pad(other)
+        return ProblemTensors(
+            req=np.concatenate([a[0], b[0]], axis=0),
+            choice_mask=np.concatenate([a[1], b[1]], axis=0),
+            n_choices=np.concatenate([self.n_choices, other.n_choices]),
+            req_sum=np.concatenate([a[2], b[2]], axis=0),
+            min_req=np.concatenate([self.min_req, other.min_req], axis=0),
+            caps=self.caps,
+            cap_sums=self.cap_sums,
+            costs=self.costs,
+            frac=np.concatenate([a[3], b[3]], axis=0),
+            fits_alone=np.concatenate([a[4], b[4]], axis=0),
+            cheapest_host=np.concatenate([self.cheapest_host, other.cheapest_host]),
+            best_density=self.best_density,
+        )
+
+    def with_costs(self, costs: Sequence[float]) -> "ProblemTensors":
+        """Re-price the bin types without rebuilding geometry.
+
+        Capacities (and therefore `frac`/`fits_alone`) are cost-invariant,
+        so a live price-change event only needs the three cost-derived
+        arrays recomputed — O(n·C·n_bt) instead of a full build.
+        """
+        new_costs = np.asarray(costs, dtype=np.float64)
+        assert new_costs.shape == self.costs.shape
+        host_cost = np.where(self.fits_alone, new_costs[None, None, :], np.inf)
+        n = self.req.shape[0]
+        return dataclasses.replace(
+            self,
+            costs=new_costs,
+            cheapest_host=(
+                host_cost.min(axis=(1, 2)) if n else np.zeros(0, dtype=np.float64)
+            ),
+            best_density=ProblemTensors._best_density(self.caps, new_costs),
+        )
+
     def restrict(
         self,
         bin_indices: Sequence[int],

@@ -1,0 +1,585 @@
+"""Dynamic fleet controller: warm-start incremental re-planning.
+
+The paper's manager runs in a *live* loop — cameras join, drop, and change
+desired frame rates, and instance prices drift — yet a from-scratch MC-VBP
+solve per change wastes almost all of its work: most of the fleet did not
+move.  `FleetController` owns a mutable fleet and re-plans incrementally:
+
+1. **Diff** the post-event fleet against the previous `AllocationPlan`.
+   Streams on untouched instances stay put; only the event's streams (a
+   join, or the re-rated stream) are *displaced*.
+2. **Pin** every bin that keeps its members: the previous plan's bins
+   enter `bincompletion.solve` pre-opened with their existing loads
+   (``pinned=``), so the exact search only decides where the displaced
+   streams go — into pinned residual capacity or fresh instances.
+3. **Repair** greedily first: every (displaced stream, choice, pinned
+   bin) candidate is scored in one batched dispatch
+   (`heuristics.placement_scores`, the JAX kernel's fit + slack rule),
+   and the resulting repaired solution seeds the sub-solve as its
+   warm-start incumbent (``incumbent=``).
+4. **Certify**: the warm plan's cost is compared against an admissible
+   lower bound on the *full* problem — the covering-LP dual prices from
+   `arcflow.dual_prices` (capacity-maximal patterns, so the prices stay
+   admissible under churn: unseen classes price at 0) maxed with
+   `bincompletion.root_lower_bound`.  Only when the certified gap exceeds
+   ``gap_threshold`` does the controller fall back to a full solve —
+   itself warm-started with the repaired plan as incumbent — and refresh
+   the dual prices.
+
+Tensor builds are incremental too: the new fleet's `ProblemTensors` are
+derived from the previous fleet's via `drop_items`/`append_items` (and
+`with_costs` for price events) instead of re-stacking the whole fleet.
+
+`what_if` batches many hypothetical fleets (autoscaling lookahead) through
+the JAX FFD kernel in one dispatch and returns their heuristic costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from .binpack import arcflow, bincompletion, heuristics
+from .binpack.problem import (
+    BinType,
+    OpenBin,
+    Problem,
+    Solution,
+    build_solution,
+)
+from .manager import AllocationPlan, PlacedStream
+from .strategies import ST3, Strategy
+from .streams import (
+    FleetEvent,
+    PriceChanged,
+    StreamAdded,
+    StreamRateChanged,
+    StreamRemoved,
+    StreamSpec,
+    apply_events,
+    fleet_key,
+)
+
+__all__ = ["FleetController", "ReplanResult"]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanResult:
+    """One re-plan step's outcome (`FleetController.apply`)."""
+
+    plan: AllocationPlan
+    mode: str  # "reset" | "noop" | "warm" | "full"
+    displaced: tuple[str, ...]  # streams that had to be (re)placed
+    migrated: tuple[str, ...]  # surviving streams whose instance changed
+    lower_bound: float  # certified LB on the optimal hourly cost
+    gap: float  # (plan cost - lower_bound) / lower_bound
+    nodes: int  # B&B nodes spent on this step
+
+
+@dataclasses.dataclass
+class _BinState:
+    """One open instance: stable identity + member streams."""
+
+    uid: int
+    bin_type: BinType
+    members: dict[str, str]  # stream name -> choice label ("cpu"/"accel")
+
+
+class FleetController:
+    """Owns a mutable fleet; re-plans incrementally on `FleetEvent`s.
+
+    Created via `ResourceManager.controller()` (or directly); `reset`
+    establishes the fleet with a full solve, `apply`/`apply_events` folds
+    churn events in.  All plans returned are full `AllocationPlan`s over
+    the current fleet, validated end to end.
+    """
+
+    def __init__(
+        self,
+        manager,
+        strategy: Strategy = ST3,
+        *,
+        gap_threshold: float = 0.1,
+        sub_max_nodes: int = 50_000,
+    ) -> None:
+        self.manager = manager
+        self.strategy = strategy
+        self.gap_threshold = gap_threshold
+        self.sub_max_nodes = sub_max_nodes
+        self._streams: list[StreamSpec] = []
+        self._problem: Problem | None = None
+        self._plan: AllocationPlan | None = None
+        self._bins: list[_BinState] = []
+        # Covering-LP class prices; None = not computed yet for this fleet
+        # era (they are refreshed lazily: `reset` is on `allocate`'s hot
+        # path and must not pay for pattern enumeration).
+        self._prices: dict[bytes, float] | None = None
+        self._uid = itertools.count()
+
+    # ------------------------------------------------------------------ API
+
+    @property
+    def fleet(self) -> tuple[StreamSpec, ...]:
+        return tuple(self._streams)
+
+    @property
+    def plan(self) -> AllocationPlan | None:
+        return self._plan
+
+    def reset(self, streams: Sequence[StreamSpec]) -> ReplanResult:
+        """Establish the fleet with a full (cold) solve."""
+        problem = self.manager.formulate(streams, self.strategy)
+        plan = self.manager._plan(streams, problem, self.strategy)
+        self._streams = list(streams)
+        self._problem = problem
+        self._adopt_solution(problem, plan.solution, match_old=False)
+        self._plan = plan
+        self._prices = None  # stale for the new fleet era; refreshed lazily
+        lb = bincompletion.root_lower_bound(problem)
+        if plan.optimal:
+            lb = max(lb, plan.hourly_cost)  # an exact solve IS a lower bound
+        return ReplanResult(
+            plan=plan,
+            mode="reset",
+            displaced=tuple(s.name for s in streams),
+            migrated=(),
+            lower_bound=lb,
+            gap=_gap(plan.hourly_cost, lb),
+            nodes=0,
+        )
+
+    def apply_events(self, events: Sequence[FleetEvent]) -> list[ReplanResult]:
+        return [self.apply(ev) for ev in events]
+
+    def apply(self, event: FleetEvent) -> ReplanResult:
+        """Fold one fleet event in; re-plan incrementally.
+
+        Raises `InfeasibleError` when the event makes the fleet
+        unplaceable (e.g. a rate no device can reach); after any exception
+        mid-replan the controller's state is stale — call `reset` before
+        further events.
+        """
+        if self._problem is None:
+            raise RuntimeError("FleetController.apply before reset()")
+        if isinstance(event, PriceChanged):
+            return self._apply_price(event)
+        new_streams = list(apply_events(self._streams, [event]))
+        if fleet_key(new_streams) == fleet_key(self._streams):
+            assert self._plan is not None
+            lb = self._lower_bound(self._problem)
+            return ReplanResult(
+                plan=self._plan,
+                mode="noop",
+                displaced=(),
+                migrated=(),
+                lower_bound=lb,
+                gap=_gap(self._plan.hourly_cost, lb),
+                nodes=0,
+            )
+
+        # Displaced streams: appended at the fleet's tail by apply_events.
+        if isinstance(event, StreamAdded):
+            displaced_names = {event.stream.name}
+        elif isinstance(event, StreamRateChanged):
+            displaced_names = {event.name}
+        else:  # StreamRemoved
+            displaced_names = set()
+
+        # Evict departed/displaced members from the bin states; bins that
+        # keep at least one member are pinned, emptied bins close.
+        gone = {event.name} if isinstance(event, StreamRemoved) else set()
+        for b in self._bins:
+            for name in displaced_names | gone:
+                b.members.pop(name, None)
+        self._bins = [b for b in self._bins if b.members]
+
+        problem = self._formulate_incremental(new_streams)
+        n_kept = len(new_streams) - len(displaced_names)
+        return self._replan(problem, new_streams, n_kept, displaced_names)
+
+    def what_if(
+        self, fleets: Sequence[Sequence[StreamSpec]], *, best_fit: bool = False
+    ) -> np.ndarray:
+        """Heuristic hourly cost of many hypothetical fleets, one dispatch.
+
+        Autoscaling lookahead: formulate each candidate fleet (memoized by
+        the manager) and push all of them through the batched JAX FFD/BFD
+        kernel.  Costs are heuristic upper bounds, cheap enough to rank
+        hundreds of scenarios per tick.
+        """
+        problems = [
+            self.manager.formulate(list(f), self.strategy) for f in fleets
+        ]
+        return heuristics.batched_fleet_costs(problems, best_fit=best_fit)
+
+    # ------------------------------------------------------------ internals
+
+    def _replan(
+        self,
+        problem: Problem,
+        new_streams: list[StreamSpec],
+        n_kept: int,
+        displaced_names: set[str],
+    ) -> ReplanResult:
+        old_uid_of = self._uid_map()
+        pinned_bins = list(self._bins)
+        pinned = [
+            OpenBin(bin_type=b.bin_type, load=self._bin_load(b, new_streams))
+            for b in pinned_bins
+        ]
+        n_total = len(new_streams)
+        sub_items = tuple(problem.items[n_kept:n_total])
+        sub_problem = Problem(
+            bin_types=problem.bin_types,
+            items=sub_items,
+            utilization_cap=problem.utilization_cap,
+        )
+        if sub_items and "_tensors" not in sub_problem.__dict__:
+            object.__setattr__(
+                sub_problem,
+                "_tensors",
+                problem.tensors().drop_items(range(n_kept, n_total)),
+            )
+
+        # Greedy repair scored in one batched dispatch, then the exact
+        # pinned sub-solve seeded with it as warm-start incumbent.
+        repair_placements, repair_opened = self._greedy_repair(
+            sub_problem, pinned
+        )
+        incumbent = bincompletion.pinned_solution(
+            sub_problem, pinned, repair_placements, repair_opened
+        )
+        sol, stats = bincompletion.solve(
+            sub_problem,
+            max_nodes=self.sub_max_nodes,
+            incumbent=incumbent,
+            pinned=pinned,
+        )
+        nodes = stats.nodes
+        lb = self._lower_bound(problem)
+        gap = _gap(sol.cost, lb)
+
+        # Adopt the warm (pinned) solution into the bin states; the full
+        # fallback then reads it back as its warm-start incumbent.
+        self._adopt_pinned_solution(pinned_bins, sub_problem, sol)
+        if gap <= self.gap_threshold:
+            mode = "warm"
+            optimal = gap <= _EPS  # only a met lower bound certifies globally
+        else:
+            mode = "full"
+            # Warm-started full re-solve through the manager's solver
+            # routing, then refresh the dual prices for the new era.
+            full_incumbent = self._full_solution(problem, new_streams)
+            full_sol, optimal = self.manager._solve(
+                problem, incumbent=full_incumbent
+            )
+            self._adopt_solution(problem, full_sol, match_old=True)
+            self._refresh_prices(problem)
+            lb = self._lower_bound(problem)
+            gap = _gap(full_sol.cost, lb)
+
+        self._streams = new_streams
+        self._problem = problem
+        self._plan = self._assemble(problem, optimal=optimal)
+        migrated = tuple(
+            name
+            for name, uid in self._uid_map().items()
+            if name in old_uid_of
+            and name not in displaced_names
+            and uid != old_uid_of[name]
+        )
+        return ReplanResult(
+            plan=self._plan,
+            mode=mode,
+            displaced=tuple(sorted(displaced_names)),
+            migrated=migrated,
+            lower_bound=lb,
+            gap=gap,
+            nodes=nodes,
+        )
+
+    def _apply_price(self, event: PriceChanged) -> ReplanResult:
+        """Re-price the catalog; keep the plan if its gap stays certified.
+
+        The catalog lives on the (shared) manager, so EVERY live
+        controller's state is re-priced — a sibling strategy's pinned bins
+        must not keep charging stale costs.
+        """
+        mgr = self.manager
+        if not any(bt.name == event.instance_type for bt in mgr.catalog):
+            raise KeyError(f"no instance type {event.instance_type!r}")
+        mgr.catalog = tuple(
+            dataclasses.replace(bt, cost=event.cost)
+            if bt.name == event.instance_type
+            else bt
+            for bt in mgr.catalog
+        )
+        mgr._formulate_cache.clear()  # cached Problems embed stale prices
+        by_name = {bt.name: bt for bt in mgr.catalog}
+        for ctrl in mgr._controllers.values():
+            if ctrl is not self:
+                ctrl._reprice(by_name)
+        self._reprice(by_name)
+        # Price moves invalidate the dual prices (a cut may tighten or
+        # break); refresh before certifying.
+        self._refresh_prices(self._problem)
+        return self._replan(
+            self._problem, list(self._streams), len(self._streams), set()
+        )
+
+    def _reprice(self, by_name: dict[str, BinType]) -> None:
+        """Adopt a re-priced catalog into this controller's live state:
+        bin states point at the new `BinType`s, the cached problem is
+        re-formulated with cost-only tensor updates, and the dual prices
+        are marked stale.  The refreshed plan keeps its placements but is
+        no longer certified (``optimal=False``)."""
+        for b in self._bins:
+            b.bin_type = by_name[b.bin_type.name]
+        if self._problem is None:
+            return
+        old_t = self._problem.tensors()
+        problem = self.manager.formulate(self._streams, self.strategy)
+        if "_tensors" not in problem.__dict__:
+            new_costs = [bt.cost for bt in problem.bin_types]
+            object.__setattr__(problem, "_tensors", old_t.with_costs(new_costs))
+        self._problem = problem
+        self._prices = None
+        self._plan = self._assemble(problem, optimal=False)
+
+    def _formulate_incremental(self, new_streams: list[StreamSpec]) -> Problem:
+        """Formulate the new fleet, deriving tensors from the previous ones.
+
+        `apply_events` keeps survivors in order and appends changed/new
+        streams, so the new tensor stack is `drop_items(kept positions)`
+        of the old one plus a `build` over just the appended tail.
+        """
+        problem = self.manager.formulate(new_streams, self.strategy)
+        if "_tensors" in problem.__dict__ or self._problem is None:
+            return problem
+        old_pos = {s: i for i, s in enumerate(self._streams)}
+        split = len(new_streams)
+        for k, s in enumerate(new_streams):
+            if s not in old_pos:
+                split = k
+                break
+        kept = [old_pos[s] for s in new_streams[:split]]
+        tail = new_streams[split:]
+        if any(s in old_pos for s in tail):
+            return problem  # unexpected order; fall back to a cold build
+        derived = self._problem.tensors().drop_items(kept)
+        if tail:
+            fragment = Problem(
+                bin_types=problem.bin_types,
+                items=tuple(problem.items[split:]),
+                utilization_cap=problem.utilization_cap,
+            )
+            derived = derived.append_items(fragment.tensors())
+        object.__setattr__(problem, "_tensors", derived)
+        return problem
+
+    def _greedy_repair(
+        self, sub_problem: Problem, pinned: list[OpenBin]
+    ) -> tuple[list[tuple[int, int, int]], list[BinType]]:
+        """FFD over displaced items with the pinned residuals pre-open.
+
+        Fit + tightness for every (item, choice, bin) candidate comes from
+        one `placement_scores` dispatch per placement; new bins open by
+        the FFD cost-density rule when nothing fits.
+        """
+        t = sub_problem.tensors()
+        k = t.req.shape[0]
+        if k == 0:
+            return [], []
+        heuristics._check_feasible(sub_problem, t)
+        order, open_score = heuristics._pack_inputs(t)
+        resid: list[np.ndarray] = [
+            sub_problem.effective_capacity(ob.bin_type)
+            - np.asarray(ob.load, dtype=np.float64)
+            for ob in pinned
+        ]
+        # The full (item, choice, bin) candidate matrix scores in ONE
+        # dispatch; each placement then rescores only the touched bin's
+        # column (and new bins append columns) in numpy.
+        scores = (
+            heuristics.placement_scores(t.req, t.choice_mask, np.asarray(resid))
+            if resid
+            else np.full((k, t.req.shape[1], 0), np.inf)
+        )
+        opened: list[BinType] = []
+        placements: list[tuple[int, int, int]] = []
+        for item_i in order.tolist():
+            row = scores[item_i]  # (C, P)
+            pos = int(row.argmin()) if row.size else 0
+            if row.size and np.isfinite(row.ravel()[pos]):
+                choice_i, bin_i = divmod(pos, row.shape[1])
+                resid[bin_i] = resid[bin_i] - t.req[item_i, choice_i]
+            else:
+                pos = int(open_score[item_i].argmin())
+                assert np.isfinite(open_score[item_i].ravel()[pos])
+                bt_i, choice_i = divmod(pos, open_score.shape[2])
+                bt = sub_problem.bin_types[bt_i]
+                bin_i = len(resid)
+                resid.append(
+                    sub_problem.effective_capacity(bt) - t.req[item_i, choice_i]
+                )
+                opened.append(bt)
+                scores = np.concatenate(
+                    [scores, np.full((k, scores.shape[1], 1), np.inf)], axis=2
+                )
+            placements.append((item_i, choice_i, bin_i))
+            scores[:, :, bin_i] = heuristics.placement_scores_np(
+                t.req, t.choice_mask, resid[bin_i][None, :]
+            )[:, :, 0]
+        return placements, opened
+
+    # ---------------------------------------------------------- state plumbing
+
+    def _bin_load(
+        self, b: _BinState, streams: Sequence[StreamSpec]
+    ) -> tuple[float, ...]:
+        """Recompute a pinned bin's load from its members' profiles."""
+        by_name = {s.name: s for s in streams}
+        load = np.zeros(len(b.bin_type.capacity))
+        for name, label in b.members.items():
+            s = by_name[name]
+            prof = self.manager.profiles.get(
+                s.program.program_id, str(s.frame_size), label
+            )
+            assert prof is not None
+            load += prof.at_fps(s.desired_fps)
+        return tuple(load.tolist())
+
+    def _uid_map(self) -> dict[str, int]:
+        return {
+            name: b.uid for b in self._bins for name in b.members
+        }
+
+    def _adopt_solution(
+        self, problem: Problem, solution: Solution, *, match_old: bool
+    ) -> None:
+        """Rebuild bin states from a full-fleet solution.
+
+        With `match_old`, bins identical to a previous bin (same type and
+        member set) inherit its uid so unchanged instances don't count as
+        migrations under a full re-solve.
+        """
+        old = (
+            {
+                (b.bin_type.name, frozenset(b.members.items())): b.uid
+                for b in self._bins
+            }
+            if match_old
+            else {}
+        )
+        bins: list[_BinState] = [
+            _BinState(uid=-1, bin_type=b.bin_type, members={})
+            for b in solution.bins
+        ]
+        for a in solution.assignments:
+            item = problem.items[a.item_index]
+            label = item.choices[a.choice_index].label
+            bins[a.bin_index].members[item.name] = label
+        for b in bins:
+            key = (b.bin_type.name, frozenset(b.members.items()))
+            b.uid = old.get(key, -1)
+            if b.uid < 0:
+                b.uid = next(self._uid)
+        self._bins = bins
+
+    def _adopt_pinned_solution(
+        self,
+        pinned_bins: list[_BinState],
+        sub_problem: Problem,
+        solution: Solution,
+    ) -> None:
+        """Fold a pinned sub-solve back into the bin states.
+
+        `solution` is the augmented form from `pinned_solution`: bins
+        ``0..P-1`` are the pinned bins (uids preserved), later bins are
+        new instances; ghost-item assignments are skipped.
+        """
+        n_free = len(sub_problem.items)
+        n_pinned = len(pinned_bins)
+        bins = list(pinned_bins)
+        for b in solution.bins[n_pinned:]:
+            bins.append(
+                _BinState(uid=next(self._uid), bin_type=b.bin_type, members={})
+            )
+        for a in solution.assignments:
+            if a.item_index >= n_free:
+                continue  # ghost (pinned load) item
+            item = sub_problem.items[a.item_index]
+            label = item.choices[a.choice_index].label
+            bins[a.bin_index].members[item.name] = label
+        self._bins = [b for b in bins if b.members]
+
+    def _full_solution(
+        self, problem: Problem, streams: Sequence[StreamSpec]
+    ) -> Solution:
+        """The current bin states as a full-fleet `Solution` of `problem`."""
+        name_to_idx = {s.name: i for i, s in enumerate(streams)}
+        placements: list[tuple[int, int, int]] = []
+        opened: list[BinType] = []
+        for bin_i, b in enumerate(self._bins):
+            opened.append(b.bin_type)
+            for name, label in b.members.items():
+                i = name_to_idx[name]
+                choice_i = next(
+                    c
+                    for c, ch in enumerate(problem.items[i].choices)
+                    if ch.label == label
+                )
+                placements.append((i, choice_i, bin_i))
+        return build_solution(problem, placements, opened)
+
+    def _assemble(self, problem: Problem, *, optimal: bool) -> AllocationPlan:
+        """Current bin states -> validated `AllocationPlan`."""
+        self._bins = [b for b in self._bins if b.members]
+        streams = self._streams
+        solution = self._full_solution(problem, streams)
+        by_name = {s.name: s for s in streams}
+        placements = tuple(
+            PlacedStream(
+                stream=by_name[problem.items[a.item_index].name],
+                instance_index=a.bin_index,
+                instance_type=solution.bins[a.bin_index].bin_type.name,
+                device=problem.items[a.item_index]
+                .choices[a.choice_index]
+                .label,
+            )
+            for a in solution.assignments
+        )
+        return AllocationPlan(
+            strategy=self.strategy.name,
+            instances=tuple(b.bin_type.name for b in solution.bins),
+            placements=placements,
+            hourly_cost=solution.cost,
+            optimal=optimal,
+            solution=solution,
+        )
+
+    def _refresh_prices(self, problem: Problem) -> None:
+        try:
+            self._prices, _ = arcflow.dual_prices(problem)
+        except Exception:  # pattern blow-up etc.: density bound still holds
+            self._prices = {}
+
+    def _lower_bound(self, problem: Problem) -> float:
+        """Certified LB: class dual prices maxed with the density bound."""
+        if self._prices is None:
+            self._refresh_prices(problem)
+        lb = bincompletion.root_lower_bound(problem)
+        if self._prices:
+            keys = arcflow.item_class_keys(problem)
+            lb = max(lb, sum(self._prices.get(key, 0.0) for key in keys))
+        return lb
+
+
+def _gap(cost: float, lb: float) -> float:
+    if lb <= _EPS:
+        return 0.0 if cost <= _EPS else float("inf")
+    return max(0.0, (cost - lb) / lb)

@@ -88,6 +88,8 @@ class ResourceManager:
         # cross-checks, simulator re-plans, benchmark timing loops) reuse
         # one Problem instance and therefore one ProblemTensors build.
         self._formulate_cache: dict[tuple, Problem] = {}
+        # Live re-planning controllers, one per strategy name (lazy).
+        self._controllers: dict[str, object] = {}
 
     def formulate(
         self, streams: Sequence[StreamSpec], strategy: Strategy = ST3
@@ -115,16 +117,47 @@ class ResourceManager:
         problem = Problem(
             bin_types=bins, items=tuple(items), utilization_cap=self.utilization_cap
         )
-        if len(self._formulate_cache) > 64:
-            self._formulate_cache.clear()
+        # Evict oldest-first (dict insertion order): wholesale clearing
+        # thrashed workloads alternating between >64 fleets, rebuilding
+        # every tensor cache each cycle.
+        while len(self._formulate_cache) >= 64:
+            self._formulate_cache.pop(next(iter(self._formulate_cache)))
         self._formulate_cache[key] = problem
         return problem
+
+    def controller(self, strategy: Strategy = ST3, **kwargs):
+        """The live re-planning controller for `strategy` (one per name).
+
+        `allocate` delegates through it, so after any allocation the
+        controller holds the fleet and `replan` can fold churn events in
+        incrementally (see `core.controller.FleetController`)."""
+        ctrl = self._controllers.get(strategy.name)
+        if ctrl is None:
+            from .controller import FleetController
+
+            ctrl = FleetController(self, strategy, **kwargs)
+            self._controllers[strategy.name] = ctrl
+        else:
+            # Reconfigure in place — replacing would silently drop the
+            # live fleet state a prior allocate() established.
+            for key, value in kwargs.items():
+                if key not in ("gap_threshold", "sub_max_nodes"):
+                    raise TypeError(f"unknown controller option {key!r}")
+                setattr(ctrl, key, value)
+        return ctrl
 
     def allocate(
         self, streams: Sequence[StreamSpec], strategy: Strategy = ST3
     ) -> AllocationPlan:
-        problem = self.formulate(streams, strategy)
-        return self._plan(streams, problem, strategy)
+        return self.controller(strategy).reset(streams).plan
+
+    def replan(self, events, strategy: Strategy = ST3):
+        """Apply fleet events to the last allocated fleet, incrementally.
+
+        Returns the `ReplanResult` list (one per event); requires a prior
+        `allocate` (or `controller().reset`) under the same strategy.
+        """
+        return self.controller(strategy).apply_events(list(events))
 
     def allocate_sweep(
         self,
@@ -210,21 +243,39 @@ class ResourceManager:
             solution=solution,
         )
 
-    def _solve(self, problem: Problem) -> tuple[Solution, bool]:
+    def _solve(
+        self, problem: Problem, incumbent: Solution | None = None
+    ) -> tuple[Solution, bool]:
         """Solver selection. "auto" mirrors VPSolver's strength: when the
         fleet groups into few identical-stream classes (the common camera
         case) the arc-flow pattern DP is exact and orders of magnitude
-        faster than the placement B&B; otherwise fall back to
-        bin-completion, keeping whichever incumbent is cheaper."""
+        faster than the placement B&B; when the demand lattice is too big
+        for the exact DP but the class structure still holds (hundreds of
+        cameras over a handful of stream kinds), the budgeted arc-flow's
+        LP-rounding incumbent beats the budgeted B&B by a wide margin, so
+        it is preferred there too.  Otherwise fall back to bin-completion,
+        keeping whichever incumbent is cheaper.
+
+        `incumbent` is an optional warm start (a feasible Solution of
+        `problem`, e.g. a repaired previous plan): bin-completion seeds
+        its upper bound with it, and the arc-flow paths return whichever
+        of (their solution, the incumbent) is cheaper."""
         from .binpack import arcflow
 
+        def merged(sol: Solution, optimal: bool) -> tuple[Solution, bool]:
+            if incumbent is not None and incumbent.cost < sol.cost - 1e-9:
+                return incumbent, False
+            return sol, optimal
+
         if self.solver == "heuristic":
-            return heuristics.first_fit_decreasing(problem), False
+            return merged(heuristics.first_fit_decreasing(problem), False)
         if self.solver == "arcflow":
             sol, st = arcflow.solve_arcflow(problem)
-            return sol, st.optimal
+            return merged(sol, st.optimal)
         if self.solver == "bincompletion":
-            sol, st = bincompletion.solve(problem, max_nodes=self.max_nodes)
+            sol, st = bincompletion.solve(
+                problem, max_nodes=self.max_nodes, incumbent=incumbent
+            )
             return sol, st.optimal
         # auto.  math.prod: the demand lattice size is exact under arbitrary
         # precision — np.prod silently wrapped to a negative int64 on large
@@ -233,16 +284,29 @@ class ResourceManager:
         if len(classes) <= 6 and math.prod(d + 1 for d in demands) <= 200_000:
             sol, st = arcflow.solve_arcflow(problem)
             if st.optimal:
-                return sol, True
+                return merged(sol, True)
             # Budgeted arc-flow returned its incumbent: cross-check with the
             # (also budgeted) exact B&B and keep the cheaper plan — or the
             # arc-flow plan with certified optimality if the B&B proves the
             # same cost optimal.
-            bc_sol, bc_st = bincompletion.solve(problem, max_nodes=self.max_nodes)
+            bc_sol, bc_st = bincompletion.solve(
+                problem, max_nodes=self.max_nodes, incumbent=incumbent
+            )
             if bc_sol.cost < sol.cost - 1e-9:
                 return bc_sol, bc_st.optimal
             if bc_st.optimal and bc_sol.cost <= sol.cost + 1e-9:
                 return sol, True
-            return sol, False
-        sol, st = bincompletion.solve(problem, max_nodes=self.max_nodes)
+            return merged(sol, False)
+        if len(classes) <= 12 and len(problem.items) >= 4 * len(classes):
+            # High-multiplicity fleet, lattice too big for the exact DP:
+            # budgeted arc-flow (pattern LP + rounding) lands within ~1% of
+            # the covering-LP bound where the budgeted B&B strands 15-20%
+            # above it.
+            sol, st = arcflow.solve_arcflow(
+                problem, max_dp_states=min(self.max_nodes, 200_000)
+            )
+            return merged(sol, st.optimal)
+        sol, st = bincompletion.solve(
+            problem, max_nodes=self.max_nodes, incumbent=incumbent
+        )
         return sol, st.optimal

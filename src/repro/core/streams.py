@@ -1,9 +1,32 @@
-"""Stream and analysis-program abstractions (paper §3.1 factors 2 & 3)."""
+"""Stream and analysis-program abstractions (paper §3.1 factors 2 & 3).
+
+Besides the static fleet model (`StreamSpec`), this module defines the
+*fleet event* vocabulary consumed by `core.controller.FleetController`:
+cameras join (`StreamAdded`), drop (`StreamRemoved`), renegotiate frame
+rates (`StreamRateChanged`), and the cloud re-prices instance types
+(`PriceChanged`).  `apply_events` is the pure fleet-transition function
+(price events leave the stream list untouched), and `fleet_key` is the
+canonical order-insensitive fingerprint used to detect no-op transitions
+and key re-plan caches.
+"""
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Sequence
 
-__all__ = ["FrameSize", "StreamSpec", "AnalysisProgram", "COMMON_FRAME_SIZES"]
+__all__ = [
+    "FrameSize",
+    "StreamSpec",
+    "AnalysisProgram",
+    "COMMON_FRAME_SIZES",
+    "FleetEvent",
+    "StreamAdded",
+    "StreamRemoved",
+    "StreamRateChanged",
+    "PriceChanged",
+    "apply_events",
+    "fleet_key",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,3 +76,89 @@ class StreamSpec:
     def __post_init__(self) -> None:
         if self.desired_fps <= 0:
             raise ValueError(f"stream {self.name}: fps must be > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """Base class for live fleet-churn events (paper's re-allocation loop)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamAdded(FleetEvent):
+    """A camera joined the fleet."""
+
+    stream: StreamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamRemoved(FleetEvent):
+    """A camera (identified by stream name) left the fleet."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamRateChanged(FleetEvent):
+    """An analyst changed a stream's desired frame rate."""
+
+    name: str
+    desired_fps: float
+
+    def __post_init__(self) -> None:
+        if self.desired_fps <= 0:
+            raise ValueError(f"event for {self.name}: fps must be > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceChanged(FleetEvent):
+    """The cloud re-priced an instance type (spot drift, new contract)."""
+
+    instance_type: str
+    cost: float
+
+    def __post_init__(self) -> None:
+        if self.cost < 0:
+            raise ValueError(f"{self.instance_type}: negative cost")
+
+
+def apply_events(
+    streams: Sequence[StreamSpec], events: Iterable[FleetEvent]
+) -> tuple[StreamSpec, ...]:
+    """Pure fleet-transition function: fold events into a new stream tuple.
+
+    Stream order is preserved for surviving streams; added and re-rated
+    streams append at the end (the order the controller's incremental
+    tensor path expects).  Price events do not change the stream list.
+    """
+    fleet = list(streams)
+    for ev in events:
+        if isinstance(ev, StreamAdded):
+            if any(s.name == ev.stream.name for s in fleet):
+                raise ValueError(f"duplicate stream name {ev.stream.name!r}")
+            fleet.append(ev.stream)
+        elif isinstance(ev, StreamRemoved):
+            survivors = [s for s in fleet if s.name != ev.name]
+            if len(survivors) == len(fleet):
+                raise KeyError(f"no stream named {ev.name!r}")
+            fleet = survivors
+        elif isinstance(ev, StreamRateChanged):
+            hit = [s for s in fleet if s.name == ev.name]
+            if not hit:
+                raise KeyError(f"no stream named {ev.name!r}")
+            fleet = [s for s in fleet if s.name != ev.name]
+            fleet.append(dataclasses.replace(hit[0], desired_fps=ev.desired_fps))
+        elif isinstance(ev, PriceChanged):
+            pass  # catalog-side event; the controller re-prices the catalog
+        else:
+            raise TypeError(f"unknown fleet event {ev!r}")
+    return tuple(fleet)
+
+
+def fleet_key(streams: Sequence[StreamSpec]) -> tuple[StreamSpec, ...]:
+    """Canonical (order-insensitive) fingerprint of a fleet.
+
+    Two fleets with the same streams in different orders map to the same
+    key; `StreamSpec` is frozen/hashable, so the key is directly usable in
+    dicts and sets.
+    """
+    return tuple(sorted(streams, key=lambda s: (s.name, s.desired_fps)))

@@ -61,7 +61,7 @@ def main() -> None:
     ]
     plan = mgr.allocate(streams)
     print(plan.summary())
-    sim = simulate_plan(plan, table)
+    sim = simulate_plan(plan, table, target=mgr.utilization_cap)
     print(f"simulated performance: {sim['overall_performance']:.0%}\n")
 
     cfg = smoke_variant(get_config(args.arch))
