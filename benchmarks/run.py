@@ -10,12 +10,13 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
   solver_scaling     — beyond-paper solver study (exact vs arc-flow vs FFD)
   tpu_allocation     — beyond-paper TPU-cloud allocation scenario
   churn_replan       — live-churn warm-start re-planning vs from-scratch
+  consolidation      — policy layer: bounded-migration consolidation vs pinning
   roofline_report    — §Roofline table from dry-run artifacts
 
-Suites that emit a gated artifact (currently ``churn_replan`` →
-``BENCH_replan.json``) are checked against their stored regression floors
-by ``scripts/check_bench.py`` after they run; a floor violation fails the
-harness like any suite error.
+Suites that emit a gated artifact (``churn_replan`` → ``BENCH_replan.json``,
+``consolidation`` → ``BENCH_policy.json``) are checked against their stored
+regression floors by ``scripts/check_bench.py`` after they run; a floor
+violation fails the harness like any suite error.
 """
 import argparse
 import pathlib
@@ -24,7 +25,7 @@ import sys
 import traceback
 
 #: suite name -> artifact its run() emits, gated by scripts/check_bench.py.
-GATED_ARTIFACTS = {"churn": "BENCH_replan.json"}
+GATED_ARTIFACTS = {"churn": "BENCH_replan.json", "policy": "BENCH_policy.json"}
 
 
 def main() -> None:
@@ -39,6 +40,7 @@ def main() -> None:
     from . import (
         ablation_cap,
         churn_replan,
+        consolidation,
         fig5_framerate,
         fig6_streams,
         roofline_report,
@@ -59,6 +61,7 @@ def main() -> None:
         "tpu": tpu_allocation,
         "ablation": ablation_cap,
         "churn": churn_replan,
+        "policy": consolidation,
         "roofline": roofline_report,
     }
     selected = args.only or list(suites)

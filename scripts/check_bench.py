@@ -31,6 +31,17 @@ FLOORS: dict[str, dict[str, tuple[str, float, str]]] = {
         # And must not cost materially more than the cold plans they avoid.
         "cost_ratio_mean": ("<=", 1.10, "warm/cold cost-ratio ceiling"),
     },
+    "BENCH_policy.json": {
+        # Acceptance: bounded-migration consolidation (k<=3 per event) must
+        # end the 500-stream / 200-event trace >= 5% cheaper than the
+        # pure-pinning controller ...
+        "consolidation_saving": (">=", 0.05, "consolidation end-of-trace saving"),
+        # ... while warm re-plans (policy overhead included) stay >= 5x
+        # faster than from-scratch solves of the same fleets ...
+        "speedup_warm_vs_cold": (">=", 5.0, "warm-start speedup floor"),
+        # ... and no event ever exceeds the k = 3 migration budget.
+        "max_migrations_per_event": ("<=", 3.0, "migration budget ceiling"),
+    },
 }
 
 

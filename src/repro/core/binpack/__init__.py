@@ -41,12 +41,19 @@ from .heuristics import (
     batched_fleet_costs,
     best_fit_decreasing,
     best_fit_decreasing_jax,
+    evacuation_scores,
     first_fit_decreasing,
     first_fit_decreasing_jax,
     pack_jax,
     placement_scores,
 )
-from .bincompletion import SolveStats, pinned_solution, root_lower_bound, solve
+from .bincompletion import (
+    SolveStats,
+    migration_subproblem,
+    pinned_solution,
+    root_lower_bound,
+    solve,
+)
 from .arcflow import ArcflowStats, dual_prices, solve_arcflow
 from .bruteforce import solve_bruteforce
 
@@ -69,7 +76,9 @@ __all__ = [
     "first_fit_decreasing_jax",
     "pack_jax",
     "placement_scores",
+    "evacuation_scores",
     "SolveStats",
+    "migration_subproblem",
     "pinned_solution",
     "root_lower_bound",
     "solve",

@@ -69,7 +69,13 @@ from .problem import (
     build_solution,
 )
 
-__all__ = ["solve", "SolveStats", "pinned_solution", "root_lower_bound"]
+__all__ = [
+    "solve",
+    "SolveStats",
+    "pinned_solution",
+    "migration_subproblem",
+    "root_lower_bound",
+]
 
 _EPS = 1e-9
 _INF = float("inf")
@@ -158,6 +164,29 @@ def pinned_solution(
     all_placements = [(n + j, 0, j) for j in range(len(pinned))] + list(placements)
     opened = [ob.bin_type for ob in pinned] + list(opened_new)
     return build_solution(aug, all_placements, opened)
+
+
+def migration_subproblem(
+    problem: Problem, free_indices: Sequence[int]
+) -> Problem:
+    """The migration sub-solve's entry: a sub-`Problem` over ``free_indices``.
+
+    Unlike the controller's churn path (where displaced items sit at the
+    fleet's tail), a consolidation move frees items at *arbitrary*
+    positions.  The sub-problem's tensors are sliced from the full
+    problem's cached build via `ProblemTensors.drop_items` — no re-stack —
+    so a ≤k-stream migration solve (`solve(sub, pinned=...)`) costs O(k)
+    tensor work regardless of fleet size.
+    """
+    idx = list(free_indices)
+    sub = Problem(
+        bin_types=problem.bin_types,
+        items=tuple(problem.items[i] for i in idx),
+        utilization_cap=problem.utilization_cap,
+    )
+    if idx:
+        object.__setattr__(sub, "_tensors", problem.tensors().drop_items(idx))
+    return sub
 
 
 def solve(

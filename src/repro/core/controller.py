@@ -1,4 +1,4 @@
-"""Dynamic fleet controller: warm-start incremental re-planning.
+"""Dynamic fleet controller: the re-planning *mechanism* layer.
 
 The paper's manager runs in a *live* loop — cameras join, drop, and change
 desired frame rates, and instance prices drift — yet a from-scratch MC-VBP
@@ -32,6 +32,27 @@ derived from the previous fleet's via `drop_items`/`append_items` (and
 
 `what_if` batches many hypothetical fleets (autoscaling lookahead) through
 the JAX FFD kernel in one dispatch and returns their heuristic costs.
+
+## Mechanism vs. policy
+
+Everything above is *mechanism*: event diffing, incremental
+`ProblemTensors`, pinned/warm solves, and dual certification.  The
+decisions of *when to migrate, when to re-price, and when to resize the
+fleet* live in a pluggable policy (`core.policy.ReplanPolicy`, default
+`PinningPolicy` — never migrate, the historical behaviour).  After every
+`reset`/`apply` the controller hands the mechanism's `ReplanResult` to the
+policy, which may invoke the mechanism back through its policy-facing
+surface:
+
+* `placement_state()` — the live fleet as dense arrays (requirements,
+  owners, per-bin residuals) for batched evacuation scoring;
+* `try_migrate(names)` — a bounded-migration consolidation move: free the
+  named streams, pin everything else, exact-solve the ≤k-stream
+  sub-problem (`bincompletion.migration_subproblem` + ``pinned=``) and
+  adopt the result **only** when it certifies a strict cost reduction;
+* `refresh_prices()` — recompute the covering-LP dual prices (dual-price
+  aging) and return the tightened lower bound;
+* `what_if(fleets)` — the batched lookahead described above.
 """
 from __future__ import annotations
 
@@ -62,7 +83,12 @@ from .streams import (
     fleet_key,
 )
 
-__all__ = ["FleetController", "ReplanResult"]
+__all__ = [
+    "FleetController",
+    "ReplanResult",
+    "MigrationResult",
+    "PlacementState",
+]
 
 _EPS = 1e-9
 
@@ -78,6 +104,40 @@ class ReplanResult:
     lower_bound: float  # certified LB on the optimal hourly cost
     gap: float  # (plan cost - lower_bound) / lower_bound
     nodes: int  # B&B nodes spent on this step
+    actions: tuple[str, ...] = ()  # policy-layer actions taken on this step
+    advice: dict | None = None  # autoscaler provisioning advice, if any
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationResult:
+    """Outcome of one `FleetController.try_migrate` consolidation move."""
+
+    accepted: bool  # True iff the move certified a strict cost reduction
+    cost_before: float  # fleet hourly cost before the move
+    cost_after: float  # after (== achieved sub-solve cost; >= before if rejected)
+    migrated: tuple[str, ...]  # streams whose instance changed (empty if rejected)
+    nodes: int  # B&B nodes the sub-solve spent
+    lower_bound: float  # certified LB on the current fleet's optimal cost
+    gap: float  # (adopted plan cost - lower_bound) / lower_bound
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementState:
+    """The live fleet as dense arrays (the policy layer's scoring view).
+
+    Item axes follow ``problem.items`` order; bin axes follow the
+    controller's open-bin order.  `resid` is residual *effective* capacity
+    (utilization-capped), the same geometry every solver packs against.
+    """
+
+    names: tuple[str, ...]  # per item: stream name
+    req: np.ndarray  # (n, C, dim) +inf-padded requirement tensor
+    choice_mask: np.ndarray  # (n, C) valid-choice booleans
+    owner: np.ndarray  # (n,) open-bin position hosting each item
+    resid: np.ndarray  # (P, dim) per-bin residual effective capacity
+    bin_costs: np.ndarray  # (P,) hourly cost of each open bin
+    members: tuple[tuple[str, ...], ...]  # per bin: member stream names
+    cheapest_host: np.ndarray  # (n,) cheapest cost of hosting the item alone
 
 
 @dataclasses.dataclass
@@ -87,6 +147,9 @@ class _BinState:
     uid: int
     bin_type: BinType
     members: dict[str, str]  # stream name -> choice label ("cpu"/"accel")
+
+    def snapshot(self) -> "_BinState":
+        return _BinState(self.uid, self.bin_type, dict(self.members))
 
 
 class FleetController:
@@ -105,11 +168,15 @@ class FleetController:
         *,
         gap_threshold: float = 0.1,
         sub_max_nodes: int = 50_000,
+        policy=None,
     ) -> None:
+        from .policy import PinningPolicy
+
         self.manager = manager
         self.strategy = strategy
         self.gap_threshold = gap_threshold
         self.sub_max_nodes = sub_max_nodes
+        self.policy = policy if policy is not None else PinningPolicy()
         self._streams: list[StreamSpec] = []
         self._problem: Problem | None = None
         self._plan: AllocationPlan | None = None
@@ -142,7 +209,7 @@ class FleetController:
         lb = bincompletion.root_lower_bound(problem)
         if plan.optimal:
             lb = max(lb, plan.hourly_cost)  # an exact solve IS a lower bound
-        return ReplanResult(
+        result = ReplanResult(
             plan=plan,
             mode="reset",
             displaced=tuple(s.name for s in streams),
@@ -151,6 +218,7 @@ class FleetController:
             gap=_gap(plan.hourly_cost, lb),
             nodes=0,
         )
+        return self.policy.on_reset(self, result)
 
     def apply_events(self, events: Sequence[FleetEvent]) -> list[ReplanResult]:
         return [self.apply(ev) for ev in events]
@@ -158,11 +226,20 @@ class FleetController:
     def apply(self, event: FleetEvent) -> ReplanResult:
         """Fold one fleet event in; re-plan incrementally.
 
+        The mechanism result (pin + repair + certify, see the module
+        docstring) is handed to the controller's policy, which may
+        consolidate, re-price, or attach provisioning advice before the
+        result ships.
+
         Raises `InfeasibleError` when the event makes the fleet
         unplaceable (e.g. a rate no device can reach); after any exception
         mid-replan the controller's state is stale — call `reset` before
         further events.
         """
+        return self.policy.on_event(self, event, self._fold(event))
+
+    def _fold(self, event: FleetEvent) -> ReplanResult:
+        """The mechanism half of `apply`: fold one event, no policy."""
         if self._problem is None:
             raise RuntimeError("FleetController.apply before reset()")
         if isinstance(event, PriceChanged):
@@ -216,6 +293,151 @@ class FleetController:
         ]
         return heuristics.batched_fleet_costs(problems, best_fit=best_fit)
 
+    # -------------------------------------------------- policy-facing surface
+
+    def placement_state(self) -> PlacementState:
+        """The live fleet as dense arrays (see `PlacementState`).
+
+        The requirement tensor is the cached `ProblemTensors` view (no
+        re-stack) and the residuals read the current plan's already-summed
+        bin loads — one O(bins · dim) pass, no per-bin load recompute.
+        Policies feed this straight into the batched evacuation-scoring
+        kernel (`heuristics.evacuation_scores`).
+        """
+        if self._problem is None or self._plan is None:
+            raise RuntimeError("placement_state before reset()")
+        problem = self._problem
+        t = problem.tensors()
+        sol_bins = self._plan.solution.bins
+        assert len(sol_bins) == len(self._bins)  # _assemble keeps the order
+        pos_of: dict[str, int] = {}
+        resid = np.empty((len(self._bins), problem.dim))
+        for b_i, b in enumerate(self._bins):
+            resid[b_i] = problem.effective_capacity(b.bin_type) - np.asarray(
+                sol_bins[b_i].load
+            )
+            for name in b.members:
+                pos_of[name] = b_i
+        return PlacementState(
+            names=tuple(it.name for it in problem.items),
+            req=t.req,
+            choice_mask=t.choice_mask,
+            owner=np.asarray(
+                [pos_of[it.name] for it in problem.items], dtype=np.int64
+            ),
+            resid=resid,
+            bin_costs=np.asarray([b.bin_type.cost for b in self._bins]),
+            members=tuple(tuple(b.members) for b in self._bins),
+            cheapest_host=t.cheapest_host,
+        )
+
+    def try_migrate(
+        self,
+        names: Sequence[str],
+        *,
+        max_nodes: int | None = None,
+        min_saving: float = 0.0,
+    ) -> MigrationResult:
+        """Attempt a bounded-migration consolidation move, transactionally.
+
+        Frees the named streams from their bins (bins left empty close —
+        that rent is the saving at stake), pins every other bin with its
+        remaining load, and exact-solves the freed streams' sub-problem
+        (`bincompletion.migration_subproblem` + ``pinned=``), seeded by the
+        batched greedy repair.  The move is adopted **only** when the
+        achieved cost beats the current plan by more than ``min_saving``
+        (an exact sub-solve, so the reduction is certified); otherwise the
+        bin states roll back untouched.  The *when/what* — which streams,
+        how many per event — is the policy layer's decision.
+        """
+        if self._problem is None or self._plan is None:
+            raise RuntimeError("try_migrate before reset()")
+        problem = self._problem
+        before = self._plan.hourly_cost
+        name_set = set(names)
+        free_idx = [
+            i for i, it in enumerate(problem.items) if it.name in name_set
+        ]
+        if len(free_idx) != len(name_set):
+            missing = name_set - {it.name for it in problem.items}
+            raise KeyError(f"no stream(s) named {sorted(missing)!r}")
+        lb = self._lower_bound(problem)
+        if not free_idx:
+            return MigrationResult(
+                accepted=False,
+                cost_before=before,
+                cost_after=before,
+                migrated=(),
+                nodes=0,
+                lower_bound=lb,
+                gap=_gap(before, lb),
+            )
+        snapshot = [b.snapshot() for b in self._bins]
+        for b in self._bins:
+            for name in name_set:
+                b.members.pop(name, None)
+        pinned_states = [b for b in self._bins if b.members]
+        self._bins = pinned_states
+        by_name = {s.name: s for s in self._streams}
+        pinned = [
+            OpenBin(
+                bin_type=b.bin_type,
+                load=self._bin_load(b, self._streams, by_name),
+            )
+            for b in pinned_states
+        ]
+        sub = bincompletion.migration_subproblem(problem, free_idx)
+        repair_placements, repair_opened = self._greedy_repair(sub, pinned)
+        incumbent = bincompletion.pinned_solution(
+            sub, pinned, repair_placements, repair_opened
+        )
+        sol, stats = bincompletion.solve(
+            sub,
+            max_nodes=max_nodes if max_nodes is not None else self.sub_max_nodes,
+            incumbent=incumbent,
+            pinned=pinned,
+        )
+        if sol.cost >= before - max(min_saving, _EPS):
+            self._bins = snapshot  # reject: roll the bin states back
+            return MigrationResult(
+                accepted=False,
+                cost_before=before,
+                cost_after=sol.cost,
+                migrated=(),
+                nodes=stats.nodes,
+                lower_bound=lb,
+                gap=_gap(before, lb),
+            )
+        old_uid_of = {n: b.uid for b in snapshot for n in b.members}
+        self._adopt_pinned_solution(pinned_states, sub, sol)
+        gap = _gap(sol.cost, lb)
+        self._plan = self._assemble(problem, optimal=gap <= _EPS)
+        migrated = tuple(
+            sorted(
+                n
+                for n, uid in self._uid_map().items()
+                if n in old_uid_of and uid != old_uid_of[n]
+            )
+        )
+        return MigrationResult(
+            accepted=True,
+            cost_before=before,
+            cost_after=self._plan.hourly_cost,
+            migrated=migrated,
+            nodes=stats.nodes,
+            lower_bound=lb,
+            gap=gap,
+        )
+
+    def refresh_prices(self) -> float:
+        """Re-derive the covering-LP dual prices for the current fleet era
+        (the dual-price-aging policy's lever) and return the refreshed
+        certified lower bound."""
+        if self._problem is None:
+            raise RuntimeError("refresh_prices before reset()")
+        self._refresh_prices(self._problem)
+        return self._lower_bound(self._problem)
+
     # ------------------------------------------------------------ internals
 
     def _replan(
@@ -227,23 +449,18 @@ class FleetController:
     ) -> ReplanResult:
         old_uid_of = self._uid_map()
         pinned_bins = list(self._bins)
+        by_name = {s.name: s for s in new_streams}
         pinned = [
-            OpenBin(bin_type=b.bin_type, load=self._bin_load(b, new_streams))
+            OpenBin(
+                bin_type=b.bin_type,
+                load=self._bin_load(b, new_streams, by_name),
+            )
             for b in pinned_bins
         ]
         n_total = len(new_streams)
-        sub_items = tuple(problem.items[n_kept:n_total])
-        sub_problem = Problem(
-            bin_types=problem.bin_types,
-            items=sub_items,
-            utilization_cap=problem.utilization_cap,
+        sub_problem = bincompletion.migration_subproblem(
+            problem, range(n_kept, n_total)
         )
-        if sub_items and "_tensors" not in sub_problem.__dict__:
-            object.__setattr__(
-                sub_problem,
-                "_tensors",
-                problem.tensors().drop_items(range(n_kept, n_total)),
-            )
 
         # Greedy repair scored in one batched dispatch, then the exact
         # pinned sub-solve seeded with it as warm-start incumbent.
@@ -439,10 +656,18 @@ class FleetController:
     # ---------------------------------------------------------- state plumbing
 
     def _bin_load(
-        self, b: _BinState, streams: Sequence[StreamSpec]
+        self,
+        b: _BinState,
+        streams: Sequence[StreamSpec],
+        by_name: dict[str, StreamSpec] | None = None,
     ) -> tuple[float, ...]:
-        """Recompute a pinned bin's load from its members' profiles."""
-        by_name = {s.name: s for s in streams}
+        """Recompute a pinned bin's load from its members' profiles.
+
+        Callers looping over many bins pass a prebuilt ``by_name`` index;
+        rebuilding it per bin is O(fleet) each and dominated large-fleet
+        re-plans."""
+        if by_name is None:
+            by_name = {s.name: s for s in streams}
         load = np.zeros(len(b.bin_type.capacity))
         for name, label in b.members.items():
             s = by_name[name]

@@ -130,7 +130,10 @@ class ResourceManager:
 
         `allocate` delegates through it, so after any allocation the
         controller holds the fleet and `replan` can fold churn events in
-        incrementally (see `core.controller.FleetController`)."""
+        incrementally (see `core.controller.FleetController`).  ``policy``
+        selects the re-planning policy layer (consolidation, dual-price
+        aging, autoscaling — see `core.policy`); reconfiguring a live
+        controller swaps the policy without dropping its fleet state."""
         ctrl = self._controllers.get(strategy.name)
         if ctrl is None:
             from .controller import FleetController
@@ -141,7 +144,7 @@ class ResourceManager:
             # Reconfigure in place — replacing would silently drop the
             # live fleet state a prior allocate() established.
             for key, value in kwargs.items():
-                if key not in ("gap_threshold", "sub_max_nodes"):
+                if key not in ("gap_threshold", "sub_max_nodes", "policy"):
                     raise TypeError(f"unknown controller option {key!r}")
                 setattr(ctrl, key, value)
         return ctrl
@@ -163,6 +166,8 @@ class ResourceManager:
         self,
         streams: Sequence[StreamSpec],
         strategies: Sequence[Strategy] = ALL_STRATEGIES,
+        *,
+        parallel: int | bool = False,
     ) -> dict[str, AllocationPlan | None]:
         """Allocate under several strategies, building `ProblemTensors` once.
 
@@ -170,10 +175,18 @@ class ResourceManager:
         single time; each restricted strategy (ST1: CPU bins/choices, ST2:
         accelerator bins/choices, ...) gets its tensors sliced from it via
         `ProblemTensors.restrict` instead of re-deriving from the object
-        model.  Infeasible strategies map to None (paper Table 6 "Fail")."""
+        model.  Infeasible strategies map to None (paper Table 6 "Fail").
+
+        With ``parallel`` (True, or a worker count) the per-strategy
+        solves fan out across a thread pool: formulation and tensor
+        derivation stay serial (they touch the shared memo caches), then
+        the independent `_plan` calls — the expensive part — run
+        concurrently on the already-cached tensors.  Results are identical
+        to the serial sweep; the solves share no mutable state."""
         full = self.formulate(streams, ST3)
         full_t = full.tensors()
         plans: dict[str, AllocationPlan | None] = {}
+        solvable: list[tuple[Strategy, Problem]] = []
         for strat in strategies:
             try:
                 problem = self.formulate(streams, strat)
@@ -184,11 +197,34 @@ class ResourceManager:
                 derived = self._restricted_tensors(full, full_t, problem, strat)
                 if derived is not None:
                     object.__setattr__(problem, "_tensors", derived)
+            problem.tensors()  # materialize outside the worker threads
+            solvable.append((strat, problem))
+
+        def run(strat: Strategy, problem: Problem) -> AllocationPlan | None:
             try:
-                plans[strat.name] = self._plan(streams, problem, strat)
+                return self._plan(streams, problem, strat)
             except InfeasibleError:
-                plans[strat.name] = None
-        return plans
+                return None
+
+        if parallel and len(solvable) > 1:
+            import concurrent.futures
+
+            workers = len(solvable) if parallel is True else int(parallel)
+            with concurrent.futures.ThreadPoolExecutor(
+                max_workers=max(1, min(workers, len(solvable)))
+            ) as pool:
+                futures = [
+                    pool.submit(run, strat, problem)
+                    for strat, problem in solvable
+                ]
+                for (strat, _), fut in zip(solvable, futures):
+                    plans[strat.name] = fut.result()
+        else:
+            for strat, problem in solvable:
+                plans[strat.name] = run(strat, problem)
+        # Preserve the caller's strategy order (infeasible ones were
+        # recorded before the solvable batch).
+        return {strat.name: plans[strat.name] for strat in strategies}
 
     @staticmethod
     def _restricted_tensors(full, full_t, problem, strategy):

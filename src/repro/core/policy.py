@@ -1,0 +1,355 @@
+"""Re-planning policies: *when* to migrate, re-price, and resize the fleet.
+
+`core.controller.FleetController` is pure mechanism — event diffing,
+incremental `ProblemTensors`, pinned/warm sub-solves, dual certification.
+This module is the policy layer on top: after every event the controller
+hands its `ReplanResult` to a `ReplanPolicy`, which may drive the
+mechanism's policy-facing surface (`placement_state` / `try_migrate` /
+`refresh_prices` / `what_if`) and amend the result before it ships.
+
+Three concrete policies (plus the identity and a combinator):
+
+* `PinningPolicy` — the identity: pure pinning, never migrates.  With it,
+  the controller behaves bit for bit like the historical (PR-2) one.
+* `ConsolidationPolicy` — bounded-migration consolidation.  After each
+  warm re-plan it scores every placed stream against every *other* bin's
+  residual in one batched `heuristics.evacuation_scores` dispatch, picks
+  whole bins whose members can all relocate (≤ ``max_migrations`` streams
+  per event, best cost-per-move first), and asks the mechanism to
+  exact-solve the migration sub-problem — adopted only when the move
+  certifies a strict cost reduction.  ``max_migrations=0`` is a no-op.
+* `DualPriceAgingPolicy` — tracks certified-gap decay: when the gap at
+  acceptance exceeds half the controller's ``gap_threshold`` for
+  ``patience`` consecutive events, the covering-LP dual prices are
+  refreshed (`arcflow.dual_prices` via `refresh_prices`) so certification
+  stays honest between full re-solves.
+* `LookaheadAutoscaler` — lookahead provisioning: expands a join/leave
+  `StreamForecast` into its fleet cone (`streams.forecast_cone`), scores
+  every cone fleet through the vmapped `what_if` kernel in one dispatch,
+  and runs a lattice DP to pick the cheapest provisioning path from the
+  current fleet to the forecast horizon.  The chosen path and its cost
+  profile ship as `ReplanResult.advice`.
+* `CompositePolicy` — folds several policies left to right (e.g.
+  consolidate, then age prices, then attach autoscaling advice).
+
+Policies are stateful per controller (aging streaks, for one): construct a
+fresh instance per `FleetController` / `ResourceManager.controller` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .binpack import heuristics
+from .binpack.problem import InfeasibleError
+# Cycle-free: controller.py imports this module only lazily (inside
+# FleetController.__init__), so the gap helper is shared, not duplicated.
+from .controller import _gap
+from .streams import FleetEvent, StreamForecast, StreamSpec, forecast_cone
+
+__all__ = [
+    "ReplanPolicy",
+    "PinningPolicy",
+    "ConsolidationPolicy",
+    "DualPriceAgingPolicy",
+    "LookaheadAutoscaler",
+    "CompositePolicy",
+    "cheapest_provisioning_path",
+]
+
+_EPS = 1e-9
+
+
+class ReplanPolicy:
+    """Base policy: both hooks return the mechanism result unchanged.
+
+    ``mech`` is the calling `FleetController`; hooks may mutate fleet
+    state only through its policy-facing surface and must return a
+    `ReplanResult` (usually ``dataclasses.replace`` of the input, with
+    `actions` recording what was done).
+    """
+
+    def on_reset(self, mech, result):
+        return result
+
+    def on_event(self, mech, event: FleetEvent, result):
+        return result
+
+
+class PinningPolicy(ReplanPolicy):
+    """Pure pinning — never migrate, re-price, or resize (the default)."""
+
+
+@dataclasses.dataclass
+class ConsolidationPolicy(ReplanPolicy):
+    """Bounded-migration consolidation after each warm re-plan.
+
+    Evacuation candidates are whole bins: a bin qualifies when every
+    member can relocate into some *other* bin's residual (per the batched
+    scoring kernel) and its member count fits the remaining migration
+    budget.  Candidates are taken best cost-per-move first; the selected
+    members go through `FleetController.try_migrate`, whose exact pinned
+    sub-solve is the arbiter — a move that does not certify a saving above
+    ``min_saving`` rolls back, so the certified cost never increases.
+    """
+
+    max_migrations: int = 3  # k: migration budget per event
+    min_saving: float = 0.0  # $/h a move must save to be adopted
+    max_nodes: int | None = None  # sub-solve budget (None: controller default)
+
+    def on_event(self, mech, event, result):
+        # Warm re-plans (noop included — drift survives unchanged fleets)
+        # only: full re-solves just re-packed everything.
+        if self.max_migrations <= 0 or result.mode not in ("warm", "noop"):
+            return result
+        names = self.select_evacuations(mech)
+        if not names:
+            return result
+        mig = mech.try_migrate(
+            names, max_nodes=self.max_nodes, min_saving=self.min_saving
+        )
+        if not mig.accepted:
+            return result
+        saving = mig.cost_before - mig.cost_after
+        return dataclasses.replace(
+            result,
+            plan=mech.plan,
+            migrated=tuple(sorted(set(result.migrated) | set(mig.migrated))),
+            lower_bound=mig.lower_bound,
+            gap=mig.gap,
+            nodes=result.nodes + mig.nodes,
+            actions=result.actions
+            + (f"consolidate:{len(mig.migrated)}:-${saving:.4f}",),
+        )
+
+    def select_evacuations(self, mech) -> tuple[str, ...]:
+        """Pick ≤ ``max_migrations`` streams whose bins look evacuable.
+
+        Two evacuation routes per candidate bin, both scored from one
+        `evacuation_scores` dispatch plus the memoized per-item cheapest
+        hosting cost:
+
+        * **residual route** — every member fits some *other* bin's
+          residual: closing the bin can save up to its full rent;
+        * **fresh route** — the members' summed lone-hosting cost is below
+          the bin's rent (a drained expensive instance): re-homing them
+          onto fresh cheaper instances saves at least the difference.
+
+        Whole bins only (a partial evacuation closes nothing), best
+        estimated saving per migration first.  The greedy pass merely
+        filters obviously doomed moves — feasibility and the certified
+        saving of the combined move are the exact sub-solve's job.
+        """
+        state = mech.placement_state()
+        n_bins = state.resid.shape[0]
+        if n_bins < 2 or not state.names:
+            return ()
+        scores = heuristics.evacuation_scores(
+            state.req, state.choice_mask, state.resid, state.owner
+        )
+        finite = np.isfinite(scores).any(axis=1)  # (n, P): relocatable to bin p
+        relocatable = finite.any(axis=1)  # (n,)
+        idx_of = {name: i for i, name in enumerate(state.names)}
+        candidates = []  # (-saving_per_move, size, b_i, needs_residual)
+        for b_i, members in enumerate(state.members):
+            size = len(members)
+            if not 0 < size <= self.max_migrations:
+                continue
+            rent = float(state.bin_costs[b_i])
+            idx = [idx_of[m] for m in members]
+            fresh_cost = float(state.cheapest_host[idx].sum())
+            if all(relocatable[i] for i in idx):
+                # Residual route: closing the bin can save its full rent.
+                candidates.append((-(rent / size), size, b_i, True))
+            elif fresh_cost < rent - self.min_saving - _EPS:
+                candidates.append((-((rent - fresh_cost) / size), size, b_i, False))
+        candidates.sort()
+        budget = self.max_migrations
+        allowed = np.ones(n_bins, dtype=bool)  # bins still offering residual
+        names: list[str] = []
+        for _, size, b_i, needs_residual in candidates:
+            if size > budget:
+                continue
+            trial = allowed.copy()
+            trial[b_i] = False
+            members = state.members[b_i]
+            # Residual-route members must still reach a bin not already
+            # slated for evacuation (their own bin is inf-masked by the
+            # kernel); fresh-route bins only need their rent arbitrage.
+            if needs_residual and not all(
+                finite[idx_of[m]][trial].any() for m in members
+            ):
+                continue
+            allowed = trial
+            names += members
+            budget -= size
+            if budget == 0:
+                break
+        return tuple(names)
+
+
+@dataclasses.dataclass
+class DualPriceAgingPolicy(ReplanPolicy):
+    """Refresh the dual prices when the certified gap stays wide.
+
+    The mechanism refreshes prices only on full re-solves and price
+    events, so long warm streaks certify against aging duals.  This policy
+    counts consecutive events whose acceptance gap exceeds half the
+    controller's ``gap_threshold``; at ``patience`` it refreshes
+    (`FleetController.refresh_prices`) and re-certifies the shipped result
+    against the tightened bound.
+    """
+
+    patience: int = 3  # m: consecutive wide-gap events before a refresh
+    _streak: int = dataclasses.field(default=0, init=False, repr=False)
+
+    def on_reset(self, mech, result):
+        self._streak = 0
+        return result
+
+    def on_event(self, mech, event, result):
+        if result.gap <= 0.5 * mech.gap_threshold:
+            self._streak = 0
+            return result
+        self._streak += 1
+        if self._streak < self.patience:
+            return result
+        self._streak = 0
+        lb = mech.refresh_prices()
+        if lb <= result.lower_bound + _EPS:
+            # The refreshed duals did not tighten anything (the gap is
+            # real, not stale) — record the attempt and move on.
+            return dataclasses.replace(
+                result, actions=result.actions + ("reprice:flat",)
+            )
+        return dataclasses.replace(
+            result,
+            lower_bound=lb,
+            gap=_gap(result.plan.hourly_cost, lb),
+            actions=result.actions + ("reprice",),
+        )
+
+
+def cheapest_provisioning_path(
+    grid: np.ndarray,
+) -> tuple[list[tuple[int, int]], float]:
+    """Min-total-cost monotone path through a forecast-cone cost grid.
+
+    ``grid[j, l]`` is the fleet cost with the first ``j`` forecast joins
+    and first ``l`` leaves applied.  A provisioning path starts at the
+    current fleet ``(0, 0)`` and absorbs one forecast event per step
+    (``j`` or ``l`` advances by one) until the horizon corner: the DP
+    returns the path minimizing the summed cost of every fleet passed
+    through — i.e. the cheapest order in which to take the forecast.
+    """
+    grid = np.asarray(grid, dtype=np.float64)
+    J, L = grid.shape
+    dp = np.full((J, L), np.inf)
+    dp[0, 0] = grid[0, 0]
+    for j in range(J):
+        for l in range(L):
+            if j:
+                dp[j, l] = min(dp[j, l], dp[j - 1, l] + grid[j, l])
+            if l:
+                dp[j, l] = min(dp[j, l], dp[j, l - 1] + grid[j, l])
+    path = [(J - 1, L - 1)]
+    j, l = J - 1, L - 1
+    while (j, l) != (0, 0):
+        if j and (not l or dp[j - 1, l] <= dp[j, l - 1]):
+            j -= 1
+        else:
+            l -= 1
+        path.append((j, l))
+    path.reverse()
+    return path, float(dp[J - 1, L - 1])
+
+
+@dataclasses.dataclass
+class LookaheadAutoscaler(ReplanPolicy):
+    """Lookahead provisioning over a join/leave forecast cone.
+
+    ``forecast`` is either a static `StreamForecast` or a callable
+    ``(fleet, event) -> StreamForecast | None`` evaluated per event (e.g.
+    an arrival-rate estimator).  Each event: expand the cone, score every
+    cone fleet through one batched `what_if` dispatch, DP the cheapest
+    provisioning path, and attach the advice — the mechanism's plan is
+    never modified (provisioning is advisory until streams actually join).
+    """
+
+    forecast: (
+        StreamForecast
+        | Callable[[tuple[StreamSpec, ...], FleetEvent | None], StreamForecast | None]
+    ) = dataclasses.field(default_factory=StreamForecast)
+    best_fit: bool = False
+
+    def on_reset(self, mech, result):
+        return self.on_event(mech, None, result)
+
+    def on_event(self, mech, event, result):
+        fc = (
+            self.forecast(tuple(mech.fleet), event)
+            if callable(self.forecast)
+            else self.forecast
+        )
+        if fc is None or (not fc.joins and not fc.leaves):
+            return result
+        try:
+            advice = self.provision_advice(mech, fc)
+        except (ValueError, KeyError, InfeasibleError) as e:
+            # The lookahead is advisory and its fleets hypothetical: a
+            # stale forecast (a leave that already left, a join no device
+            # can serve) must not discard the committed re-plan result.
+            return dataclasses.replace(
+                result,
+                actions=result.actions
+                + (f"autoscale:invalid-forecast:{type(e).__name__}",),
+            )
+        return dataclasses.replace(
+            result,
+            advice=advice,
+            actions=result.actions
+            + (
+                "autoscale:"
+                f"peak=${advice['peak_cost']:.2f}"
+                f":path=${advice['path_cost']:.2f}",
+            ),
+        )
+
+    def provision_advice(self, mech, fc: StreamForecast) -> dict:
+        """The cone's cost grid + cheapest path, from one what_if dispatch."""
+        fleets = forecast_cone(mech.fleet, fc)
+        costs = mech.what_if(fleets, best_fit=self.best_fit)
+        grid = np.asarray(costs, dtype=np.float64).reshape(
+            len(fc.joins) + 1, len(fc.leaves) + 1
+        )
+        path, path_cost = cheapest_provisioning_path(grid)
+        current = float(grid[0, 0])
+        peak = float(max(grid[j, l] for j, l in path))
+        return {
+            "grid": grid.tolist(),
+            "path": path,
+            "path_cost": path_cost,
+            "current_cost": current,
+            "horizon_cost": float(grid[-1, -1]),
+            "peak_cost": peak,
+            "recommended_headroom": max(0.0, peak - current),
+        }
+
+
+class CompositePolicy(ReplanPolicy):
+    """Fold several policies left to right over each result."""
+
+    def __init__(self, *policies: ReplanPolicy) -> None:
+        self.policies = tuple(policies)
+
+    def on_reset(self, mech, result):
+        for p in self.policies:
+            result = p.on_reset(mech, result)
+        return result
+
+    def on_event(self, mech, event, result):
+        for p in self.policies:
+            result = p.on_event(mech, event, result)
+        return result

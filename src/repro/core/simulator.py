@@ -22,7 +22,13 @@ from .binpack.problem import BinType
 from .manager import AllocationPlan
 from .profiler import DIM_ACC, DIM_CPU, ProfileTable
 
-__all__ = ["InstanceLoad", "simulate_plan", "simulate_instance", "simulate_churn"]
+__all__ = [
+    "InstanceLoad",
+    "simulate_plan",
+    "simulate_instance",
+    "simulate_churn",
+    "fleet_fragmentation",
+]
 
 _COMPUTE_DIMS = (DIM_CPU, DIM_ACC)
 
@@ -32,6 +38,7 @@ class InstanceLoad:
     instance_type: str
     utilization: tuple[float, ...]  # per dim, fraction of raw capacity
     performance: float  # avg actual/desired frame rate of its streams
+    residual: tuple[float, ...] = ()  # per dim, unused raw capacity
 
 
 def simulate_instance(
@@ -51,7 +58,41 @@ def simulate_instance(
         instance_type=bin_type.name,
         utilization=tuple(util.tolist()),
         performance=slowdown,
+        residual=tuple(np.maximum(cap - load, 0.0).tolist()),
     )
+
+
+def fleet_fragmentation(instances: Sequence[InstanceLoad]) -> dict:
+    """Per-dim residual-capacity dispersion of a fleet (0 = consolidated).
+
+    For each resource dimension with total residual ``R_d > 0`` across the
+    open instances, dispersion is ``1 - max_i(resid[i, d]) / R_d``: zero
+    when all free capacity sits in one instance (a future stream can use
+    it whole), approaching ``1 - 1/N`` when it is shredded evenly across
+    ``N`` instances (plenty of paid-for capacity, none of it usable by a
+    large stream).  ``overall`` averages the dims that have residual at
+    all.  This is the drift signal pure-pinning controllers accumulate and
+    consolidation policies are judged by.
+    """
+    if not instances:
+        return {"per_dim": (), "overall": 0.0}
+    # A hand-built InstanceLoad may carry the default empty residual;
+    # treat it as "no free capacity" rather than raggedly crashing the
+    # stack below (simulate_instance always fills the field).
+    dim = max((len(i.residual) for i in instances), default=0)
+    if dim == 0:
+        return {"per_dim": (), "overall": 0.0}
+    resid = np.zeros((len(instances), dim))
+    for row, inst in enumerate(instances):
+        if inst.residual:
+            resid[row] = inst.residual
+    totals = resid.sum(axis=0)  # (dim,)
+    per_dim = np.where(
+        totals > 1e-12, 1.0 - resid.max(axis=0) / np.maximum(totals, 1e-300), 0.0
+    )
+    active = totals > 1e-12
+    overall = float(per_dim[active].mean()) if active.any() else 0.0
+    return {"per_dim": tuple(per_dim.tolist()), "overall": overall}
 
 
 def simulate_plan(
@@ -85,6 +126,7 @@ def simulate_plan(
         "overall_performance": overall,
         "instances": per_instance,
         "meets_target": overall >= target,  # paper: >= 90% by default
+        "fragmentation": fleet_fragmentation(per_instance),
     }
 
 
@@ -96,6 +138,7 @@ def simulate_churn(
     *,
     strategy=None,
     target: float | None = None,
+    policy=None,
 ) -> dict:
     """Replay a churn trace through the manager's live controller.
 
@@ -103,16 +146,20 @@ def simulate_churn(
     `FleetEvent` in via warm-start incremental re-planning, and records
     the quantities the paper's live loop cares about per step: hourly
     cost, certified optimality gap, re-plan mode (warm vs full fallback),
-    stream migrations, and simulated performance against ``target``
-    (defaulting to the manager's ``utilization_cap`` so the packing cap
-    and the judged performance floor agree).
+    stream migrations, residual-capacity fragmentation, policy actions
+    (consolidations, re-pricings, autoscaler advice — see `core.policy`),
+    and simulated performance against ``target`` (defaulting to the
+    manager's ``utilization_cap`` so the packing cap and the judged
+    performance floor agree).  ``policy`` installs a re-planning policy on
+    the controller for the replay (e.g. ``ConsolidationPolicy(3)``).
     """
     from .strategies import ST3
 
     strategy = strategy or ST3
     if target is None:
         target = manager.utilization_cap
-    ctrl = manager.controller(strategy)
+    kwargs = {} if policy is None else {"policy": policy}
+    ctrl = manager.controller(strategy, **kwargs)
     results = [ctrl.reset(initial_streams)]
     results += ctrl.apply_events(list(events))
     timeline = []
@@ -132,13 +179,24 @@ def simulate_churn(
                 "streams": len(r.plan.placements),
                 "migrations": len(r.migrated),
                 "performance": sim["overall_performance"],
+                "fragmentation": sim["fragmentation"]["overall"],
+                "actions": list(r.actions),
+                "advice": r.advice,
             }
         )
     costs = [t["cost"] for t in timeline]
+    frags = [t["fragmentation"] for t in timeline]
     return {
         "timeline": timeline,
         "mean_cost": float(np.mean(costs)) if costs else 0.0,
+        "final_cost": costs[-1] if costs else 0.0,
         "total_migrations": sum(t["migrations"] for t in timeline),
+        "consolidations": sum(
+            any(a.startswith("consolidate") for a in t["actions"])
+            for t in timeline
+        ),
+        "mean_fragmentation": float(np.mean(frags)) if frags else 0.0,
+        "final_fragmentation": frags[-1] if frags else 0.0,
         "warm_steps": sum(t["mode"] == "warm" for t in timeline),
         "full_steps": sum(t["mode"] == "full" for t in timeline),
         "target": target,

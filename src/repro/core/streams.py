@@ -8,6 +8,12 @@ rates (`StreamRateChanged`), and the cloud re-prices instance types
 (price events leave the stream list untouched), and `fleet_key` is the
 canonical order-insensitive fingerprint used to detect no-op transitions
 and key re-plan caches.
+
+For the policy layer's lookahead autoscaler, `StreamForecast` describes a
+short-horizon join/leave forecast and `forecast_cone` expands it into the
+lattice of hypothetical fleets (every prefix of joins crossed with every
+prefix of leaves) that `FleetController.what_if` scores in one batched
+dispatch.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ __all__ = [
     "PriceChanged",
     "apply_events",
     "fleet_key",
+    "StreamForecast",
+    "forecast_cone",
 ]
 
 
@@ -152,6 +160,55 @@ def apply_events(
         else:
             raise TypeError(f"unknown fleet event {ev!r}")
     return tuple(fleet)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamForecast:
+    """A short-horizon join/leave forecast (autoscaling lookahead input).
+
+    ``joins`` are expected arrivals in most-likely-first order; ``leaves``
+    are expected departures (stream names), likewise ordered.  The
+    forecast's *cone* is every fleet reachable by folding in a prefix of
+    each — the uncertainty lattice a lookahead autoscaler provisions over.
+    """
+
+    joins: tuple[StreamSpec, ...] = ()
+    leaves: tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        names = [s.name for s in self.joins]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate forecast join names: {names}")
+        if len(set(self.leaves)) != len(self.leaves):
+            raise ValueError(f"duplicate forecast leaves: {self.leaves}")
+
+
+def forecast_cone(
+    streams: Sequence[StreamSpec], forecast: StreamForecast
+) -> list[tuple[StreamSpec, ...]]:
+    """Expand a forecast into its fleet cone, joins-major row order.
+
+    Returns ``(len(joins)+1) * (len(leaves)+1)`` fleets: entry
+    ``j * (L+1) + l`` is the current fleet with the first ``j`` forecast
+    joins added and the first ``l`` forecast leaves removed — the grid the
+    autoscaler's cheapest-provisioning-path DP walks.  Leaves must name
+    live streams; joins must not collide with live names.
+    """
+    base = tuple(streams)
+    live = {s.name for s in base}
+    for s in forecast.joins:
+        if s.name in live:
+            raise ValueError(f"forecast join duplicates live stream {s.name!r}")
+    for name in forecast.leaves:
+        if name not in live:
+            raise KeyError(f"forecast leave names no live stream {name!r}")
+    fleets: list[tuple[StreamSpec, ...]] = []
+    for j in range(len(forecast.joins) + 1):
+        joined = base + forecast.joins[:j]
+        for leave_count in range(len(forecast.leaves) + 1):
+            gone = set(forecast.leaves[:leave_count])
+            fleets.append(tuple(s for s in joined if s.name not in gone))
+    return fleets
 
 
 def fleet_key(streams: Sequence[StreamSpec]) -> tuple[StreamSpec, ...]:

@@ -1,0 +1,474 @@
+"""Policy-layer tests: consolidation, dual-price aging, lookahead autoscaling.
+
+Deterministic coverage of `core.policy` + the controller's policy-facing
+mechanism surface (`placement_state` / `try_migrate` / `refresh_prices`),
+the fragmentation metric, the forecast cone, and the parallel strategy
+sweep.  Randomized invariants live in `test_policy_properties.py`.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.binpack import (
+    BinType,
+    evacuation_scores,
+    first_fit_decreasing,
+    migration_subproblem,
+    placement_scores,
+)
+from repro.core.binpack.problem import ProblemTensors
+from repro.core.controller import ReplanResult
+from repro.core.manager import ResourceManager
+from repro.core.policy import (
+    CompositePolicy,
+    ConsolidationPolicy,
+    DualPriceAgingPolicy,
+    LookaheadAutoscaler,
+    PinningPolicy,
+    ReplanPolicy,
+    cheapest_provisioning_path,
+)
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import (
+    InstanceLoad,
+    fleet_fragmentation,
+    simulate_churn,
+    simulate_plan,
+)
+from repro.core.strategies import ALL_STRATEGIES, ST3
+from repro.core.streams import (
+    AnalysisProgram,
+    StreamAdded,
+    StreamForecast,
+    StreamRateChanged,
+    StreamRemoved,
+    StreamSpec,
+    forecast_cone,
+)
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+CATALOG = (
+    BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+    BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),
+    BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
+)
+KINDS = [(VGG, 0.25), (VGG, 0.2), (ZF, 0.5), (ZF, 2.0), (ZF, 5.0)]
+
+
+def _streams(n, prefix="s"):
+    return [
+        StreamSpec(f"{prefix}{i}", *KINDS[i % len(KINDS)]) for i in range(n)
+    ]
+
+
+def _manager(**kw):
+    kw.setdefault("max_nodes", 50_000)
+    return ResourceManager(CATALOG, paper_profile_table(), **kw)
+
+
+#: A removal-heavy trace that drains bins (consolidation's habitat): the
+#: heavy ZF streams (KINDS positions 3 and 4, the per-bin CPU hogs) leave,
+#: stranding the light survivors 1-2 per instance — mergeable drift that
+#: pure pinning can never recover.
+def _drain_events():
+    return [StreamRemoved(f"s{i}") for i in range(20) if i % 5 in (3, 4)] + [
+        StreamRateChanged("s0", 0.2)
+    ]
+
+
+# ------------------------------------------------------------- fragmentation
+
+
+def test_fragmentation_concentrated_vs_dispersed():
+    def load(resid):
+        return InstanceLoad(
+            instance_type="b",
+            utilization=(0.5,),
+            performance=1.0,
+            residual=resid,
+        )
+
+    concentrated = fleet_fragmentation([load((4.0,)), load((0.0,))])
+    dispersed = fleet_fragmentation([load((2.0,)), load((2.0,))])
+    assert concentrated["overall"] == 0.0  # all free capacity in one bin
+    assert dispersed["overall"] == pytest.approx(0.5)  # split evenly in two
+    assert dispersed["per_dim"] == (0.5,)
+
+
+def test_fragmentation_ignores_zero_residual_dims():
+    a = InstanceLoad("b", (1.0, 0.0), 1.0, residual=(0.0, 3.0))
+    b = InstanceLoad("b", (1.0, 0.0), 1.0, residual=(0.0, 1.0))
+    out = fleet_fragmentation([a, b])
+    assert out["per_dim"][0] == 0.0  # dim 0 fully used: no dispersion
+    assert out["per_dim"][1] == pytest.approx(0.25)
+    assert out["overall"] == pytest.approx(0.25)  # only the active dim counts
+    assert fleet_fragmentation([]) == {"per_dim": (), "overall": 0.0}
+
+
+def test_simulate_plan_reports_fragmentation():
+    mgr = _manager()
+    plan = mgr.allocate(_streams(8))
+    sim = simulate_plan(plan, paper_profile_table())
+    assert 0.0 <= sim["fragmentation"]["overall"] < 1.0
+    assert len(sim["fragmentation"]["per_dim"]) == 4
+    for info in sim["instances"]:
+        cap = {bt.name: bt.capacity for bt in CATALOG}[info.instance_type]
+        for c, u, r in zip(cap, info.utilization, info.residual):
+            assert r == pytest.approx(c * (1 - u), abs=1e-9)
+
+
+# ----------------------------------------------------- evacuation + migration
+
+
+def test_evacuation_scores_mask_own_bin():
+    rng = np.random.RandomState(0)
+    req = rng.uniform(0.1, 1.0, size=(5, 2, 3))
+    mask = np.ones((5, 2), dtype=bool)
+    resid = rng.uniform(0.5, 2.0, size=(4, 3))
+    owner = np.array([0, 1, 2, 3, 0])
+    ev = evacuation_scores(req, mask, resid, owner)
+    ps = placement_scores(req, mask, resid)
+    for i in range(5):
+        assert np.all(np.isinf(ev[i, :, owner[i]]))  # own bin is never a target
+        others = [p for p in range(4) if p != owner[i]]
+        np.testing.assert_array_equal(ev[i][:, others], ps[i][:, others])
+
+
+def test_migration_subproblem_tensors_match_cold_build():
+    mgr = _manager()
+    problem = mgr.formulate(_streams(10), ST3)
+    problem.tensors()
+    free = [1, 4, 7]
+    sub = migration_subproblem(problem, free)
+    assert [it.name for it in sub.items] == [
+        problem.items[i].name for i in free
+    ]
+    direct = ProblemTensors.build(sub)
+    derived = sub.tensors()
+    np.testing.assert_array_equal(derived.req, direct.req)
+    np.testing.assert_array_equal(derived.cheapest_host, direct.cheapest_host)
+    np.testing.assert_array_equal(derived.frac, direct.frac)
+
+
+def test_try_migrate_rejects_and_rolls_back():
+    mgr = _manager()
+    mgr.allocate(_streams(10))
+    ctrl = mgr.controller()
+    before_plan = ctrl.plan
+    before_bins = [(b.uid, tuple(sorted(b.members))) for b in ctrl._bins]
+    # Migrating a stream out of a healthy bin cannot certify a saving.
+    some = next(iter(ctrl._bins[0].members))
+    mig = ctrl.try_migrate([some])
+    if not mig.accepted:
+        assert ctrl.plan is before_plan
+        assert [
+            (b.uid, tuple(sorted(b.members))) for b in ctrl._bins
+        ] == before_bins
+        assert mig.migrated == ()
+        assert mig.cost_after >= mig.cost_before - 1e-9
+    with pytest.raises(KeyError):
+        ctrl.try_migrate(["no-such-stream"])
+
+
+def test_consolidation_recovers_drained_bins():
+    """On a removal-heavy trace the consolidation controller must end at
+    most as expensive as pure pinning, strictly cheaper on this trace."""
+    events = _drain_events()
+
+    def run(policy):
+        mgr = _manager()
+        mgr.allocate(_streams(20))
+        ctrl = mgr.controller(policy=policy, gap_threshold=10.0)
+        results = [ctrl.apply(ev) for ev in events]
+        for r in results:
+            r.plan.solution.validate()
+        return ctrl, results
+
+    _, pin = run(PinningPolicy())
+    ctrl, cons = run(ConsolidationPolicy(max_migrations=3))
+    assert any(
+        a.startswith("consolidate") for r in cons for a in r.actions
+    )
+    # Step-wise dominance: never costlier than pinning, and the drained
+    # fleet ends strictly cheaper on strictly fewer instances.
+    for a, b in zip(pin, cons):
+        assert b.plan.hourly_cost <= a.plan.hourly_cost + 1e-9
+    assert cons[-1].plan.hourly_cost < pin[-1].plan.hourly_cost - 1e-9
+    assert len(cons[-1].plan.instances) < len(pin[-1].plan.instances)
+    # Per-event budget: warm/noop re-plans never migrate more than k.
+    for r in cons:
+        if r.mode in ("warm", "noop"):
+            assert len(r.migrated) <= 3
+
+
+def test_consolidation_k0_is_pinning_bit_identical():
+    events = _drain_events()
+
+    def run(policy):
+        mgr = _manager()
+        mgr.allocate(_streams(20))
+        ctrl = mgr.controller(policy=policy, gap_threshold=10.0)
+        return [ctrl.apply(ev) for ev in events]
+
+    pin = run(PinningPolicy())
+    k0 = run(ConsolidationPolicy(max_migrations=0))
+    for a, b in zip(pin, k0):
+        assert a.mode == b.mode
+        assert a.plan.hourly_cost == b.plan.hourly_cost
+        assert a.plan.instances == b.plan.instances
+        assert sorted(
+            (p.stream.name, p.instance_index, p.device)
+            for p in a.plan.placements
+        ) == sorted(
+            (p.stream.name, p.instance_index, p.device)
+            for p in b.plan.placements
+        )
+        assert b.actions == ()
+
+
+# ------------------------------------------------------------ dual-price aging
+
+
+class _FakeMech:
+    """Duck-typed mechanism for isolated aging-policy tests."""
+
+    def __init__(self, gap_threshold, refreshed_lb):
+        self.gap_threshold = gap_threshold
+        self.refreshed_lb = refreshed_lb
+        self.refreshes = 0
+
+    def refresh_prices(self):
+        self.refreshes += 1
+        return self.refreshed_lb
+
+
+def _result(cost, lb, mode="warm"):
+    gap = (cost - lb) / lb if lb > 0 else 0.0
+    return ReplanResult(
+        plan=dataclasses.make_dataclass("P", ["hourly_cost"])(cost),
+        mode=mode,
+        displaced=(),
+        migrated=(),
+        lower_bound=lb,
+        gap=max(0.0, gap),
+        nodes=0,
+    )
+
+
+def test_aging_triggers_after_patience_and_tightens():
+    mech = _FakeMech(gap_threshold=0.1, refreshed_lb=9.8)
+    pol = DualPriceAgingPolicy(patience=3)
+    wide = _result(10.0, 9.0)  # gap 11% > threshold/2
+    for i in range(2):
+        out = pol.on_event(mech, None, wide)
+        assert mech.refreshes == 0 and out is wide
+    out = pol.on_event(mech, None, wide)
+    assert mech.refreshes == 1
+    assert out.lower_bound == pytest.approx(9.8)
+    assert out.gap == pytest.approx((10.0 - 9.8) / 9.8)
+    assert "reprice" in out.actions
+    # Streak restarts after a refresh.
+    out = pol.on_event(mech, None, wide)
+    assert mech.refreshes == 1
+
+
+def test_aging_narrow_gap_resets_streak():
+    mech = _FakeMech(gap_threshold=0.1, refreshed_lb=99.0)
+    pol = DualPriceAgingPolicy(patience=2)
+    wide, narrow = _result(10.0, 9.0), _result(10.0, 9.9)
+    pol.on_event(mech, None, wide)
+    pol.on_event(mech, None, narrow)  # gap 1% <= 5%: reset
+    pol.on_event(mech, None, wide)
+    assert mech.refreshes == 0
+    pol.on_event(mech, None, wide)
+    assert mech.refreshes == 1
+
+
+def test_aging_flat_refresh_is_recorded_not_applied():
+    mech = _FakeMech(gap_threshold=0.1, refreshed_lb=8.0)  # no tighter
+    pol = DualPriceAgingPolicy(patience=1)
+    out = pol.on_event(mech, None, _result(10.0, 9.0))
+    assert mech.refreshes == 1
+    assert out.lower_bound == pytest.approx(9.0)  # keeps the better bound
+    assert "reprice:flat" in out.actions
+
+
+# -------------------------------------------------------- lookahead autoscaler
+
+
+def test_forecast_cone_grid_order_and_validation():
+    fleet = _streams(4)
+    fc = StreamForecast(
+        joins=(StreamSpec("f0", ZF, 0.5), StreamSpec("f1", VGG, 0.2)),
+        leaves=("s0",),
+    )
+    cone = forecast_cone(fleet, fc)
+    assert len(cone) == 3 * 2
+    assert cone[0] == tuple(fleet)  # (j=0, l=0)
+    assert {s.name for s in cone[1]} == {"s1", "s2", "s3"}  # (0, 1)
+    assert {s.name for s in cone[-1]} == {"s1", "s2", "s3", "f0", "f1"}
+    with pytest.raises(KeyError):
+        forecast_cone(fleet, StreamForecast(leaves=("nope",)))
+    with pytest.raises(ValueError):
+        forecast_cone(fleet, StreamForecast(joins=(fleet[0],)))
+    with pytest.raises(ValueError):
+        StreamForecast(leaves=("a", "a"))
+
+
+def test_cheapest_provisioning_path_matches_bruteforce():
+    import itertools
+
+    rng = np.random.RandomState(3)
+    for _ in range(20):
+        J, L = rng.randint(1, 5), rng.randint(1, 5)
+        grid = rng.uniform(1.0, 10.0, size=(J, L))
+        path, total = cheapest_provisioning_path(grid)
+        assert path[0] == (0, 0) and path[-1] == (J - 1, L - 1)
+        assert len(path) == J + L - 1
+        for (j0, l0), (j1, l1) in zip(path, path[1:]):
+            assert (j1 - j0, l1 - l0) in ((1, 0), (0, 1))
+        assert total == pytest.approx(sum(grid[j, l] for j, l in path))
+        # Brute force over all monotone paths.
+        best = min(
+            sum(
+                grid[
+                    sum(1 for s in steps[:t] if s == 0),
+                    sum(1 for s in steps[:t] if s == 1),
+                ]
+                for t in range(J + L - 1)
+            )
+            for steps in itertools.permutations([0] * (J - 1) + [1] * (L - 1))
+        )
+        assert total == pytest.approx(best)
+
+
+def test_autoscaler_attaches_cone_advice():
+    mgr = _manager()
+    fc = StreamForecast(
+        joins=(StreamSpec("f0", ZF, 5.0), StreamSpec("f1", ZF, 5.0)),
+        leaves=("s0",),
+    )
+    mgr.allocate(_streams(6))
+    ctrl = mgr.controller(policy=LookaheadAutoscaler(forecast=fc))
+    r = ctrl.apply(StreamAdded(StreamSpec("x", ZF, 0.5)))
+    assert r.advice is not None
+    grid = np.asarray(r.advice["grid"])
+    assert grid.shape == (3, 2)
+    ref = first_fit_decreasing(mgr.formulate(list(ctrl.fleet), ST3)).cost
+    assert grid[0, 0] == pytest.approx(ref)  # cone root = current fleet
+    assert r.advice["peak_cost"] >= r.advice["current_cost"] - 1e-9
+    assert any(a.startswith("autoscale") for a in r.actions)
+
+
+def test_autoscaler_stale_forecast_does_not_discard_replan():
+    """The lookahead is advisory: a forecast invalidated by real churn (a
+    leave that already left) must not raise out of the live apply()."""
+    mgr = _manager()
+    mgr.allocate(_streams(5))
+    stale = StreamForecast(leaves=("s0",))
+    ctrl = mgr.controller(policy=LookaheadAutoscaler(forecast=stale))
+    r = ctrl.apply(StreamRemoved("s0"))  # now the forecast names a ghost
+    assert r.advice is None
+    assert any(a.startswith("autoscale:invalid-forecast") for a in r.actions)
+    assert sorted(s.name for s in ctrl.fleet) == ["s1", "s2", "s3", "s4"]
+
+
+def test_autoscaler_callable_forecast_and_none():
+    mgr = _manager()
+    mgr.allocate(_streams(5))
+    seen = []
+
+    def forecaster(fleet, event):
+        seen.append((len(fleet), event))
+        return None  # no forecast: no advice
+
+    ctrl = mgr.controller(policy=LookaheadAutoscaler(forecast=forecaster))
+    r = ctrl.apply(StreamRemoved("s0"))
+    assert r.advice is None and r.actions == ()
+    assert len(seen) == 1 and isinstance(seen[0][1], StreamRemoved)
+
+
+# ----------------------------------------------------- composite + plumbing
+
+
+def test_composite_policy_folds_in_order():
+    calls = []
+
+    class Tag(ReplanPolicy):
+        def __init__(self, tag):
+            self.tag = tag
+
+        def on_event(self, mech, event, result):
+            calls.append(self.tag)
+            return dataclasses.replace(
+                result, actions=result.actions + (self.tag,)
+            )
+
+    mgr = _manager()
+    mgr.allocate(_streams(5))
+    ctrl = mgr.controller(policy=CompositePolicy(Tag("a"), Tag("b")))
+    r = ctrl.apply(StreamRemoved("s0"))
+    assert calls == ["a", "b"]
+    assert r.actions == ("a", "b")
+
+
+def test_manager_controller_policy_reconfigure_in_place():
+    mgr = _manager()
+    mgr.allocate(_streams(5))
+    ctrl = mgr.controller()
+    assert isinstance(ctrl.policy, PinningPolicy)
+    pol = ConsolidationPolicy(max_migrations=2)
+    same = mgr.controller(ST3, policy=pol)
+    assert same is ctrl and ctrl.policy is pol
+    assert ctrl.fleet  # live state survived the reconfigure
+    with pytest.raises(TypeError):
+        mgr.controller(ST3, bogus_option=1)
+
+
+def test_simulate_churn_records_policy_activity():
+    mgr = _manager()
+    # Wide threshold: keep the replay on the warm path (where the
+    # consolidation policy acts) instead of full-resolve fallbacks.
+    mgr.controller(ST3, gap_threshold=10.0)
+    out = simulate_churn(
+        mgr,
+        _streams(20),
+        _drain_events(),
+        paper_profile_table(),
+        policy=ConsolidationPolicy(max_migrations=3),
+        target=0.5,
+    )
+    tl = out["timeline"]
+    assert all("fragmentation" in t and "actions" in t for t in tl)
+    assert out["consolidations"] >= 1
+    assert out["final_cost"] == tl[-1]["cost"]
+    assert 0.0 <= out["final_fragmentation"] <= 1.0
+    assert mgr.controller().policy.max_migrations == 3  # installed for replay
+
+
+# --------------------------------------------------------- parallel sweep
+
+
+def test_parallel_sweep_matches_serial():
+    for streams in (_streams(8), _streams(13, prefix="c")):
+        serial = _manager().allocate_sweep(streams)
+        threaded = _manager().allocate_sweep(streams, parallel=True)
+        capped = _manager().allocate_sweep(streams, parallel=2)
+        assert list(serial) == list(threaded) == list(capped)
+        for name in serial:
+            if serial[name] is None:
+                assert threaded[name] is None and capped[name] is None
+                continue
+            for other in (threaded, capped):
+                assert other[name] is not None
+                assert other[name].hourly_cost == pytest.approx(
+                    serial[name].hourly_cost
+                )
+                assert other[name].instances == serial[name].instances
+                other[name].solution.validate()
+    # Strategy order of the result dict is preserved.
+    assert list(
+        _manager().allocate_sweep(_streams(8), parallel=True)
+    ) == [s.name for s in ALL_STRATEGIES]

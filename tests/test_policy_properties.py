@@ -1,0 +1,136 @@
+"""Randomized invariants of the consolidation policy (ISSUE-3 properties).
+
+Over random small fleets and churn traces:
+
+* consolidation never increases the certified cost of a shipped plan —
+  the policy's post-event result is never costlier (or wider-gapped) than
+  the mechanism result it amended;
+* it never exceeds the per-event migration budget ``k`` on warm re-plans;
+* at ``k = 0`` the consolidation controller is bit-identical to the pure
+  pinning controller (plans, modes, costs) — the policy layer's refactor
+  cannot perturb the mechanism.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binpack import BinType
+from repro.core.manager import ResourceManager
+from repro.core.policy import ConsolidationPolicy, PinningPolicy
+from repro.core.profiler import paper_profile_table
+from repro.core.streams import (
+    AnalysisProgram,
+    StreamAdded,
+    StreamRateChanged,
+    StreamRemoved,
+    StreamSpec,
+    apply_events,
+)
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+CATALOG = (
+    BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+    BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),
+    BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
+)
+KINDS = [(VGG, 0.25), (VGG, 0.2), (ZF, 0.5), (ZF, 2.0), (ZF, 5.0)]
+
+
+class RecordingConsolidation(ConsolidationPolicy):
+    """Consolidation that logs (mechanism result, shipped result) pairs."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.log = []
+
+    def on_event(self, mech, event, result):
+        out = super().on_event(mech, event, result)
+        self.log.append((result, out))
+        return out
+
+
+@st.composite
+def churn_traces(draw):
+    """(initial fleet size, events) with events valid against the
+    evolving fleet (removals name live streams, adds are fresh)."""
+    n0 = draw(st.integers(4, 9))
+    fleet = [
+        StreamSpec(f"s{i}", *KINDS[i % len(KINDS)]) for i in range(n0)
+    ]
+    events = []
+    for step in range(draw(st.integers(1, 6))):
+        live = [s.name for s in fleet]
+        kinds = ["add", "rate"] if len(live) <= 2 else ["add", "rm", "rate"]
+        kind = draw(st.sampled_from(kinds))
+        if kind == "add":
+            ev = StreamAdded(
+                StreamSpec(
+                    f"h{step}", *KINDS[draw(st.integers(0, len(KINDS) - 1))]
+                )
+            )
+        elif kind == "rm":
+            ev = StreamRemoved(draw(st.sampled_from(live)))
+        else:
+            name = draw(st.sampled_from(live))
+            spec = next(s for s in fleet if s.name == name)
+            rates = [
+                fps
+                for prog, fps in KINDS
+                if prog.program_id == spec.program.program_id
+            ]
+            ev = StreamRateChanged(name, draw(st.sampled_from(rates)))
+        events.append(ev)
+        fleet = list(apply_events(fleet, [ev]))
+    return n0, events
+
+
+def _run(n0, events, policy, gap_threshold):
+    mgr = ResourceManager(CATALOG, paper_profile_table(), max_nodes=50_000)
+    mgr.allocate(
+        [StreamSpec(f"s{i}", *KINDS[i % len(KINDS)]) for i in range(n0)]
+    )
+    ctrl = mgr.controller(policy=policy, gap_threshold=gap_threshold)
+    return [ctrl.apply(ev) for ev in events]
+
+
+@settings(max_examples=15, deadline=None)
+@given(churn_traces(), st.sampled_from([1, 2, 3]))
+def test_consolidation_invariants(trace, k):
+    n0, events = trace
+    policy = RecordingConsolidation(max_migrations=k)
+    results = _run(n0, events, policy, gap_threshold=10.0)
+    for r in results:
+        r.plan.solution.validate()
+        if r.mode in ("warm", "noop"):
+            assert len(r.migrated) <= k  # budget never exceeded
+    for mech_result, shipped in policy.log:
+        # Consolidation never increases the certified cost (or gap).
+        assert (
+            shipped.plan.hourly_cost <= mech_result.plan.hourly_cost + 1e-9
+        )
+        assert shipped.gap <= mech_result.gap + 1e-9
+        if shipped.actions:
+            assert shipped.plan.hourly_cost < mech_result.plan.hourly_cost
+
+
+@settings(max_examples=10, deadline=None)
+@given(churn_traces())
+def test_consolidation_k0_bit_identical_to_pinning(trace):
+    n0, events = trace
+    pin = _run(n0, events, PinningPolicy(), gap_threshold=10.0)
+    k0 = _run(n0, events, ConsolidationPolicy(max_migrations=0), 10.0)
+    for a, b in zip(pin, k0):
+        assert a.mode == b.mode
+        assert a.gap == b.gap
+        assert a.plan.hourly_cost == b.plan.hourly_cost
+        assert a.plan.instances == b.plan.instances
+        assert [
+            (p.stream.name, p.instance_index, p.device)
+            for p in a.plan.placements
+        ] == [
+            (p.stream.name, p.instance_index, p.device)
+            for p in b.plan.placements
+        ]
+        assert b.actions == ()
