@@ -39,6 +39,7 @@ N_STREAMS = 500
 N_EVENTS = 200
 COLD_EVERY = 25  # sample a from-scratch solve every k-th event
 MAX_NODES = 20_000
+EVENT_GAP_H = 0.02  # deterministic event spacing (72 s) for the timed replay
 
 _VGG = AnalysisProgram("VGG-16", "vgg16")
 _ZF = AnalysisProgram("ZF", "zf")
@@ -53,23 +54,32 @@ def _initial_fleet() -> list[StreamSpec]:
     ]
 
 
-def _trace(ctrl, rng) -> list:
-    """One random churn event against the controller's live fleet."""
+def _trace(ctrl, rng, at: float = 0.0):
+    """One random timed churn event against the controller's live fleet.
+
+    ``at`` stamps the event for the lifecycle clock; the rng draws are
+    identical to the historical untimed generator, so the replayed cost
+    sequence (and the stored floors) are unchanged.
+    """
     roll = rng.rand()
     if roll < 0.30:
         name = f"j{rng.randint(10**9)}"
-        return StreamAdded(StreamSpec(name, *KINDS[rng.randint(len(KINDS))]))
+        return StreamAdded(
+            StreamSpec(name, *KINDS[rng.randint(len(KINDS))]), at=at
+        )
     if roll < 0.55:
         live = ctrl.fleet
-        return StreamRemoved(live[rng.randint(len(live))].name)
+        return StreamRemoved(live[rng.randint(len(live))].name, at=at)
     if roll < 0.95:
         live = ctrl.fleet
         s = live[rng.randint(len(live))]
         rates = [fps for prog, fps in KINDS if prog.program_id == s.program.program_id]
-        return StreamRateChanged(s.name, rates[rng.randint(len(rates))])
+        return StreamRateChanged(s.name, rates[rng.randint(len(rates))], at=at)
     bt = ("c4.2xlarge", "c4.8xlarge", "g2.2xlarge")[rng.randint(3)]
     base = {"c4.2xlarge": 0.419, "c4.8xlarge": 1.675, "g2.2xlarge": 0.650}[bt]
-    return PriceChanged(bt, round(base * (1.0 + 0.05 * rng.randn()), 4))
+    return PriceChanged(
+        bt, round(base * (1.0 + 0.05 * rng.randn()), 4), at=at
+    )
 
 
 def run() -> dict:
@@ -96,7 +106,7 @@ def run() -> dict:
     migrations = 0
     modes = {"warm": 0, "full": 0, "noop": 0}
     for i in range(N_EVENTS):
-        ev = _trace(ctrl, rng)
+        ev = _trace(ctrl, rng, at=(i + 1) * EVENT_GAP_H)
         t0 = time.perf_counter()
         r = ctrl.apply(ev)
         dt = (time.perf_counter() - t0) * 1e6

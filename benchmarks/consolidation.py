@@ -47,6 +47,7 @@ from repro.core.streams import (
     StreamRateChanged,
     StreamRemoved,
     StreamSpec,
+    TimedTrace,
     apply_events,
 )
 
@@ -58,6 +59,12 @@ COLD_EVERY = 25  # sample a from-scratch solve every k-th event
 MAX_NODES = 20_000
 K_MIGRATIONS = 3
 GAP_THRESHOLD = 0.3  # wide: isolate the warm path (no full-resolve masking)
+#: Deterministic event spacing (72 s).  Timestamps ride along on the same
+#: rng-drawn event sequence (the rng draws are untouched, so the cost
+#: curves — and the BENCH_policy.json floors — are bit-identical to the
+#: untimed trace); benchmarks/lifecycle.py replays this exact trace
+#: through the billing engine.
+EVENT_GAP_H = 0.02
 
 _VGG = AnalysisProgram("VGG-16", "vgg16")
 _ZF = AnalysisProgram("ZF", "zf")
@@ -70,8 +77,8 @@ def _initial_fleet() -> list[StreamSpec]:
     ]
 
 
-def _trace(streams: list[StreamSpec], rng) -> list:
-    """Pre-generate the churn trace against a pure fleet replay.
+def _trace(streams: list[StreamSpec], rng) -> TimedTrace:
+    """Pre-generate the timed churn trace against a pure fleet replay.
 
     Removal-heavy mix (0.18 join / 0.52 leave / 0.30 re-rate, floored at
     half the initial fleet): leaves drain bins and fragment a pinned
@@ -80,18 +87,21 @@ def _trace(streams: list[StreamSpec], rng) -> list:
     the policies separate.  Pre-generating the events (rather than
     sampling against a live controller) keeps the sequence bit-identical
     across the compared policies; given the trace, both cost curves are
-    deterministic — only the timing rows vary per machine.
+    deterministic — only the timing rows vary per machine.  Events carry
+    deterministic ``EVENT_GAP_H``-spaced timestamps (no extra rng draws),
+    so the same trace replays through the lifecycle billing engine.
     """
     fleet = list(streams)
     events = []
     for i in range(N_EVENTS):
+        at = (i + 1) * EVENT_GAP_H
         roll = rng.rand()
         if roll < 0.18 or len(fleet) < N_STREAMS // 2:
             ev = StreamAdded(
-                StreamSpec(f"j{i}", *KINDS[rng.randint(len(KINDS))])
+                StreamSpec(f"j{i}", *KINDS[rng.randint(len(KINDS))]), at=at
             )
         elif roll < 0.70:
-            ev = StreamRemoved(fleet[rng.randint(len(fleet))].name)
+            ev = StreamRemoved(fleet[rng.randint(len(fleet))].name, at=at)
         else:
             s = fleet[rng.randint(len(fleet))]
             rates = [
@@ -99,10 +109,12 @@ def _trace(streams: list[StreamSpec], rng) -> list:
                 for prog, fps in KINDS
                 if prog.program_id == s.program.program_id
             ]
-            ev = StreamRateChanged(s.name, rates[rng.randint(len(rates))])
+            ev = StreamRateChanged(
+                s.name, rates[rng.randint(len(rates))], at=at
+            )
         events.append(ev)
         fleet = list(apply_events(fleet, [ev]))
-    return events
+    return TimedTrace(events, horizon=(N_EVENTS + 1) * EVENT_GAP_H)
 
 
 def _replay(policy, events, *, sample_cold: bool):

@@ -1,0 +1,259 @@
+"""Beyond-paper: instance lifecycle & billing study on timed churn traces.
+
+Four experiments over the discrete-event `simulate_churn` replay and the
+`core.lifecycle` billing engine, all on 500-stream fleets:
+
+1. **Snapshot bit-identity** (regression): the consolidation benchmark's
+   removal-heavy 200-event trace, replayed under `PinningPolicy` with
+   per-second billing and zero boot latency, must reproduce the stored
+   ``BENCH_policy.json`` snapshot-cost timeline bit for bit — the timed
+   refactor may not perturb the PR-3 cost semantics — and its billed
+   total must match the instantaneous $/hr integral.
+
+2. **Billing-granularity ablation**: the same growth trace replayed under
+   hourly vs per-second billing quantifies the hourly round-up premium
+   (always >= 0: quantization only rounds up).
+
+3. **Acting autoscaler vs reactive pinning**: on a bursty join-heavy
+   timed trace with a 2-minute boot latency, `ActingAutoscaler` holds
+   warm spares ahead of an oracle join forecast; joins then land on
+   already-booted instances.  Gated: post-join degraded stream-seconds
+   drop vs the reactive controller at <= 5% billed-cost overhead.
+
+4. **Billing-aware vs billing-blind consolidation**: hourly billing on
+   the removal-heavy trace; `ConsolidationPolicy(billing_horizon=1h)`
+   rejects evacuations whose quantum is already sunk.  Gated: the aware
+   policy never ends with a larger bill than the blind one.
+
+Emits ``BENCH_lifecycle.json``, gated by ``scripts/check_bench.py``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.catalog import paper_ec2_catalog
+from repro.core.lifecycle import BillingModel
+from repro.core.manager import ResourceManager
+from repro.core.policy import ActingAutoscaler, ConsolidationPolicy, PinningPolicy
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_churn
+from repro.core.streams import (
+    StreamAdded,
+    StreamForecast,
+    StreamSpec,
+    synthetic_timed_trace,
+)
+
+from . import consolidation
+from .common import record, write_json
+
+BOOT_H = 2.0 / 60.0  # 2-minute instance boot latency
+HOURLY = BillingModel(boot_hours=BOOT_H, quantum_hours=1.0)
+PER_SECOND = BillingModel(boot_hours=BOOT_H, quantum_hours=0.0)
+SNAPSHOT = BillingModel(boot_hours=0.0, quantum_hours=0.0)  # PR-3 semantics
+
+GROWTH_EVENTS = 90
+GROWTH_GAP_H = 0.03  # ~2.7 h span: several hourly quanta
+LOOKAHEAD_H = 0.15  # oracle forecast window for the acting autoscaler
+MAX_SPARES = 3
+GAP_THRESHOLD = 0.3  # wide: keep both compared replays on the warm path
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _replay(initial, trace, *, policy, billing, max_nodes=None):
+    mgr = ResourceManager(
+        paper_ec2_catalog(),
+        paper_profile_table(),
+        max_nodes=max_nodes or consolidation.MAX_NODES,
+    )
+    mgr.controller(gap_threshold=GAP_THRESHOLD)
+    return simulate_churn(
+        mgr,
+        initial,
+        trace,
+        paper_profile_table(),
+        policy=policy,
+        billing=billing,
+    )
+
+
+def _growth_trace(initial):
+    """Bursty join-heavy growth: the arrival pattern pre-provisioning is
+    judged on (joins that must open fresh instances, mid-quantum)."""
+    rng = np.random.RandomState(2618)
+    kinds = consolidation.KINDS
+
+    def make_join(i):
+        return StreamSpec(f"g{i}", *kinds[i % len(kinds)])
+
+    return synthetic_timed_trace(
+        initial,
+        rng,
+        n_events=GROWTH_EVENTS,
+        mean_gap_hours=GROWTH_GAP_H,
+        p_join=0.6,
+        p_leave=0.15,
+        make_join=make_join,
+        rerate_fps=lambda s: [
+            fps
+            for prog, fps in kinds
+            if prog.program_id == s.program.program_id
+        ],
+        burst=3,
+    )
+
+
+def _oracle_forecast(trace):
+    """Perfect short-horizon join forecaster read off the trace itself."""
+    adds = [(ev.at, ev.stream) for ev in trace if isinstance(ev, StreamAdded)]
+
+    def forecast(fleet, event):
+        now = event.at if event is not None else 0.0
+        live = {s.name for s in fleet}
+        upcoming = tuple(
+            s
+            for t, s in adds
+            if now < t <= now + LOOKAHEAD_H and s.name not in live
+        )
+        return StreamForecast(joins=upcoming[:MAX_SPARES])
+
+    return forecast
+
+
+def _post_join_degraded(out) -> float:
+    """Degraded stream-seconds excluding the initial reset boot (identical
+    across policies: every instance boots once at t=0)."""
+    reset_wait = out["timeline"][0]["boot_wait_stream_hours"] * 3600.0
+    return out["degraded_stream_seconds"] - reset_wait
+
+
+def run() -> dict:
+    initial = consolidation._initial_fleet()
+    rng = np.random.RandomState(1802)  # the consolidation bench's seed
+    removal_trace = consolidation._trace(list(initial), rng)
+
+    # ---- 1. snapshot bit-identity under per-second / zero-boot billing
+    t0 = time.perf_counter()
+    pin = _replay(initial, removal_trace, policy=PinningPolicy(), billing=SNAPSHOT)
+    pin_s = time.perf_counter() - t0
+    stored = json.load(open(_REPO / "BENCH_policy.json"))["meta"]
+    final = pin["timeline"][-1]["cost"]
+    bitident_delta = abs(final - stored["final_cost_pinning"])
+    integral_delta = abs(
+        pin["billed_cost"] - pin["snapshot_cost_integral"]
+    ) / max(pin["snapshot_cost_integral"], 1e-12)
+    record(
+        "lifecycle/pinning_bitident", pin_s * 1e6,
+        f"final=${final:.2f} stored=${stored['final_cost_pinning']:.2f} "
+        f"delta={bitident_delta:g} billed-integral={integral_delta:.2e}",
+    )
+
+    # ---- 2. hourly vs per-second billing ablation (same replay, re-billed)
+    growth = _growth_trace(initial)
+    reactive = {}
+    for name, billing in (("hourly", HOURLY), ("per_second", PER_SECOND)):
+        t0 = time.perf_counter()
+        reactive[name] = _replay(
+            initial, growth, policy=PinningPolicy(), billing=billing
+        )
+        record(
+            f"lifecycle/reactive_{name}", (time.perf_counter() - t0) * 1e6,
+            f"billed=${reactive[name]['billed_cost']:.2f} "
+            f"integral=${reactive[name]['snapshot_cost_integral']:.2f} "
+            f"degraded={_post_join_degraded(reactive[name]):.0f}s",
+        )
+    hourly_premium = (
+        reactive["hourly"]["billed_cost"] / reactive["per_second"]["billed_cost"]
+        - 1.0
+    )
+
+    # ---- 3. acting autoscaler vs reactive pinning (hourly billing)
+    t0 = time.perf_counter()
+    acting = _replay(
+        initial,
+        growth,
+        policy=ActingAutoscaler(
+            forecast=_oracle_forecast(growth), max_spares=MAX_SPARES
+        ),
+        billing=HOURLY,
+    )
+    acting_s = time.perf_counter() - t0
+    deg_reactive = _post_join_degraded(reactive["hourly"])
+    deg_acting = _post_join_degraded(acting)
+    degraded_reduction = 1.0 - deg_acting / max(deg_reactive, 1e-12)
+    overhead = acting["billed_cost"] / reactive["hourly"]["billed_cost"] - 1.0
+    provisions = sum(
+        a.startswith("autoscale:provision")
+        for t in acting["timeline"]
+        for a in t["actions"]
+    )
+    record(
+        "lifecycle/acting_autoscaler", acting_s * 1e6,
+        f"degraded={deg_acting:.0f}s vs reactive={deg_reactive:.0f}s "
+        f"(-{degraded_reduction:.0%}) billed=${acting['billed_cost']:.2f} "
+        f"overhead={overhead:+.2%} spares_provisioned={provisions}",
+    )
+
+    # ---- 4. billing-aware vs billing-blind consolidation (hourly billing)
+    runs = {}
+    for name, policy in (
+        ("blind", ConsolidationPolicy(max_migrations=3)),
+        ("aware", ConsolidationPolicy(max_migrations=3, billing_horizon=1.0)),
+    ):
+        t0 = time.perf_counter()
+        runs[name] = _replay(initial, removal_trace, policy=policy, billing=HOURLY)
+        rejects = sum(
+            a.startswith("billed-reject")
+            for t in runs[name]["timeline"]
+            for a in t["actions"]
+        )
+        record(
+            f"lifecycle/consolidation_{name}", (time.perf_counter() - t0) * 1e6,
+            f"billed=${runs[name]['billed_cost']:.2f} "
+            f"final=${runs[name]['final_cost']:.2f} "
+            f"consolidations={runs[name]['consolidations']} "
+            f"billed_rejects={rejects}",
+        )
+    aware_excess = (
+        runs["aware"]["billed_cost"] / runs["blind"]["billed_cost"] - 1.0
+    )
+
+    out = {
+        "pinning_bitident_delta": bitident_delta,
+        "persecond_billed_integral_delta": integral_delta,
+        "hourly_premium": hourly_premium,
+        "degraded_reduction": degraded_reduction,
+        "degraded_seconds_reactive": deg_reactive,
+        "degraded_seconds_acting": deg_acting,
+        "acting_billed_overhead": overhead,
+        "billed_cost_reactive": reactive["hourly"]["billed_cost"],
+        "billed_cost_acting": acting["billed_cost"],
+        "billed_cost_consolidation_blind": runs["blind"]["billed_cost"],
+        "billed_cost_consolidation_aware": runs["aware"]["billed_cost"],
+        "billing_aware_excess": aware_excess,
+        "spares_provisioned": provisions,
+    }
+    record(
+        "lifecycle/summary", 0.0,
+        f"premium={hourly_premium:.1%} degraded -{degraded_reduction:.0%} "
+        f"overhead={overhead:+.2%} aware_excess={aware_excess:+.3%}",
+    )
+    write_json(
+        "BENCH_lifecycle.json",
+        prefix="lifecycle/",
+        meta={
+            "n_streams": consolidation.N_STREAMS,
+            "n_removal_events": consolidation.N_EVENTS,
+            "n_growth_events": GROWTH_EVENTS,
+            "boot_hours": BOOT_H,
+            "lookahead_hours": LOOKAHEAD_H,
+            "max_spares": MAX_SPARES,
+            **out,
+        },
+    )
+    return out

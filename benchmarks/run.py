@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
   tpu_allocation     — beyond-paper TPU-cloud allocation scenario
   churn_replan       — live-churn warm-start re-planning vs from-scratch
   consolidation      — policy layer: bounded-migration consolidation vs pinning
+  lifecycle          — instance lifecycle & billing: quantized billing,
+                       acting autoscaler vs reactive, billing-aware moves
   roofline_report    — §Roofline table from dry-run artifacts
 
 Suites that emit a gated artifact (``churn_replan`` → ``BENCH_replan.json``,
@@ -25,7 +27,11 @@ import sys
 import traceback
 
 #: suite name -> artifact its run() emits, gated by scripts/check_bench.py.
-GATED_ARTIFACTS = {"churn": "BENCH_replan.json", "policy": "BENCH_policy.json"}
+GATED_ARTIFACTS = {
+    "churn": "BENCH_replan.json",
+    "policy": "BENCH_policy.json",
+    "lifecycle": "BENCH_lifecycle.json",
+}
 
 
 def main() -> None:
@@ -43,6 +49,7 @@ def main() -> None:
         consolidation,
         fig5_framerate,
         fig6_streams,
+        lifecycle,
         roofline_report,
         solver_scaling,
         table2_speedup,
@@ -62,6 +69,7 @@ def main() -> None:
         "ablation": ablation_cap,
         "churn": churn_replan,
         "policy": consolidation,
+        "lifecycle": lifecycle,
         "roofline": roofline_report,
     }
     selected = args.only or list(suites)

@@ -31,6 +31,26 @@ FLOORS: dict[str, dict[str, tuple[str, float, str]]] = {
         # And must not cost materially more than the cold plans they avoid.
         "cost_ratio_mean": ("<=", 1.10, "warm/cold cost-ratio ceiling"),
     },
+    "BENCH_lifecycle.json": {
+        # Acceptance: the timed refactor must not perturb PR-3 snapshot
+        # costing — PinningPolicy with per-second billing and zero boot
+        # latency reproduces the stored BENCH_policy.json final cost bit
+        # for bit ...
+        "pinning_bitident_delta": ("<=", 0.0, "snapshot cost bit-identity"),
+        # ... and its billed total matches the instantaneous integral
+        # (same math, different summation grouping, hence the epsilon).
+        "persecond_billed_integral_delta": ("<=", 1e-9, "billed == integral"),
+        # Quantized billing only rounds up.
+        "hourly_premium": (">=", 0.0, "hourly round-up premium sign"),
+        # Acceptance: acting on the forecast (warm spares) must cut the
+        # post-join degraded time vs reactive pinning (measured ~100%) ...
+        "degraded_reduction": (">=", 0.2, "post-join degraded-time cut"),
+        # ... at no more than 5% billed-cost overhead ...
+        "acting_billed_overhead": ("<=", 0.05, "pre-provisioning overhead"),
+        # ... and billing-aware consolidation never ends with a larger
+        # bill than the billing-blind policy under hourly billing.
+        "billing_aware_excess": ("<=", 1e-9, "billing-aware consolidation bill"),
+    },
     "BENCH_policy.json": {
         # Acceptance: bounded-migration consolidation (k<=3 per event) must
         # end the 500-stream / 200-event trace >= 5% cheaper than the

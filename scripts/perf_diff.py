@@ -14,21 +14,55 @@ Handles two artifact shapes:
     emitter stored in "meta" (e.g. the re-plan artifact's
     speedup_warm_vs_cold / max_certified_gap) are diffed alongside the
     rows; scripts/check_bench.py gates the same keys against floors.
+    Billed-cost metrics (the lifecycle artifact's "billed_*" keys and
+    degraded-time counters from benchmarks/lifecycle.py) get their own
+    dollar-formatted section, so billing-engine PRs can eyeball whether a
+    change moved the *bill*, not just the wall time.
 """
 import json
 import sys
 
 
+def _is_billed_key(k: str) -> bool:
+    return k.startswith("billed_") or k.startswith("degraded_seconds")
+
+
+def diff_billed(a: dict, b: dict) -> None:
+    am, bm = a.get("meta", {}), b.get("meta", {})
+    keys = sorted(k for k in set(am) | set(bm) if _is_billed_key(k))
+    shown = False
+    for k in keys:
+        x, y = am.get(k), bm.get(k)
+        if not (isinstance(x, (int, float)) and isinstance(y, (int, float))):
+            continue
+        if not shown:
+            print(
+                f"{'billed-cost metric':34s} {'before':>12s} {'after':>12s} "
+                f"{'delta':>8s}"
+            )
+            shown = True
+        unit = "s" if k.startswith("degraded") else "$"
+        delta = (y - x) / x if x else float("nan")
+        print(f"{k:34s} {unit}{x:11.2f} {unit}{y:11.2f} {delta:+8.1%}")
+    if shown:
+        print()
+
+
 def diff_meta(a: dict, b: dict) -> None:
+    diff_billed(a, b)
+    am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
         k
-        for k in sorted(set(a.get("meta", {})) | set(b.get("meta", {})))
-        if isinstance(a.get("meta", {}).get(k), (int, float))
-        or isinstance(b.get("meta", {}).get(k), (int, float))
+        for k in sorted(set(am) | set(bm))
+        if not _is_billed_key(k)
+        and (
+            isinstance(am.get(k), (int, float))
+            or isinstance(bm.get(k), (int, float))
+        )
     ]
     shown = False
     for k in keys:
-        x, y = a["meta"].get(k), b["meta"].get(k)
+        x, y = am.get(k), bm.get(k)
         if not (isinstance(x, (int, float)) and isinstance(y, (int, float))):
             continue
         if not shown:

@@ -101,11 +101,18 @@ def _pack_inputs(t: ProblemTensors) -> tuple[np.ndarray, np.ndarray]:
     frac_tb = np.swapaxes(t.frac, 1, 2)  # (n, n_bt, max_choices)
     fits_new = (frac_tb <= 1.0 + _FRAC_EPS) & t.choice_mask[:, None, :]
     open_score = np.where(
-        fits_new,
-        t.costs[None, :, None] - 0.5 * t.costs[None, :, None] * np.minimum(frac_tb, 1.0),
-        np.inf,
+        fits_new, open_cost_score(t.costs[None, :, None], frac_tb), np.inf
     )
     return order, open_score
+
+
+def open_cost_score(costs, frac):
+    """The open-bin cost-density rule: cheap bins the item nearly fills
+    win over expensive bins it barely dents.  Shared by the FFD/BFD
+    packers, the controller's greedy repair, and the acting autoscaler's
+    spare typing (`FleetController.open_host_bin`) — one implementation,
+    so the spares held always match what re-plans actually open."""
+    return costs - 0.5 * costs * np.minimum(frac, 1.0)
 
 
 def _pack(problem: Problem, best_fit: bool) -> Solution:

@@ -53,6 +53,27 @@ surface:
 * `refresh_prices()` — recompute the covering-LP dual prices (dual-price
   aging) and return the tightened lower bound;
 * `what_if(fleets)` — the batched lookahead described above.
+
+## Time, lifecycle, and billing
+
+The controller carries a monotone clock (``now``, hours — advanced by each
+event's ``at`` timestamp) and an instance lifecycle ledger
+(`core.lifecycle.LifecycleEngine`, parameterized by a `BillingModel`).
+Every open bin is an instance with a lifetime: provisioned when a re-plan
+first opens it (billed from that instant, serving only after the boot
+latency elapses), decommissioned when a re-plan closes it — with a drain
+window equal to the boot latency when the same step opened replacement
+bins, so migrations double-bill while the destination boots.  The ledger
+is what `simulate_churn` integrates billed cost over, and what
+`try_migrate(billing_horizon=...)` certifies consolidation moves against:
+under hourly billing, evacuating a bin mid-quantum saves nothing.
+
+Acting (not merely advisory) autoscaling rides the same ledger:
+`pre_provision` launches warm spare instances ahead of forecast joins
+(billed immediately, RUNNING once booted), and any re-plan that opens a
+new bin consumes a matching spare's uid instead of a cold boot — the
+join lands on an already-warm instance.  `release_spare` retires unused
+spares; `core.policy.ActingAutoscaler` drives both ends.
 """
 from __future__ import annotations
 
@@ -65,11 +86,13 @@ import numpy as np
 from .binpack import arcflow, bincompletion, heuristics
 from .binpack.problem import (
     BinType,
+    InfeasibleError,
     OpenBin,
     Problem,
     Solution,
     build_solution,
 )
+from .lifecycle import BillingModel, LifecycleEngine
 from .manager import AllocationPlan, PlacedStream
 from .strategies import ST3, Strategy
 from .streams import (
@@ -106,6 +129,7 @@ class ReplanResult:
     nodes: int  # B&B nodes spent on this step
     actions: tuple[str, ...] = ()  # policy-layer actions taken on this step
     advice: dict | None = None  # autoscaler provisioning advice, if any
+    at: float = 0.0  # controller clock (hours) when this step committed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +143,9 @@ class MigrationResult:
     nodes: int  # B&B nodes the sub-solve spent
     lower_bound: float  # certified LB on the current fleet's optimal cost
     gap: float  # (adopted plan cost - lower_bound) / lower_bound
+    #: $ billed over the certification horizon if adopted, relative to not
+    #: moving (negative = saving); None when no billing_horizon was given.
+    billed_delta: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +196,7 @@ class FleetController:
         gap_threshold: float = 0.1,
         sub_max_nodes: int = 50_000,
         policy=None,
+        billing: BillingModel | None = None,
     ) -> None:
         from .policy import PinningPolicy
 
@@ -177,6 +205,14 @@ class FleetController:
         self.gap_threshold = gap_threshold
         self.sub_max_nodes = sub_max_nodes
         self.policy = policy if policy is not None else PinningPolicy()
+        # Default billing is the timeless model (instant boot, continuous
+        # quantum): the lifecycle ledger then reproduces snapshot costing
+        # exactly and every pre-lifecycle call site behaves unchanged.
+        self.billing = billing if billing is not None else BillingModel()
+        self.lifecycle = LifecycleEngine(self.billing)
+        self.now = 0.0  # monotone clock, hours (advanced by event `at`s)
+        self._spares: dict[int, BinType] = {}  # warm spare uid -> type
+        self._ledger_live: set[int] = set()  # bin uids at the last sync
         self._streams: list[StreamSpec] = []
         self._problem: Problem | None = None
         self._plan: AllocationPlan | None = None
@@ -197,15 +233,29 @@ class FleetController:
     def plan(self) -> AllocationPlan | None:
         return self._plan
 
-    def reset(self, streams: Sequence[StreamSpec]) -> ReplanResult:
-        """Establish the fleet with a full (cold) solve."""
+    def reset(
+        self, streams: Sequence[StreamSpec], *, at: float | None = None
+    ) -> ReplanResult:
+        """Establish the fleet with a full (cold) solve.
+
+        ``at`` (hours) starts the lifecycle clock for a timed replay; the
+        previous fleet era's ledger and warm spares are discarded and
+        every opened instance is provisioned at the reset instant (it
+        boots — and is billed — from there).
+        """
         problem = self.manager.formulate(streams, self.strategy)
         plan = self.manager._plan(streams, problem, self.strategy)
         self._streams = list(streams)
         self._problem = problem
+        if at is not None:
+            self.now = at
+        self._spares = {}
+        self.lifecycle = LifecycleEngine(self.billing)
+        self._ledger_live = set()
         self._adopt_solution(problem, plan.solution, match_old=False)
         self._plan = plan
         self._prices = None  # stale for the new fleet era; refreshed lazily
+        self._sync_lifecycle()
         lb = bincompletion.root_lower_bound(problem)
         if plan.optimal:
             lb = max(lb, plan.hourly_cost)  # an exact solve IS a lower bound
@@ -217,8 +267,11 @@ class FleetController:
             lower_bound=lb,
             gap=_gap(plan.hourly_cost, lb),
             nodes=0,
+            at=self.now,
         )
-        return self.policy.on_reset(self, result)
+        result = self.policy.on_reset(self, result)
+        self._sync_lifecycle()
+        return result
 
     def apply_events(self, events: Sequence[FleetEvent]) -> list[ReplanResult]:
         return [self.apply(ev) for ev in events]
@@ -236,7 +289,10 @@ class FleetController:
         mid-replan the controller's state is stale — call `reset` before
         further events.
         """
-        return self.policy.on_event(self, event, self._fold(event))
+        self.now = max(self.now, event.at)
+        result = self.policy.on_event(self, event, self._fold(event))
+        self._sync_lifecycle()
+        return dataclasses.replace(result, at=self.now)
 
     def _fold(self, event: FleetEvent) -> ReplanResult:
         """The mechanism half of `apply`: fold one event, no policy."""
@@ -337,6 +393,7 @@ class FleetController:
         *,
         max_nodes: int | None = None,
         min_saving: float = 0.0,
+        billing_horizon: float | None = None,
     ) -> MigrationResult:
         """Attempt a bounded-migration consolidation move, transactionally.
 
@@ -349,6 +406,15 @@ class FleetController:
         (an exact sub-solve, so the reduction is certified); otherwise the
         bin states roll back untouched.  The *when/what* — which streams,
         how many per event — is the policy layer's decision.
+
+        With ``billing_horizon`` (hours) the move must additionally
+        certify a *billed* saving over ``[now, now + horizon]`` through
+        the lifecycle ledger: closed bins only stop billing at their next
+        quantum boundary (delayed by the drain window when replacements
+        must boot), while cold new bins bill fresh quanta — so under
+        hourly billing an evacuation that merely trims $/hr mid-quantum
+        is rejected.  This flips decisions the instantaneous rate test
+        accepts.
         """
         if self._problem is None or self._plan is None:
             raise RuntimeError("try_migrate before reset()")
@@ -408,6 +474,26 @@ class FleetController:
                 lower_bound=lb,
                 gap=_gap(before, lb),
             )
+        billed_delta = None
+        if billing_horizon is not None:
+            pinned_uids = {b.uid for b in pinned_states}
+            closed = [b.uid for b in snapshot if b.uid not in pinned_uids]
+            new_types = [b.bin_type for b in sol.bins[len(pinned_states):]]
+            billed_delta = self._billed_migration_delta(
+                closed, new_types, billing_horizon
+            )
+            if billed_delta >= -max(min_saving * billing_horizon, _EPS):
+                self._bins = snapshot  # rate-cheaper but billed-pointless
+                return MigrationResult(
+                    accepted=False,
+                    cost_before=before,
+                    cost_after=sol.cost,
+                    migrated=(),
+                    nodes=stats.nodes,
+                    lower_bound=lb,
+                    gap=_gap(before, lb),
+                    billed_delta=billed_delta,
+                )
         old_uid_of = {n: b.uid for b in snapshot for n in b.members}
         self._adopt_pinned_solution(pinned_states, sub, sol)
         gap = _gap(sol.cost, lb)
@@ -427,6 +513,7 @@ class FleetController:
             nodes=stats.nodes,
             lower_bound=lb,
             gap=gap,
+            billed_delta=billed_delta,
         )
 
     def refresh_prices(self) -> float:
@@ -437,6 +524,189 @@ class FleetController:
             raise RuntimeError("refresh_prices before reset()")
         self._refresh_prices(self._problem)
         return self._lower_bound(self._problem)
+
+    # -------------------------------------------------- lifecycle & billing
+
+    @property
+    def instance_uids(self) -> tuple[int, ...]:
+        """Stable instance uids, aligned with ``plan.instances`` order —
+        the join key between placements and the lifecycle ledger."""
+        return tuple(b.uid for b in self._bins)
+
+    @property
+    def spares(self) -> dict[int, BinType]:
+        """Warm spare instances currently held (uid -> type), a copy."""
+        return dict(self._spares)
+
+    def pre_provision(self, bin_type: BinType, *, count: int = 1) -> tuple[int, ...]:
+        """Launch ``count`` warm spare instances of ``bin_type`` now.
+
+        Spares are billed from this instant (debited through the
+        lifecycle ledger) and carry no streams; the next re-plan that
+        opens a bin of the same type consumes a spare's uid instead of
+        cold-booting, so forecast joins land on already-warm capacity.
+        The acting autoscaler's lever.
+        """
+        uids = []
+        for _ in range(count):
+            uid = next(self._uid)
+            self.lifecycle.provision(uid, bin_type.name, bin_type.cost, self.now)
+            self._spares[uid] = bin_type
+            uids.append(uid)
+        return tuple(uids)
+
+    def release_spare(self, uid: int) -> None:
+        """Retire an unused warm spare (its billed quanta stay billed)."""
+        if uid not in self._spares:
+            raise KeyError(f"no spare with uid {uid}")
+        del self._spares[uid]
+        self.lifecycle.decommission(uid, self.now)
+
+    def stream_requirements(self, stream: StreamSpec) -> list[np.ndarray]:
+        """Strategy-filtered requirement vectors, one per execution choice."""
+        item = self.manager.profiles.choices_for(stream)
+        allowed = self.strategy.filter_choice_labels()
+        return [
+            np.asarray(c.requirement, dtype=np.float64)
+            for c in item.choices
+            if allowed is None or c.label in allowed
+        ]
+
+    def host_candidates(self, stream: StreamSpec) -> tuple[BinType, ...]:
+        """Instance types (under this controller's strategy) able to host
+        ``stream`` alone, cheapest first — the spare-type menu an
+        autoscaler provisions from for a forecast join."""
+        reqs = self.stream_requirements(stream)
+        cap = self.manager.utilization_cap
+        out = []
+        for bt in self.strategy.filter_bins(self.manager.catalog):
+            eff = np.asarray(bt.capacity, dtype=np.float64) * cap
+            if any(np.all(req <= eff + _EPS) for req in reqs):
+                out.append(bt)
+        if not out:
+            raise InfeasibleError(
+                f"stream {stream.name}: no {self.strategy.name} instance "
+                f"can host it alone"
+            )
+        return tuple(sorted(out, key=lambda b: b.cost))
+
+    def cheapest_host_bin(self, stream: StreamSpec) -> BinType:
+        """Cheapest instance type able to host ``stream`` alone."""
+        return self.host_candidates(stream)[0]
+
+    def open_host_bin(self, stream: StreamSpec) -> BinType:
+        """The instance type the packer's open rule would launch for
+        ``stream`` — `heuristics.open_cost_score` (cheap bins the stream
+        nearly fills beat expensive bins it barely dents), the same rule
+        the greedy repair applies when a displaced stream fits no pinned
+        residual.  The spare type an acting autoscaler holds warm, so
+        consumed spares match what re-plans actually open."""
+        reqs = self.stream_requirements(stream)
+        cap = self.manager.utilization_cap
+        best: BinType | None = None
+        best_score = np.inf
+        for bt in self.strategy.filter_bins(self.manager.catalog):
+            eff = np.asarray(bt.capacity, dtype=np.float64) * cap
+            for req in reqs:
+                if np.any(req > eff + _EPS):
+                    continue
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    frac = np.max(
+                        np.where(eff > 0, req / np.maximum(eff, 1e-300), 0.0)
+                    )
+                score = float(heuristics.open_cost_score(bt.cost, frac))
+                if score < best_score:
+                    best_score, best = score, bt
+        if best is None:
+            raise InfeasibleError(
+                f"stream {stream.name}: no {self.strategy.name} instance "
+                f"can host it alone"
+            )
+        return best
+
+    def set_billing(self, billing: BillingModel) -> None:
+        """Swap the billing model on a live controller.
+
+        A fresh ledger is seeded with the current bins as already-RUNNING
+        at ``now`` (their boot is history — only forward billing changes);
+        held spares re-provision under the new model.
+        """
+        self.billing = billing
+        eng = LifecycleEngine(billing)
+        for b in self._bins:
+            eng.adopt_running(b.uid, b.bin_type.name, b.bin_type.cost, self.now)
+        for uid, bt in self._spares.items():
+            eng.provision(uid, bt.name, bt.cost, self.now)
+        self.lifecycle = eng
+        self._ledger_live = {b.uid for b in self._bins}
+
+    def _sync_lifecycle(self) -> None:
+        """Reconcile the lifecycle ledger with the post-step bin states.
+
+        Bins the step opened cold are provisioned now (they boot from
+        here); bins it closed decommission — draining until every bin
+        that *arrived* this step (cold open or consumed spare) is done
+        booting, because the departing streams keep running on the old
+        instance until the replacement serves (the double-billing
+        migration window; a fully booted spare drains nothing).  Idle
+        spares are ledger-resident already and reconcile only on
+        consumption.
+        """
+        eng = self.lifecycle
+        live = {b.uid: b.bin_type for b in self._bins}
+        for uid in [u for u in live if u not in eng]:
+            eng.provision(uid, live[uid].name, live[uid].cost, self.now)
+        drain_until = self.now
+        for uid in live:
+            if uid not in self._ledger_live:
+                drain_until = max(drain_until, eng.record(uid).running_at)
+        for rec in eng.records():
+            if (
+                rec.terminated_at is None
+                and rec.uid not in live
+                and rec.uid not in self._spares
+            ):
+                eng.decommission(rec.uid, self.now, drain_until=drain_until)
+        self._ledger_live = set(live)
+
+    def _alloc_uid(self, bin_type: BinType) -> int:
+        """Uid for a newly opened bin: consume a warm spare of the same
+        type when one is held (the bin inherits its ledger record — and
+        its already-elapsed boot), else mint a cold uid."""
+        for uid, bt in self._spares.items():
+            if bt.name == bin_type.name and self.lifecycle.accepting(uid, self.now):
+                del self._spares[uid]
+                return uid
+        return next(self._uid)
+
+    def _billed_migration_delta(
+        self,
+        closed_uids: Sequence[int],
+        new_types: Sequence[BinType],
+        horizon: float,
+    ) -> float:
+        """$ billed over ``[now, now+horizon]`` if a move is adopted minus
+        billed if it is not (negative = the move saves billed dollars).
+
+        Closed bins save only past their next quantum boundary (the
+        in-progress quantum is sunk), the close delayed by a drain window
+        when replacements must boot; each cold new bin bills fresh quanta
+        for the whole horizon (it could close earlier, so this is the
+        conservative side).  Spare-held credit is ignored, likewise
+        conservative.
+        """
+        end = self.now + horizon
+        boot = self.billing.boot_hours if new_types else 0.0
+        saving = sum(
+            self.lifecycle.termination_saving(uid, self.now + boot, end)
+            for uid in closed_uids
+            if uid in self.lifecycle
+        )
+        cost_new = sum(
+            self.billing.billed_hours(max(0.0, horizon)) * bt.cost
+            for bt in new_types
+        )
+        return cost_new - saving
 
     # ------------------------------------------------------------ internals
 
@@ -553,9 +823,19 @@ class FleetController:
         bin states point at the new `BinType`s, the cached problem is
         re-formulated with cost-only tensor updates, and the dual prices
         are marked stale.  The refreshed plan keeps its placements but is
-        no longer certified (``optimal=False``)."""
+        no longer certified (``optimal=False``).  Live lifecycle records
+        (open bins and held spares) re-price too — forward billing uses
+        the new rent; already-billed quanta are not restated."""
         for b in self._bins:
             b.bin_type = by_name[b.bin_type.name]
+        for rec in self.lifecycle.records():
+            if rec.terminated_at is None and rec.instance_type in by_name:
+                self.lifecycle.reprice(
+                    rec.uid, self.now, by_name[rec.instance_type].cost
+                )
+        self._spares = {
+            uid: by_name.get(bt.name, bt) for uid, bt in self._spares.items()
+        }
         if self._problem is None:
             return
         old_t = self._problem.tensors()
@@ -712,7 +992,7 @@ class FleetController:
             key = (b.bin_type.name, frozenset(b.members.items()))
             b.uid = old.get(key, -1)
             if b.uid < 0:
-                b.uid = next(self._uid)
+                b.uid = self._alloc_uid(b.bin_type)
         self._bins = bins
 
     def _adopt_pinned_solution(
@@ -732,7 +1012,11 @@ class FleetController:
         bins = list(pinned_bins)
         for b in solution.bins[n_pinned:]:
             bins.append(
-                _BinState(uid=next(self._uid), bin_type=b.bin_type, members={})
+                _BinState(
+                    uid=self._alloc_uid(b.bin_type),
+                    bin_type=b.bin_type,
+                    members={},
+                )
             )
         for a in solution.assignments:
             if a.item_index >= n_free:

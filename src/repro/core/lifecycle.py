@@ -1,0 +1,341 @@
+"""Instance lifecycle & billing engine: what the fleet actually *costs*.
+
+The paper's objective is monetary cost at the cloud's billing granularity,
+not an instantaneous $/hr snapshot.  This module makes time first-class on
+the cost side:
+
+* `BillingModel` — the cloud contract: boot latency (an instance is billed
+  from launch but serves nothing until it finishes PROVISIONING), billing
+  quantum (hourly vs per-second vs continuous), and a minimum billed
+  duration.
+* `InstanceRecord` + `LifecycleEngine` — a per-instance state machine
+
+      PROVISIONING -> RUNNING -> DRAINING -> TERMINATED
+
+  driven by `provision` / `decommission` calls at monotone timestamps, and
+  an accountant that integrates *billed* cost over the timeline: every
+  instance is billed from its provisioning instant to its termination
+  instant, rounded up to the quantum, minimum-duration floored — including
+  the double-billing window while a migration's destination boots and the
+  source keeps draining.
+
+The billed/instantaneous distinction flips decisions: under hourly billing
+evacuating a bin mid-quantum saves nothing (the quantum is already paid),
+so the controller's consolidation certification and the lookahead
+autoscaler's warm-spare ledger both run through this engine
+(`core.controller.FleetController.lifecycle`).
+
+Invariants (property-tested in ``tests/test_lifecycle.py``):
+
+* billed cost is monotone in ``until`` and never below the instantaneous
+  integral ``sum_i cost_i * lifetime_i`` clipped to the window;
+* with a zero quantum (continuous, the per-second limit) and zero boot
+  latency, billed cost equals the snapshot integral bit for bit;
+* DRAINING and TERMINATED instances accept no new placements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+__all__ = [
+    "InstanceState",
+    "BillingModel",
+    "HOURLY",
+    "PER_SECOND",
+    "CONTINUOUS",
+    "InstanceRecord",
+    "LifecycleEngine",
+]
+
+_EPS = 1e-9
+
+
+class InstanceState(enum.Enum):
+    PROVISIONING = "provisioning"  # launched, booting: billed, serves nothing
+    RUNNING = "running"  # serving; accepts placements
+    DRAINING = "draining"  # scheduled for termination; accepts nothing new
+    TERMINATED = "terminated"  # gone; billing closed
+
+
+@dataclasses.dataclass(frozen=True)
+class BillingModel:
+    """The cloud's billing contract for one instance.
+
+    ``boot_hours``: PROVISIONING duration — billed, but the instance
+    serves no streams until it elapses.  ``quantum_hours``: the billing
+    quantum; durations round *up* to a whole number of quanta (1.0 =
+    hourly, 1/3600 = literal per-second).  ``0.0`` means continuous
+    billing — the per-second limit at hour-scale horizons, and the exact
+    model under which billed cost reproduces instantaneous-snapshot
+    integrals bit for bit.  ``min_billed_hours``: minimum duration billed
+    once an instance is provisioned at all.
+    """
+
+    boot_hours: float = 0.0
+    quantum_hours: float = 0.0
+    min_billed_hours: float = 0.0
+
+    def __post_init__(self) -> None:
+        for field in ("boot_hours", "quantum_hours", "min_billed_hours"):
+            v = getattr(self, field)
+            if v < 0 or v != v:
+                raise ValueError(f"BillingModel.{field} must be >= 0, got {v}")
+
+    def billed_hours(self, duration: float) -> float:
+        """Billable hours for an instance alive ``duration`` hours.
+
+        Rounds up to the quantum (with a relative epsilon so durations
+        that are whole quanta up to float noise do not bill an extra one)
+        and applies the minimum-duration floor.  Never below ``duration``
+        itself — the invariant billed >= instantaneous rests on this.
+        """
+        if duration <= 0.0:
+            return 0.0
+        billed = duration
+        q = self.quantum_hours
+        if q > 0.0:
+            billed = math.ceil(duration / q - _EPS) * q
+        return max(billed, duration, self.min_billed_hours)
+
+    def next_boundary(self, provisioned_at: float, at: float) -> float:
+        """First billing-quantum boundary at or after ``at``.
+
+        Terminating before it is billed identically to terminating *at*
+        it — the instant consolidation savings actually start accruing.
+        """
+        elapsed = max(0.0, at - provisioned_at)
+        return provisioned_at + self.billed_hours(elapsed)
+
+
+#: AWS-classic hourly billing with a 2-minute boot.
+HOURLY = BillingModel(boot_hours=2.0 / 60.0, quantum_hours=1.0)
+#: Per-second billing (same boot); at hour-scale horizons the second-level
+#: round-up is below float display precision, so the continuous model is
+#: used — it is the exact per-second limit and keeps the zero-boot case
+#: bit-identical to snapshot-cost integrals.
+PER_SECOND = BillingModel(boot_hours=2.0 / 60.0, quantum_hours=0.0)
+#: The timeless pre-lifecycle model: boots instantly, bills continuously.
+CONTINUOUS = BillingModel()
+
+
+@dataclasses.dataclass
+class InstanceRecord:
+    """One instance's lifetime: timestamps are hours since trace start.
+
+    ``running_at = provisioned_at + boot``; ``draining_at`` /
+    ``terminated_at`` stay None while the instance serves.  A termination
+    scheduled in the future (a drain window) shows as DRAINING until it
+    elapses.
+    """
+
+    uid: int
+    instance_type: str
+    hourly_cost: float  # the *current* rate; history in rate_history
+    provisioned_at: float
+    running_at: float
+    draining_at: float | None = None
+    terminated_at: float | None = None
+    #: (since, $/hr) rate segments, first entry at provisioned_at.  Price
+    #: changes append here (`LifecycleEngine.reprice`) so billing stays
+    #: causal: hours already billed keep the rate they were billed at.
+    rate_history: list = dataclasses.field(default_factory=list)
+
+    def state(self, at: float) -> InstanceState:
+        if self.terminated_at is not None and at >= self.terminated_at:
+            return InstanceState.TERMINATED
+        if self.draining_at is not None and at >= self.draining_at:
+            return InstanceState.DRAINING
+        if at < self.running_at:
+            return InstanceState.PROVISIONING
+        return InstanceState.RUNNING
+
+    def accepting(self, at: float) -> bool:
+        """May new placements target this instance at time ``at``?
+
+        PROVISIONING instances accept (placements wait out the boot —
+        that wait is the degraded window the autoscaler pre-provisions
+        away); DRAINING and TERMINATED ones never do.
+        """
+        return self.state(at) in (
+            InstanceState.PROVISIONING,
+            InstanceState.RUNNING,
+        )
+
+    def lifetime_hours(self, until: float) -> float:
+        """Wall-clock hours alive within ``[provisioned_at, until]``."""
+        end = until if self.terminated_at is None else min(until, self.terminated_at)
+        return max(0.0, end - self.provisioned_at)
+
+
+class LifecycleEngine:
+    """The fleet's lifecycle ledger + billed-cost accountant.
+
+    Owned by a `FleetController`; also usable standalone (the benchmarks
+    and property tests drive it directly).  All mutation timestamps must be
+    non-decreasing per instance; billing queries are pure.
+    """
+
+    def __init__(self, billing: BillingModel | None = None) -> None:
+        self.billing = billing if billing is not None else BillingModel()
+        self._records: dict[int, InstanceRecord] = {}
+
+    # ------------------------------------------------------------ mutation
+
+    def provision(
+        self, uid: int, instance_type: str, hourly_cost: float, at: float
+    ) -> InstanceRecord:
+        """Launch an instance: billed from ``at``, RUNNING at ``at+boot``."""
+        if uid in self._records:
+            raise ValueError(f"instance uid {uid} already provisioned")
+        rec = InstanceRecord(
+            uid=uid,
+            instance_type=instance_type,
+            hourly_cost=hourly_cost,
+            provisioned_at=at,
+            running_at=at + self.billing.boot_hours,
+            rate_history=[(at, hourly_cost)],
+        )
+        self._records[uid] = rec
+        return rec
+
+    def adopt_running(
+        self, uid: int, instance_type: str, hourly_cost: float, at: float
+    ) -> InstanceRecord:
+        """Register an instance as already RUNNING at ``at`` (no boot).
+
+        Used when a billing model is installed on a live controller whose
+        instances predate the ledger: their boot is history, only their
+        forward billing is modeled.
+        """
+        rec = self.provision(uid, instance_type, hourly_cost, at)
+        rec.running_at = at
+        return rec
+
+    def decommission(
+        self, uid: int, at: float, *, drain_until: float | None = None
+    ) -> InstanceRecord:
+        """Retire an instance: DRAINING from ``at``, TERMINATED at
+        ``drain_until`` (default: immediately at ``at``).
+
+        The drain window models migration hand-off — the source instance
+        keeps serving its streams (and keeps being billed) until the
+        destination finishes booting; during it the fleet double-bills.
+        """
+        rec = self._records[uid]
+        if rec.terminated_at is not None:
+            raise ValueError(f"instance uid {uid} already terminated")
+        end = at if drain_until is None else max(at, drain_until)
+        rec.draining_at = at
+        rec.terminated_at = end
+        return rec
+
+    def reprice(self, uid: int, at: float, hourly_cost: float) -> None:
+        """Change an instance's rent going forward from ``at``.
+
+        Hours already billed keep the rate they were billed at (a new
+        segment is appended; history is never restated) — only the
+        portion of the billed span past ``at`` prices at the new rate.
+        """
+        rec = self._records[uid]
+        since = max(at, rec.rate_history[-1][0])
+        rec.rate_history.append((since, hourly_cost))
+        rec.hourly_cost = hourly_cost
+
+    # ------------------------------------------------------------- queries
+
+    def record(self, uid: int) -> InstanceRecord:
+        return self._records[uid]
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._records
+
+    def records(self) -> tuple[InstanceRecord, ...]:
+        return tuple(self._records.values())
+
+    def state(self, uid: int, at: float) -> InstanceState:
+        return self._records[uid].state(at)
+
+    def accepting(self, uid: int, at: float) -> bool:
+        return self._records[uid].accepting(at)
+
+    def alive(self, at: float) -> tuple[int, ...]:
+        """Uids not yet terminated at ``at`` (drain windows included)."""
+        return tuple(
+            uid
+            for uid, r in self._records.items()
+            if r.state(at) is not InstanceState.TERMINATED
+        )
+
+    def _priced(self, rec: InstanceRecord, hours: float) -> float:
+        """$ for the first ``hours`` billable hours of ``rec``.
+
+        Under quantized billing each quantum prices at the rate in effect
+        when the quantum *started* — a re-price mid-quantum cannot restate
+        a quantum already bought (nor its round-up tail).  Continuous
+        billing prices exact rate-segment overlap.
+        """
+        if hours <= 0.0:
+            return 0.0
+        start = rec.provisioned_at
+        hist = rec.rate_history or [(start, rec.hourly_cost)]
+        if len(hist) == 1:
+            return hist[0][1] * hours
+        end = start + hours
+        q = self.billing.quantum_hours
+        if q > 0.0:
+
+            def rate_at(t: float) -> float:
+                rate = hist[0][1]
+                for since, r in hist:
+                    if since <= t + _EPS:
+                        rate = r
+                    else:
+                        break
+                return rate
+
+            total, s = 0.0, start
+            while s < end - _EPS:
+                total += rate_at(s) * min(q, end - s)
+                s += q
+            return total
+        total = 0.0
+        for i, (since, rate) in enumerate(hist):
+            seg_end = hist[i + 1][0] if i + 1 < len(hist) else end
+            total += rate * max(0.0, min(seg_end, end) - max(since, start))
+        return total
+
+    def billed_instance(self, uid: int, until: float) -> float:
+        """Dollars billed for one instance as of time ``until``.
+
+        An open (or still-draining) instance is billed for its in-progress
+        quantum in full — the cloud's round-up, and the reason evacuating
+        a bin mid-quantum saves nothing.
+        """
+        rec = self._records[uid]
+        if until <= rec.provisioned_at:
+            return 0.0
+        return self._priced(rec, self.billing.billed_hours(rec.lifetime_hours(until)))
+
+    def billed_cost(self, until: float) -> float:
+        """Total dollars billed across the fleet as of time ``until``."""
+        return sum(self.billed_instance(uid, until) for uid in self._records)
+
+    def instantaneous_integral(self, until: float) -> float:
+        """``sum_i integral of rate_i dt`` over each instance's lifetime —
+        the pre-lifecycle snapshot integral billed cost is lower-bounded
+        by (piecewise over rate segments, so re-pricing keeps the bound)."""
+        return sum(
+            self._priced(r, r.lifetime_hours(until))
+            for r in self._records.values()
+        )
+
+    def termination_saving(self, uid: int, at: float, until: float) -> float:
+        """Billed dollars saved by terminating ``uid`` at ``at`` instead of
+        keeping it through ``until`` — zero while ``until`` stays inside
+        the already-paid quantum."""
+        rec = self._records[uid]
+        keep = self.billing.billed_hours(max(0.0, until - rec.provisioned_at))
+        cut = self.billing.billed_hours(max(0.0, at - rec.provisioned_at))
+        return max(0.0, self._priced(rec, keep) - self._priced(rec, cut))

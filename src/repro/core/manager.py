@@ -132,8 +132,12 @@ class ResourceManager:
         controller holds the fleet and `replan` can fold churn events in
         incrementally (see `core.controller.FleetController`).  ``policy``
         selects the re-planning policy layer (consolidation, dual-price
-        aging, autoscaling — see `core.policy`); reconfiguring a live
-        controller swaps the policy without dropping its fleet state."""
+        aging, autoscaling — see `core.policy`); ``billing`` installs an
+        instance-lifecycle billing model (`core.lifecycle.BillingModel`:
+        boot latency + billing quantum) the controller's ledger bills the
+        fleet through.  Reconfiguring a live controller swaps either
+        without dropping its fleet state (a swapped billing model seeds a
+        fresh ledger from the live instances)."""
         ctrl = self._controllers.get(strategy.name)
         if ctrl is None:
             from .controller import FleetController
@@ -144,9 +148,12 @@ class ResourceManager:
             # Reconfigure in place — replacing would silently drop the
             # live fleet state a prior allocate() established.
             for key, value in kwargs.items():
-                if key not in ("gap_threshold", "sub_max_nodes", "policy"):
+                if key == "billing":
+                    ctrl.set_billing(value)
+                elif key in ("gap_threshold", "sub_max_nodes", "policy"):
+                    setattr(ctrl, key, value)
+                else:
                     raise TypeError(f"unknown controller option {key!r}")
-                setattr(ctrl, key, value)
         return ctrl
 
     def allocate(
@@ -154,13 +161,19 @@ class ResourceManager:
     ) -> AllocationPlan:
         return self.controller(strategy).reset(streams).plan
 
-    def replan(self, events, strategy: Strategy = ST3):
+    def replan(self, events, strategy: Strategy = ST3, **controller_kwargs):
         """Apply fleet events to the last allocated fleet, incrementally.
 
+        ``events`` is a `streams.TimedTrace` or a plain event sequence
+        (untimed events replay at the controller's current clock).
         Returns the `ReplanResult` list (one per event); requires a prior
         `allocate` (or `controller().reset`) under the same strategy.
+        Extra keyword arguments (``policy=``, ``billing=``, ...) reconfigure
+        the live controller before the replay, as `controller` does.
         """
-        return self.controller(strategy).apply_events(list(events))
+        return self.controller(strategy, **controller_kwargs).apply_events(
+            list(events)
+        )
 
     def allocate_sweep(
         self,

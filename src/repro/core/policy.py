@@ -29,8 +29,21 @@ Three concrete policies (plus the identity and a combinator):
   and runs a lattice DP to pick the cheapest provisioning path from the
   current fleet to the forecast horizon.  The chosen path and its cost
   profile ship as `ReplanResult.advice`.
+* `ActingAutoscaler` — the acting form: everything the lookahead does,
+  plus it *holds warm spare instances* ahead of the forecast joins —
+  `FleetController.pre_provision` launches (and bills, through the
+  lifecycle ledger) one cheapest-host spare per imminent forecast join,
+  the next re-plan that opens a bin of that type consumes the spare's
+  already-booted uid, and spares the forecast no longer wants are
+  released.  Joins land on warm capacity instead of waiting out a boot.
 * `CompositePolicy` — folds several policies left to right (e.g.
   consolidate, then age prices, then attach autoscaling advice).
+
+`ConsolidationPolicy` is billing-aware when given a ``billing_horizon``:
+the mechanism then certifies each move against *billed* dollars over that
+horizon through the lifecycle ledger (`core.lifecycle`) — under hourly
+billing, evacuating a bin whose quantum is already paid saves nothing, so
+moves the instantaneous $/hr test accepts get rejected.
 
 Policies are stateful per controller (aging streaks, for one): construct a
 fresh instance per `FleetController` / `ResourceManager.controller` call.
@@ -55,6 +68,7 @@ __all__ = [
     "ConsolidationPolicy",
     "DualPriceAgingPolicy",
     "LookaheadAutoscaler",
+    "ActingAutoscaler",
     "CompositePolicy",
     "cheapest_provisioning_path",
 ]
@@ -98,6 +112,11 @@ class ConsolidationPolicy(ReplanPolicy):
     max_migrations: int = 3  # k: migration budget per event
     min_saving: float = 0.0  # $/h a move must save to be adopted
     max_nodes: int | None = None  # sub-solve budget (None: controller default)
+    #: Certify moves against *billed* dollars over this many hours through
+    #: the controller's lifecycle ledger (None: instantaneous $/hr only,
+    #: the billing-blind historical behaviour).  Under quantized billing
+    #: this rejects evacuations whose rent is already sunk.
+    billing_horizon: float | None = None
 
     def on_event(self, mech, event, result):
         # Warm re-plans (noop included — drift survives unchanged fleets)
@@ -108,11 +127,25 @@ class ConsolidationPolicy(ReplanPolicy):
         if not names:
             return result
         mig = mech.try_migrate(
-            names, max_nodes=self.max_nodes, min_saving=self.min_saving
+            names,
+            max_nodes=self.max_nodes,
+            min_saving=self.min_saving,
+            billing_horizon=self.billing_horizon,
         )
         if not mig.accepted:
+            if mig.billed_delta is not None:
+                # Rate-cheaper but billed-pointless: the quantum was sunk.
+                # (Named so it does NOT count as a "consolidate" action.)
+                return dataclasses.replace(
+                    result,
+                    actions=result.actions
+                    + (f"billed-reject:consolidate:{mig.billed_delta:+.4f}",),
+                )
             return result
         saving = mig.cost_before - mig.cost_after
+        action = f"consolidate:{len(mig.migrated)}:-${saving:.4f}"
+        if mig.billed_delta is not None:
+            action += f":billed{mig.billed_delta:+.4f}"
         return dataclasses.replace(
             result,
             plan=mech.plan,
@@ -120,8 +153,7 @@ class ConsolidationPolicy(ReplanPolicy):
             lower_bound=mig.lower_bound,
             gap=mig.gap,
             nodes=result.nodes + mig.nodes,
-            actions=result.actions
-            + (f"consolidate:{len(mig.migrated)}:-${saving:.4f}",),
+            actions=result.actions + (action,),
         )
 
     def select_evacuations(self, mech) -> tuple[str, ...]:
@@ -287,12 +319,20 @@ class LookaheadAutoscaler(ReplanPolicy):
     def on_reset(self, mech, result):
         return self.on_event(mech, None, result)
 
-    def on_event(self, mech, event, result):
-        fc = (
+    def _resolve(self, mech, event) -> StreamForecast | None:
+        return (
             self.forecast(tuple(mech.fleet), event)
             if callable(self.forecast)
             else self.forecast
         )
+
+    def on_event(self, mech, event, result):
+        return self._advise(mech, self._resolve(mech, event), result)
+
+    def _advise(self, mech, fc: StreamForecast | None, result):
+        """Attach cone advice for an already-resolved forecast (resolved
+        once per event so stateful/stochastic forecasters cannot diverge
+        between the advisory and acting halves)."""
         if fc is None or (not fc.joins and not fc.leaves):
             return result
         try:
@@ -336,6 +376,101 @@ class LookaheadAutoscaler(ReplanPolicy):
             "peak_cost": peak,
             "recommended_headroom": max(0.0, peak - current),
         }
+
+
+@dataclasses.dataclass
+class ActingAutoscaler(LookaheadAutoscaler):
+    """Acting pre-provisioning: hold warm spares ahead of forecast joins.
+
+    Extends the advisory lookahead — same cone scoring, same attached
+    advice — but *acts* on the forecast through the mechanism's lifecycle
+    surface: the first ``max_spares`` forecast joins are replayed against
+    the live fleet's residual capacity (`spare_demand`), and each join
+    that fits nowhere gets one warm spare of the type the packer's open
+    rule would launch (`FleetController.pre_provision`, billed from
+    launch through the lifecycle ledger); held spares the forecast no
+    longer wants are released.  When the join lands and the re-plan opens
+    a bin of the spare's type, the spare's already-booted uid is consumed
+    — the join serves immediately instead of degrading for one boot
+    latency.
+
+    The spend is bounded: at most ``max_spares`` spares are ever held, so
+    the billed overhead per event is at most ``max_spares`` times the
+    cheapest-host rent — the ≤5% overhead envelope the lifecycle
+    benchmark gates.
+    """
+
+    max_spares: int = 2
+
+    def on_event(self, mech, event, result):
+        fc = self._resolve(mech, event)
+        result = self._advise(mech, fc, result)
+        joins = fc.joins[: self.max_spares] if fc is not None else ()
+        wanted = self.spare_demand(mech, joins)
+        actions: list[str] = []
+        held: dict[str, int] = {}
+        for uid, bt in mech.spares.items():
+            held[bt.name] = held.get(bt.name, 0) + 1
+            if held[bt.name] > (wanted[bt.name][1] if bt.name in wanted else 0):
+                mech.release_spare(uid)
+                held[bt.name] -= 1
+                actions.append(f"autoscale:release:{bt.name}")
+        for name, (bt, count) in wanted.items():
+            for _ in range(count - held.get(name, 0)):
+                mech.pre_provision(bt)
+                actions.append(f"autoscale:provision:{name}")
+        if actions:
+            result = dataclasses.replace(
+                result, actions=result.actions + tuple(actions)
+            )
+        return result
+
+    def spare_demand(self, mech, joins) -> dict:
+        """Which spares the forecast joins actually need: type -> [BinType,
+        count].
+
+        Replays the joins against the live fleet's residual capacity
+        (`placement_state`, the exact geometry the greedy repair packs
+        into): a join that fits some bin's residual provisions nothing —
+        joining it is free, so holding a spare would be pure billed
+        overhead.  A join that fits nowhere demands one spare of the type
+        the packer's open rule would launch (`open_host_bin`); the spare's
+        leftover capacity is added to the simulated residual so a burst
+        of joins shares one spare instead of demanding one each.
+        """
+        wanted: dict[str, list] = {}
+        if not joins:
+            return wanted
+        state = mech.placement_state()
+        cap = mech.manager.utilization_cap
+        resid = [row.copy() for row in state.resid]
+        for join in joins:
+            reqs = mech.stream_requirements(join)
+            if not reqs:
+                continue  # unplaceable forecast join: provision nothing
+            placed = False
+            for p, row in enumerate(resid):
+                for req in reqs:
+                    if np.all(req <= row + _EPS):
+                        resid[p] = row - req
+                        placed = True
+                        break
+                if placed:
+                    break
+            if placed:
+                continue
+            try:
+                bt = mech.open_host_bin(join)
+            except InfeasibleError:
+                continue
+            eff = np.asarray(bt.capacity, dtype=np.float64) * cap
+            req = next((r for r in reqs if np.all(r <= eff + _EPS)), None)
+            if req is None:
+                continue
+            resid.append(eff - req)
+            slot = wanted.setdefault(bt.name, [bt, 0])
+            slot[1] += 1
+        return wanted
 
 
 class CompositePolicy(ReplanPolicy):

@@ -7,9 +7,14 @@ resource saturates — the streams on that instance share the saturated
 resource fairly, so each achieves ``cap/load`` of its desired rate.
 
 `simulate_churn` replays a live event trace through a manager's
-`FleetController`, producing the cost-over-time / migration-count record
-the dynamic re-planning loop is judged by (warm vs full re-solves, gap
-certificates, performance against the target at every step).
+`FleetController` as a discrete-event simulation over the controller's
+instance-lifecycle ledger (`core.lifecycle`): the trace is a
+`streams.TimedTrace` (plain untimed event sequences are shimmed — see the
+docstring), each step advances the clock to the event's ``at``, and the
+output carries *billed* cost over time (quantum round-up, boot-latency
+double-billing and warm spares included) next to the historical $/hr
+snapshot record, plus per-instance lifetime records and the
+degraded-performance seconds streams spend waiting out instance boots.
 """
 from __future__ import annotations
 
@@ -82,14 +87,24 @@ def fleet_fragmentation(instances: Sequence[InstanceLoad]) -> dict:
     dim = max((len(i.residual) for i in instances), default=0)
     if dim == 0:
         return {"per_dim": (), "overall": 0.0}
+    if len(instances) == 1:
+        # A single instance holds all free capacity by definition: zero
+        # dispersion, clamped explicitly (the max/total ratio is 0/0-prone
+        # when that lone residual is zero or non-finite).
+        return {"per_dim": (0.0,) * dim, "overall": 0.0}
     resid = np.zeros((len(instances), dim))
     for row, inst in enumerate(instances):
         if inst.residual:
             resid[row] = inst.residual
+    # Overloaded bins report negative residual in hand-built loads and
+    # non-finite entries can leak from degenerate profiles; both would
+    # drive the ratio (and the mean) to NaN — clamp to "no free capacity".
+    resid = np.clip(np.nan_to_num(resid, nan=0.0, posinf=0.0, neginf=0.0), 0.0, None)
     totals = resid.sum(axis=0)  # (dim,)
     per_dim = np.where(
         totals > 1e-12, 1.0 - resid.max(axis=0) / np.maximum(totals, 1e-300), 0.0
     )
+    per_dim = np.clip(per_dim, 0.0, 1.0)
     active = totals > 1e-12
     overall = float(per_dim[active].mean()) if active.any() else 0.0
     return {"per_dim": tuple(per_dim.tolist()), "overall": overall}
@@ -133,51 +148,104 @@ def simulate_plan(
 def simulate_churn(
     manager,
     initial_streams: Sequence,
-    events: Sequence,
+    events,
     profiles: ProfileTable,
     *,
     strategy=None,
     target: float | None = None,
     policy=None,
+    billing=None,
+    horizon: float | None = None,
 ) -> dict:
-    """Replay a churn trace through the manager's live controller.
+    """Replay a churn trace through the manager's live controller as a
+    discrete-event simulation over the instance-lifecycle ledger.
 
-    Establishes `initial_streams` with a cold solve, folds every
-    `FleetEvent` in via warm-start incremental re-planning, and records
-    the quantities the paper's live loop cares about per step: hourly
+    ``events`` is a `streams.TimedTrace` (the first-class form) or, as a
+    deprecated shim, any plain ``Sequence[FleetEvent]`` — untimed events
+    all land at t=0 with a zero horizon, which preserves the historical
+    snapshot-only semantics exactly; new call sites should construct a
+    `TimedTrace`.  Establishes `initial_streams` with a cold solve at
+    t=0, folds every `FleetEvent` in via warm-start incremental
+    re-planning at its ``at`` timestamp, and records per step: hourly
     cost, certified optimality gap, re-plan mode (warm vs full fallback),
     stream migrations, residual-capacity fragmentation, policy actions
-    (consolidations, re-pricings, autoscaler advice — see `core.policy`),
-    and simulated performance against ``target`` (defaulting to the
-    manager's ``utilization_cap`` so the packing cap and the judged
-    performance floor agree).  ``policy`` installs a re-planning policy on
-    the controller for the replay (e.g. ``ConsolidationPolicy(3)``).
+    (consolidations, re-pricings, autoscaler provisioning — see
+    `core.policy`), simulated performance against ``target`` (defaulting
+    to the manager's ``utilization_cap``), and the cumulative *billed*
+    cost from the lifecycle ledger.
+
+    ``billing`` installs a `core.lifecycle.BillingModel` on the
+    controller (boot latency, billing quantum); with it the output's
+    ``billed_cost`` is the fleet's quantum-rounded bill at the horizon —
+    always >= ``snapshot_cost_integral``, the timeless $/hr integral —
+    and ``degraded_stream_seconds`` totals the stream-seconds newly
+    placed streams spend waiting for their instance to finish booting
+    (migrating streams keep serving on their draining source, so only
+    first placements degrade — the metric warm pre-provisioning buys
+    down).  ``policy`` installs a re-planning policy for the replay
+    (e.g. ``ConsolidationPolicy(3)``).
     """
+    from .streams import TimedTrace
     from .strategies import ST3
 
+    trace = TimedTrace.coerce(events)
+    if horizon is None:
+        horizon = trace.horizon
     strategy = strategy or ST3
     if target is None:
         target = manager.utilization_cap
-    kwargs = {} if policy is None else {"policy": policy}
+    kwargs = {}
+    if policy is not None:
+        kwargs["policy"] = policy
+    if billing is not None:
+        kwargs["billing"] = billing
     ctrl = manager.controller(strategy, **kwargs)
-    results = [ctrl.reset(initial_streams)]
-    results += ctrl.apply_events(list(events))
+    results = [ctrl.reset(initial_streams, at=0.0)]
+    uid_steps = [ctrl.instance_uids]
+    for ev in trace:
+        results.append(ctrl.apply(ev))
+        uid_steps.append(ctrl.instance_uids)
+    ledger = ctrl.lifecycle
+    times = [r.at for r in results]
+    ends = times[1:] + [max(horizon, times[-1])]
+
     timeline = []
     misses = 0
-    for step, r in enumerate(results):
+    degraded_hours = 0.0
+    served: set = set()  # stream names that have been placed before
+    for step, (r, uids, t0, t1) in enumerate(
+        zip(results, uid_steps, times, ends)
+    ):
         sim = simulate_plan(r.plan, profiles, target=target)
         if not sim["meets_target"]:
             misses += 1
+        # Stream-hours *new* streams spend waiting for their instance to
+        # boot — the post-join degraded window pre-provisioned spares
+        # eliminate.  Streams that merely migrate keep serving on their
+        # draining source until the destination boots (make-before-break;
+        # the ledger's drain window bills that overlap), so they do not
+        # degrade.
+        step_boot_wait = 0.0
+        for p in r.plan.placements:
+            if p.stream.name in served:
+                continue
+            rec = ledger.record(uids[p.instance_index])
+            step_boot_wait += max(0.0, rec.running_at - t0)
+        served.update(p.stream.name for p in r.plan.placements)
+        degraded_hours += step_boot_wait
         timeline.append(
             {
                 "step": step,
+                "at": t0,
                 "mode": r.mode,
                 "cost": r.plan.hourly_cost,
+                "billed": ledger.billed_cost(t0),
                 "gap": r.gap,
                 "lower_bound": r.lower_bound,
                 "instances": len(r.plan.instances),
                 "streams": len(r.plan.placements),
                 "migrations": len(r.migrated),
+                "boot_wait_stream_hours": step_boot_wait,
                 "performance": sim["overall_performance"],
                 "fragmentation": sim["fragmentation"]["overall"],
                 "actions": list(r.actions),
@@ -186,6 +254,10 @@ def simulate_churn(
         )
     costs = [t["cost"] for t in timeline]
     frags = [t["fragmentation"] for t in timeline]
+    integral = float(
+        sum(c * (t1 - t0) for c, t0, t1 in zip(costs, times, ends))
+    )
+    billed = ledger.billed_cost(max(horizon, times[-1]))
     return {
         "timeline": timeline,
         "mean_cost": float(np.mean(costs)) if costs else 0.0,
@@ -201,4 +273,24 @@ def simulate_churn(
         "full_steps": sum(t["mode"] == "full" for t in timeline),
         "target": target,
         "target_misses": misses,
+        # ---- lifecycle & billing (new in the timed-trace refactor) ----
+        "horizon": max(horizon, times[-1]),
+        "billed_cost": billed,
+        "snapshot_cost_integral": integral,
+        "billed_overhead": (billed / integral - 1.0) if integral > 0 else 0.0,
+        "degraded_stream_seconds": degraded_hours * 3600.0,
+        "instance_records": [
+            {
+                "uid": rec.uid,
+                "instance_type": rec.instance_type,
+                "hourly_cost": rec.hourly_cost,
+                "provisioned_at": rec.provisioned_at,
+                "running_at": rec.running_at,
+                "terminated_at": rec.terminated_at,
+                "billed": ledger.billed_instance(
+                    rec.uid, max(horizon, times[-1])
+                ),
+            }
+            for rec in ledger.records()
+        ],
     }

@@ -14,11 +14,19 @@ short-horizon join/leave forecast and `forecast_cone` expands it into the
 lattice of hypothetical fleets (every prefix of joins crossed with every
 prefix of leaves) that `FleetController.what_if` scores in one batched
 dispatch.
+
+Time is first-class: every `FleetEvent` carries a keyword-only ``at``
+timestamp (hours since trace start, default ``0.0`` so untimed call sites
+stay valid), and `TimedTrace` is the validated container of a monotone
+event sequence plus its horizon — the input `core.simulator.simulate_churn`
+replays through the instance-lifecycle billing engine
+(`core.lifecycle.LifecycleEngine`).  `synthetic_timed_trace` generates the
+seeded join/leave/re-rate traces the benchmarks replay.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
 __all__ = [
     "FrameSize",
@@ -34,6 +42,8 @@ __all__ = [
     "fleet_key",
     "StreamForecast",
     "forecast_cone",
+    "TimedTrace",
+    "synthetic_timed_trace",
 ]
 
 
@@ -88,7 +98,20 @@ class StreamSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FleetEvent:
-    """Base class for live fleet-churn events (paper's re-allocation loop)."""
+    """Base class for live fleet-churn events (paper's re-allocation loop).
+
+    ``at`` is the event's timestamp in hours since trace start.  It is
+    keyword-only with a ``0.0`` default, so positional construction of the
+    concrete events (``StreamAdded(spec)``) and every untimed call site
+    keep working; timed traces pass ``at=`` explicitly and `TimedTrace`
+    validates monotonicity.
+    """
+
+    at: float = dataclasses.field(default=0.0, kw_only=True)
+
+    def __post_init__(self) -> None:
+        if self.at < 0 or self.at != self.at:  # negative or NaN
+            raise ValueError(f"event timestamp must be >= 0 hours, got {self.at}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +136,7 @@ class StreamRateChanged(FleetEvent):
     desired_fps: float
 
     def __post_init__(self) -> None:
+        super().__post_init__()
         if self.desired_fps <= 0:
             raise ValueError(f"event for {self.name}: fps must be > 0")
 
@@ -125,6 +149,7 @@ class PriceChanged(FleetEvent):
     cost: float
 
     def __post_init__(self) -> None:
+        super().__post_init__()
         if self.cost < 0:
             raise ValueError(f"{self.instance_type}: negative cost")
 
@@ -209,6 +234,123 @@ def forecast_cone(
             gone = set(forecast.leaves[:leave_count])
             fleets.append(tuple(s for s in joined if s.name not in gone))
     return fleets
+
+
+@dataclasses.dataclass(frozen=True)
+class TimedTrace:
+    """A validated, time-ordered churn trace: events + replay horizon.
+
+    ``events`` must carry non-decreasing ``at`` timestamps (hours);
+    ``horizon`` is the instant the replay is accounted up to (billing the
+    final fleet's open instances included) and must not precede the last
+    event.  Iterating a trace yields its events, so every consumer of a
+    plain ``Sequence[FleetEvent]`` accepts a `TimedTrace` unchanged.
+    """
+
+    events: tuple[FleetEvent, ...]
+    horizon: float = 0.0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "events", tuple(self.events))
+        last = 0.0
+        for ev in self.events:
+            if ev.at < last:
+                raise ValueError(
+                    f"trace timestamps must be non-decreasing: "
+                    f"{ev!r} after t={last}"
+                )
+            last = ev.at
+        if self.horizon < last:
+            object.__setattr__(self, "horizon", last)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def times(self) -> tuple[float, ...]:
+        return tuple(ev.at for ev in self.events)
+
+    @classmethod
+    def coerce(cls, events: "TimedTrace | Iterable[FleetEvent]") -> "TimedTrace":
+        """Accept a `TimedTrace` or a plain event sequence (shim).
+
+        Untimed sequences (every ``at`` left at the 0.0 default) are valid
+        degenerate traces — all events at t=0, zero horizon — preserving
+        the historical untimed `simulate_churn` semantics.  New call sites
+        should construct a `TimedTrace` directly; the bare-sequence form
+        is kept for backward compatibility and may eventually go away.
+        """
+        if isinstance(events, cls):
+            return events
+        return cls(events=tuple(events))
+
+
+def synthetic_timed_trace(
+    streams: Sequence[StreamSpec],
+    rng,
+    *,
+    n_events: int,
+    mean_gap_hours: float = 0.05,
+    p_join: float = 0.3,
+    p_leave: float = 0.25,
+    make_join: "Callable[[int], StreamSpec] | None" = None,
+    rerate_fps: "Callable[[StreamSpec], Sequence[float]] | None" = None,
+    burst: int = 1,
+    tail_hours: float | None = None,
+) -> TimedTrace:
+    """Generate a seeded timed churn trace against a pure fleet replay.
+
+    Event kinds roll join/leave/re-rate with probabilities ``p_join`` /
+    ``p_leave`` / remainder; inter-arrival gaps are exponential with mean
+    ``mean_gap_hours`` (so timestamps land off quantum boundaries, the
+    case billing quantization has to handle).  ``burst`` > 1 emits joins
+    in back-to-back bursts sharing one timestamp — the arrival pattern a
+    pre-provisioning autoscaler is judged on.  ``make_join(i)`` builds the
+    i-th joining stream (default: clone of a random live stream under a
+    fresh name); ``rerate_fps(s)`` lists a stream's renegotiable rates
+    (default: keep its current rate — a no-op event).  The trace is
+    pre-generated against a replayed fleet copy so every policy compared
+    on it sees the identical sequence.
+    """
+    fleet = list(streams)
+    events: list[FleetEvent] = []
+    t = 0.0
+    i = 0
+    while len(events) < n_events:
+        t += float(rng.exponential(mean_gap_hours))
+        roll = float(rng.rand())
+        if roll < p_join or not fleet:
+            for _ in range(min(burst, n_events - len(events))):
+                if make_join is not None:
+                    spec = make_join(i)
+                elif fleet:
+                    src = fleet[rng.randint(len(fleet))]
+                    spec = dataclasses.replace(src, name=f"j{i}")
+                else:
+                    raise ValueError(
+                        "fleet is empty and no make_join was given — "
+                        "the default join clones a random live stream"
+                    )
+                events.append(StreamAdded(spec, at=t))
+                fleet.append(spec)
+                i += 1
+        elif roll < p_join + p_leave:
+            events.append(StreamRemoved(fleet[rng.randint(len(fleet))].name, at=t))
+            fleet = list(apply_events(fleet, [events[-1]]))
+        else:
+            s = fleet[rng.randint(len(fleet))]
+            rates = (
+                list(rerate_fps(s)) if rerate_fps is not None else [s.desired_fps]
+            )
+            fps = float(rates[rng.randint(len(rates))])
+            events.append(StreamRateChanged(s.name, fps, at=t))
+            fleet = list(apply_events(fleet, [events[-1]]))
+    horizon = t + (
+        tail_hours if tail_hours is not None else 2.0 * mean_gap_hours
+    )
+    return TimedTrace(events=tuple(events), horizon=horizon)
 
 
 def fleet_key(streams: Sequence[StreamSpec]) -> tuple[StreamSpec, ...]:

@@ -1,0 +1,514 @@
+"""Instance lifecycle & billing engine tests (the timed-trace refactor).
+
+Deterministic coverage of `core.lifecycle` (billing math, the
+PROVISIONING → RUNNING → DRAINING → TERMINATED state machine), the
+controller's lifecycle surface (clock, ledger sync, warm spares, the
+billed-savings migration certification), `streams.TimedTrace`, and the
+discrete-event `simulate_churn` outputs.  Randomized billing invariants
+(billed >= instantaneous integral, monotonicity) live in
+``test_lifecycle_properties.py`` under the hypothesis guard.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.binpack import BinType
+from repro.core.lifecycle import (
+    CONTINUOUS,
+    BillingModel,
+    InstanceState,
+    LifecycleEngine,
+)
+from repro.core.manager import ResourceManager
+from repro.core.policy import ActingAutoscaler, ConsolidationPolicy, PinningPolicy
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_churn
+from repro.core.streams import (
+    AnalysisProgram,
+    StreamAdded,
+    StreamForecast,
+    StreamRateChanged,
+    StreamRemoved,
+    StreamSpec,
+    TimedTrace,
+    synthetic_timed_trace,
+)
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+CATALOG = (
+    BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+    BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),
+    BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
+)
+KINDS = [(VGG, 0.25), (VGG, 0.2), (ZF, 0.5), (ZF, 2.0), (ZF, 5.0)]
+HOURLY_2MIN = BillingModel(boot_hours=2.0 / 60.0, quantum_hours=1.0)
+
+
+def _streams(n, prefix="s"):
+    return [
+        StreamSpec(f"{prefix}{i}", *KINDS[i % len(KINDS)]) for i in range(n)
+    ]
+
+
+def _manager(**kw):
+    kw.setdefault("max_nodes", 50_000)
+    return ResourceManager(CATALOG, paper_profile_table(), **kw)
+
+
+# ------------------------------------------------------------ billing model
+
+
+def test_billing_model_quantum_rounding():
+    hourly = BillingModel(quantum_hours=1.0)
+    assert hourly.billed_hours(0.0) == 0.0
+    assert hourly.billed_hours(0.25) == 1.0
+    assert hourly.billed_hours(1.0) == 1.0
+    assert hourly.billed_hours(1.0 + 1e-12) == pytest.approx(1.0)  # eps guard
+    assert hourly.billed_hours(1.25) == 2.0
+    assert CONTINUOUS.billed_hours(0.37) == 0.37  # zero quantum: exact
+    assert BillingModel(min_billed_hours=0.5).billed_hours(0.01) == 0.5
+
+
+def test_billing_model_billed_never_below_duration():
+    m = BillingModel(quantum_hours=0.25)
+    for d in (0.0, 0.1, 0.24999999, 0.25, 0.617, 3.0):
+        assert m.billed_hours(d) >= d
+
+
+def test_billing_model_next_boundary():
+    m = BillingModel(quantum_hours=1.0)
+    assert m.next_boundary(0.5, 0.7) == 1.5  # mid-quantum: pay through 1.5
+    assert m.next_boundary(0.5, 1.5) == 1.5  # exactly at a boundary
+    assert CONTINUOUS.next_boundary(0.5, 0.7) == pytest.approx(0.7)
+
+
+def test_billing_model_validation():
+    with pytest.raises(ValueError):
+        BillingModel(boot_hours=-0.1)
+    with pytest.raises(ValueError):
+        BillingModel(quantum_hours=-1.0)
+
+
+# ---------------------------------------------------------- state machine
+
+
+def test_lifecycle_state_transitions():
+    eng = LifecycleEngine(BillingModel(boot_hours=0.1, quantum_hours=1.0))
+    eng.provision(7, "c4.2xlarge", 0.419, at=0.0)
+    assert eng.state(7, 0.05) is InstanceState.PROVISIONING
+    assert eng.state(7, 0.1) is InstanceState.RUNNING
+    eng.decommission(7, 0.5, drain_until=0.7)
+    assert eng.state(7, 0.6) is InstanceState.DRAINING
+    assert eng.state(7, 0.7) is InstanceState.TERMINATED
+    assert eng.alive(0.6) == (7,) and eng.alive(0.8) == ()
+
+
+def test_lifecycle_draining_accepts_no_placements():
+    eng = LifecycleEngine(BillingModel(boot_hours=0.1))
+    eng.provision(1, "c4.2xlarge", 0.419, at=0.0)
+    assert eng.accepting(1, 0.05)  # PROVISIONING waits, but accepts
+    assert eng.accepting(1, 0.2)  # RUNNING accepts
+    eng.decommission(1, 0.3, drain_until=0.5)
+    assert not eng.accepting(1, 0.3)  # DRAINING accepts nothing new
+    assert not eng.accepting(1, 0.9)  # TERMINATED neither
+
+
+def test_lifecycle_rejects_double_provision_and_terminate():
+    eng = LifecycleEngine(BillingModel())
+    eng.provision(1, "c4.2xlarge", 0.419, at=0.0)
+    with pytest.raises(ValueError):
+        eng.provision(1, "c4.2xlarge", 0.419, at=1.0)
+    eng.decommission(1, 1.0)
+    with pytest.raises(ValueError):
+        eng.decommission(1, 2.0)
+
+
+def test_lifecycle_billing_includes_drain_window():
+    # 2 h lifetime + 0.5 h drain under hourly billing: 3 quanta billed.
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.8xlarge", 1.675, at=0.0)
+    eng.decommission(1, 2.0, drain_until=2.5)
+    assert eng.billed_instance(1, 10.0) == pytest.approx(3 * 1.675)
+    # Queried mid-life, the in-progress quantum is billed in full.
+    assert eng.billed_instance(1, 0.25) == pytest.approx(1.675)
+
+
+def test_reprice_never_restates_billed_history():
+    """A price change applies forward only: the hours already billed keep
+    the rate they were billed at."""
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    assert eng.billed_instance(1, 10.0) == pytest.approx(10.0)
+    eng.reprice(1, 10.0, 2.0)
+    assert eng.record(1).hourly_cost == 2.0
+    # The first 10 hours stay at $1/h; only new hours bill at $2/h.
+    assert eng.billed_instance(1, 10.0) == pytest.approx(10.0)
+    assert eng.billed_instance(1, 12.0) == pytest.approx(10.0 + 2 * 2.0)
+    # The invariant billed >= integral survives the rate change.
+    assert eng.billed_cost(12.5) >= eng.instantaneous_integral(12.5)
+
+
+def test_controller_price_event_bills_forward_only():
+    mgr = _manager()
+    ctrl = mgr.controller(billing=BillingModel(quantum_hours=1.0))
+    ctrl.reset(_streams(6), at=0.0)
+    before = ctrl.lifecycle.billed_cost(0.5)
+    from repro.core.streams import PriceChanged
+
+    ctrl.apply(PriceChanged("g2.2xlarge", 1.3, at=0.5))
+    # Doubling a rent mid-quantum must not restate the already-billed
+    # quanta of the live g2 instances.
+    assert ctrl.lifecycle.billed_cost(0.5) == pytest.approx(before)
+
+
+def test_drain_window_covers_booting_spare_consumption():
+    """Closing a bin whose replacement is a consumed, still-booting spare
+    drains until that spare serves — the double-billing overlap."""
+    mgr = _manager()
+    ctrl = mgr.controller(billing=BillingModel(boot_hours=0.2, quantum_hours=1.0))
+    ctrl.reset(_streams(4), at=0.0)
+    bt = ctrl.cheapest_host_bin(StreamSpec("x", ZF, 5.0))
+    ctrl.now = 0.5
+    (spare,) = ctrl.pre_provision(bt)  # boots until 0.7
+    old_uids = set(ctrl.instance_uids)
+    r = ctrl.apply(StreamAdded(StreamSpec("x", ZF, 5.0), at=0.55))
+    if spare in ctrl.instance_uids:
+        closed = [
+            u
+            for u in old_uids
+            if ctrl.lifecycle.record(u).terminated_at is not None
+        ]
+        for uid in closed:
+            # Sources drain until the consumed spare finishes booting.
+            assert ctrl.lifecycle.record(uid).terminated_at == pytest.approx(0.7)
+
+
+def test_termination_saving_zero_inside_paid_quantum():
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "g2.2xlarge", 0.650, at=0.2)
+    # Terminating at 0.5 with horizon 1.1 — still inside the first paid
+    # quantum (ends 1.2): nothing saved.
+    assert eng.termination_saving(1, 0.5, 1.1) == 0.0
+    # Horizon past the boundary: exactly one quantum saved.
+    assert eng.termination_saving(1, 0.5, 1.7) == pytest.approx(0.650)
+
+
+# ------------------------------------------------------------- timed trace
+
+
+def test_timed_trace_validates_monotonicity():
+    a = StreamAdded(StreamSpec("a", ZF, 0.5), at=1.0)
+    b = StreamRemoved("a", at=0.5)
+    with pytest.raises(ValueError):
+        TimedTrace([a, b])
+    tr = TimedTrace([b, a], horizon=2.0)
+    assert tr.times() == (0.5, 1.0) and tr.horizon == 2.0
+    assert TimedTrace([a]).horizon == 1.0  # horizon floors at the last event
+
+
+def test_timed_trace_coerce_shim():
+    evs = [StreamAdded(StreamSpec("a", ZF, 0.5)), StreamRemoved("a")]
+    tr = TimedTrace.coerce(evs)
+    assert isinstance(tr, TimedTrace) and len(tr) == 2 and tr.horizon == 0.0
+    assert TimedTrace.coerce(tr) is tr
+
+
+def test_event_timestamp_validation():
+    with pytest.raises(ValueError):
+        StreamRemoved("a", at=-0.1)
+    with pytest.raises(ValueError):
+        StreamRateChanged("a", 1.0, at=float("nan"))
+
+
+def test_synthetic_timed_trace_replayable():
+    rng = np.random.RandomState(7)
+    trace = synthetic_timed_trace(
+        _streams(6), rng, n_events=15, burst=2, mean_gap_hours=0.1
+    )
+    assert len(trace) == 15
+    assert trace.times() == tuple(sorted(trace.times()))
+    assert trace.horizon >= trace.times()[-1]
+
+
+# ------------------------------------------------- controller integration
+
+
+def test_controller_clock_and_ledger():
+    mgr = _manager()
+    mgr.allocate(_streams(8))
+    ctrl = mgr.controller(billing=HOURLY_2MIN)
+    r0 = ctrl.reset(_streams(8), at=0.0)
+    assert r0.at == 0.0
+    for uid in ctrl.instance_uids:
+        rec = ctrl.lifecycle.record(uid)
+        assert rec.provisioned_at == 0.0
+        assert rec.running_at == pytest.approx(2.0 / 60.0)
+    r1 = ctrl.apply(StreamAdded(StreamSpec("x", ZF, 5.0), at=0.4))
+    assert r1.at == 0.4 and ctrl.now == 0.4
+    # Untimed events (at=0) never move the clock backwards.
+    r2 = ctrl.apply(StreamRemoved("x"))
+    assert r2.at == 0.4
+    assert ctrl.lifecycle.billed_cost(2.0) >= ctrl.lifecycle.instantaneous_integral(2.0)
+
+
+def test_spare_preprovision_consume_release():
+    mgr = _manager()
+    ctrl = mgr.controller(billing=HOURLY_2MIN)
+    ctrl.reset(_streams(4), at=0.0)
+    bt = ctrl.cheapest_host_bin(StreamSpec("x", ZF, 5.0))
+    (uid,) = ctrl.pre_provision(bt)
+    assert ctrl.spares == {uid: bt}
+    # The spare is billed from launch even while idle.
+    assert ctrl.lifecycle.billed_instance(uid, 1.0) > 0.0
+    # A join at t=0.5 that opens a bin of the spare's type consumes its
+    # uid: the instance was provisioned at 0.0, so it is already RUNNING.
+    r = ctrl.apply(StreamAdded(StreamSpec("x", ZF, 5.0), at=0.5))
+    if bt.name in r.plan.instances[len(ctrl.instance_uids) - 1 :]:
+        pass  # membership assertion below is the real check
+    if uid in ctrl.instance_uids:
+        rec = ctrl.lifecycle.record(uid)
+        assert rec.provisioned_at == 0.0
+        assert rec.running_at <= 0.5  # warm: no boot wait at join time
+        assert not ctrl.spares
+    # Releasing an unknown uid raises; releasing a held spare retires it.
+    with pytest.raises(KeyError):
+        ctrl.release_spare(10**9)
+
+
+def test_draining_spare_never_consumed():
+    mgr = _manager()
+    ctrl = mgr.controller(billing=HOURLY_2MIN)
+    ctrl.reset(_streams(4), at=0.0)
+    bt = ctrl.cheapest_host_bin(StreamSpec("x", ZF, 5.0))
+    (uid,) = ctrl.pre_provision(bt)
+    # Drain the spare behind the controller's back (still in _spares):
+    # the DRAINING state must make it invisible to _alloc_uid.
+    ctrl.lifecycle.decommission(uid, 0.1, drain_until=0.2)
+    r = ctrl.apply(StreamAdded(StreamSpec("x", ZF, 5.0), at=0.15))
+    assert uid not in ctrl.instance_uids
+
+
+def test_set_billing_on_live_controller():
+    mgr = _manager()
+    mgr.allocate(_streams(6))
+    ctrl = mgr.controller(billing=HOURLY_2MIN)  # reconfigure in place
+    assert ctrl.billing is HOURLY_2MIN
+    # Live bins were adopted as already-RUNNING (boot is history).
+    for uid in ctrl.instance_uids:
+        assert ctrl.lifecycle.record(uid).running_at == ctrl.now
+    with pytest.raises(TypeError):
+        mgr.controller(bogus=1)
+
+
+def test_billed_migration_certification_flips_decision():
+    """A rate-profitable evacuation mid-quantum is billed-pointless under
+    hourly billing with a short horizon — and profitable with a long one."""
+    mgr = _manager()
+    mgr.controller(gap_threshold=10.0, billing=BillingModel(quantum_hours=1.0))
+    ctrl = mgr.controller()
+    ctrl.reset(_streams(20), at=0.0)
+    drain = [StreamRemoved(f"s{i}", at=0.1) for i in range(20) if i % 5 in (3, 4)]
+    for ev in drain:
+        ctrl.apply(ev)
+    pol = ConsolidationPolicy(max_migrations=3)
+    names = pol.select_evacuations(ctrl)
+    assert names, "drained fleet should offer an evacuation candidate"
+    # Horizon inside the already-paid quantum: rejected on billed grounds.
+    short = ctrl.try_migrate(names, billing_horizon=0.2)
+    assert not short.accepted
+    assert short.billed_delta is not None and short.billed_delta >= 0.0
+    cost_before = ctrl.plan.hourly_cost
+    # Long horizon: the freed rent dominates — accepted, and the billed
+    # delta certifies a saving.
+    long = ctrl.try_migrate(names, billing_horizon=50.0)
+    assert long.accepted and long.billed_delta < 0.0
+    assert long.cost_after < cost_before
+
+
+def test_consolidation_policy_forwards_billing_horizon():
+    mgr = _manager()
+    mgr.controller(gap_threshold=10.0, billing=BillingModel(quantum_hours=1.0))
+    events = [
+        StreamRemoved(f"s{i}", at=0.1 + 0.01 * i)
+        for i in range(20)
+        if i % 5 in (3, 4)
+    ]
+    out = simulate_churn(
+        _manager_with(mgr),
+        _streams(20),
+        TimedTrace(events, horizon=0.5),
+        paper_profile_table(),
+        policy=ConsolidationPolicy(max_migrations=3, billing_horizon=0.2),
+        billing=BillingModel(quantum_hours=1.0),
+        target=0.5,
+    )
+    acts = [a for t in out["timeline"] for a in t["actions"]]
+    assert any(a.startswith("billed-reject") for a in acts)
+    assert out["consolidations"] == 0  # every move was billed-pointless
+
+
+def _manager_with(mgr):
+    return mgr  # alias for readability above
+
+
+# -------------------------------------------------- discrete-event replay
+
+
+def test_simulate_churn_billed_outputs():
+    mgr = _manager()
+    trace = TimedTrace(
+        [
+            StreamAdded(StreamSpec("x", ZF, 5.0), at=0.3),
+            StreamRemoved("x", at=0.8),
+        ],
+        horizon=2.0,
+    )
+    out = simulate_churn(
+        mgr, _streams(6), trace, paper_profile_table(), billing=HOURLY_2MIN
+    )
+    assert out["horizon"] == 2.0
+    assert out["billed_cost"] >= out["snapshot_cost_integral"] > 0.0
+    assert out["billed_overhead"] >= 0.0
+    assert out["degraded_stream_seconds"] > 0.0  # reset boots are waited out
+    assert [t["at"] for t in out["timeline"]] == [0.0, 0.3, 0.8]
+    recs = out["instance_records"]
+    assert recs and all(r["billed"] >= 0.0 for r in recs)
+    assert sum(r["billed"] for r in recs) == pytest.approx(out["billed_cost"])
+
+
+def test_simulate_churn_untimed_shim_unchanged():
+    """Plain event sequences keep the historical snapshot semantics: all
+    events at t=0, zero horizon, zero billed cost under the default
+    (continuous, zero-boot) model."""
+    mgr = _manager()
+    out = simulate_churn(
+        mgr,
+        _streams(6),
+        [StreamAdded(StreamSpec("x", ZF, 0.5)), StreamRemoved("s0")],
+        paper_profile_table(),
+    )
+    assert len(out["timeline"]) == 3
+    assert out["billed_cost"] == 0.0 and out["snapshot_cost_integral"] == 0.0
+    assert out["degraded_stream_seconds"] == 0.0
+
+
+def test_persecond_zero_boot_bitidentical_to_snapshot():
+    """Satellite: continuous (per-second-limit) billing with zero boot
+    reproduces the snapshot cost timeline bit for bit, and the billed
+    total equals the instantaneous integral."""
+    streams = _streams(12)
+    events = [
+        StreamAdded(StreamSpec("x1", ZF, 5.0), at=0.2),
+        StreamRemoved("s3", at=0.5),
+        StreamRateChanged("s0", 0.2, at=0.9),
+        StreamRemoved("x1", at=1.4),
+    ]
+    timed = simulate_churn(
+        _manager(),
+        streams,
+        TimedTrace(events, horizon=2.0),
+        paper_profile_table(),
+        billing=CONTINUOUS,
+    )
+    # The pre-lifecycle semantics: same events, untimed replay.
+    untimed = simulate_churn(
+        _manager(),
+        streams,
+        [dataclasses.replace(ev, at=0.0) for ev in events],
+        paper_profile_table(),
+    )
+    assert [t["cost"] for t in timed["timeline"]] == [
+        t["cost"] for t in untimed["timeline"]
+    ]
+    assert timed["final_cost"] == untimed["final_cost"]
+    assert timed["billed_cost"] == pytest.approx(
+        timed["snapshot_cost_integral"], rel=1e-12
+    )
+    assert timed["degraded_stream_seconds"] == 0.0  # zero boot latency
+
+
+def test_acting_autoscaler_warms_joins():
+    streams = [StreamSpec(f"s{i}", ZF, 5.0) for i in range(6)]
+    joins = [StreamSpec(f"j{i}", ZF, 5.0) for i in range(3)]
+    trace = TimedTrace(
+        [StreamAdded(j, at=0.5 + 0.1 * i) for i, j in enumerate(joins)],
+        horizon=2.0,
+    )
+
+    def forecast(fleet, event):
+        live = {s.name for s in fleet}
+        return StreamForecast(
+            joins=tuple(j for j in joins if j.name not in live)
+        )
+
+    def run(policy):
+        return simulate_churn(
+            _manager(),
+            streams,
+            trace,
+            paper_profile_table(),
+            policy=policy,
+            billing=BillingModel(boot_hours=0.1, quantum_hours=1.0),
+        )
+
+    reactive = run(PinningPolicy())
+    acting = run(ActingAutoscaler(forecast=forecast, max_spares=3))
+    reset_wait = (
+        lambda out: out["timeline"][0]["boot_wait_stream_hours"] * 3600.0
+    )
+    deg_reactive = reactive["degraded_stream_seconds"] - reset_wait(reactive)
+    deg_acting = acting["degraded_stream_seconds"] - reset_wait(acting)
+    assert deg_reactive > 0.0  # joins cold-boot instances
+    assert deg_acting < deg_reactive  # spares absorb the boots
+    acts = [a for t in acting["timeline"] for a in t["actions"]]
+    assert any(a.startswith("autoscale:provision") for a in acts)
+
+
+def test_acting_autoscaler_skips_joins_that_fit_residual():
+    """A forecast join that fits some live bin's residual capacity
+    provisions no spare — that is the billed-overhead guard."""
+    mgr = _manager()
+    ctrl = mgr.controller(billing=HOURLY_2MIN)
+    # A lightly loaded fleet: one more light stream fits residual.
+    light = StreamSpec("light", VGG, 0.2)
+
+    def forecast(fleet, event):
+        live = {s.name for s in fleet}
+        return StreamForecast(
+            joins=(light,) if "light" not in live else ()
+        )
+
+    pol = ActingAutoscaler(forecast=forecast, max_spares=2)
+    ctrl.policy = pol
+    r = ctrl.reset(_streams(5), at=0.0)
+    assert r.advice is not None
+    # The demand simulation agrees with what was actually held.
+    demand = pol.spare_demand(ctrl, (light,))
+    assert bool(ctrl.spares) == bool(demand)
+    state = ctrl.placement_state()
+    fits = any(
+        np.all(req <= row + 1e-9)
+        for row in state.resid
+        for req in ctrl.stream_requirements(light)
+    )
+    if fits:
+        assert not ctrl.spares  # fits residual: no spare held
+
+
+def test_acting_autoscaler_releases_stale_spares():
+    mgr = _manager()
+    ctrl = mgr.controller(billing=HOURLY_2MIN)
+    pol = ActingAutoscaler(forecast=StreamForecast(), max_spares=2)
+    ctrl.policy = pol
+    ctrl.reset(_streams(4), at=0.0)
+    bt = ctrl.cheapest_host_bin(StreamSpec("x", ZF, 5.0))
+    ctrl.pre_provision(bt)
+    assert ctrl.spares
+    # Any event under an empty forecast: the policy releases the spare.
+    r = ctrl.apply(StreamRemoved("s0", at=0.2))
+    assert not ctrl.spares
+    assert any(a.startswith("autoscale:release") for a in r.actions)
+
+

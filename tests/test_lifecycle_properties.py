@@ -1,0 +1,71 @@
+"""Randomized billing-engine invariants (ISSUE-4 satellite properties).
+
+Over random billing models (quantum, boot latency, minimum duration) and
+random instance lifetimes:
+
+* billed cost always dominates the instantaneous $/hr integral — the
+  quantum only ever rounds *up*;
+* billed cost is monotone in the query time;
+* the termination saving is non-negative, never exceeds the kept-instance
+  bill, and is exactly zero while the horizon stays inside the already
+  paid quantum (the decision-flipping fact billing-aware consolidation is
+  built on).
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lifecycle import BillingModel, LifecycleEngine
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    quantum=st.sampled_from([0.0, 1.0 / 3600.0, 0.25, 1.0]),
+    boot=st.floats(0.0, 0.2),
+    min_billed=st.sampled_from([0.0, 0.5]),
+    spans=st.lists(
+        st.tuples(st.floats(0.0, 5.0), st.floats(0.0, 5.0)),
+        min_size=1,
+        max_size=8,
+    ),
+    until=st.floats(0.0, 12.0),
+)
+def test_billed_cost_dominates_instantaneous_integral(
+    quantum, boot, min_billed, spans, until
+):
+    eng = LifecycleEngine(
+        BillingModel(
+            boot_hours=boot, quantum_hours=quantum, min_billed_hours=min_billed
+        )
+    )
+    for uid, (start, dur) in enumerate(spans):
+        eng.provision(uid, "t", 1.0 + 0.1 * uid, at=start)
+        if dur > 0:
+            eng.decommission(uid, start + dur)
+    billed = eng.billed_cost(until)
+    assert billed >= eng.instantaneous_integral(until) - 1e-9
+    # Monotone in the query time.
+    assert billed <= eng.billed_cost(until + 1.0) + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    quantum=st.sampled_from([0.0, 0.5, 1.0]),
+    start=st.floats(0.0, 2.0),
+    term=st.floats(0.0, 3.0),
+    horizon=st.floats(0.0, 4.0),
+)
+def test_termination_saving_nonnegative_and_capped(quantum, start, term, horizon):
+    eng = LifecycleEngine(BillingModel(quantum_hours=quantum))
+    eng.provision(0, "t", 2.0, at=start)
+    at = start + term
+    until = at + horizon
+    saving = eng.termination_saving(0, at, until)
+    assert saving >= 0.0
+    # Never more than the billed cost of the kept instance itself.
+    keep = eng.billing.billed_hours(max(0.0, until - start)) * 2.0
+    assert saving <= keep + 1e-9
+    # Inside the already-paid quantum, terminating early saves nothing.
+    if quantum > 0.0 and until <= eng.billing.next_boundary(start, at):
+        assert saving == 0.0

@@ -107,6 +107,32 @@ def test_fragmentation_ignores_zero_residual_dims():
     assert fleet_fragmentation([]) == {"per_dim": (), "overall": 0.0}
 
 
+def test_fragmentation_empty_and_single_instance_clamp_to_zero():
+    """Satellite: the dispersion is 0.0 by definition on empty and
+    single-instance fleets — never NaN, whatever the residual holds."""
+    assert fleet_fragmentation([]) == {"per_dim": (), "overall": 0.0}
+    for resid in ((4.0, 2.0), (0.0, 0.0), (float("nan"), float("inf"))):
+        lone = InstanceLoad("b", (0.5, 0.5), 1.0, residual=resid)
+        out = fleet_fragmentation([lone])
+        assert out["overall"] == 0.0
+        assert out["per_dim"] == (0.0, 0.0)
+
+
+def test_fragmentation_never_nan_on_degenerate_residuals():
+    bad = InstanceLoad("b", (1.0,), 1.0, residual=(float("nan"),))
+    inf = InstanceLoad("b", (1.0,), 1.0, residual=(float("inf"),))
+    neg = InstanceLoad("b", (2.0,), 1.0, residual=(-3.0,))
+    ok = InstanceLoad("b", (0.5,), 1.0, residual=(2.0,))
+    for fleet in ([bad, ok], [inf, ok], [neg, ok], [bad, inf, neg]):
+        out = fleet_fragmentation(fleet)
+        assert out["overall"] == out["overall"]  # not NaN
+        assert all(0.0 <= d <= 1.0 for d in out["per_dim"])
+    # Degenerate entries clamp to "no free capacity": all real residual
+    # sits in the one healthy instance, so dispersion is zero.
+    assert fleet_fragmentation([bad, ok])["overall"] == 0.0
+    assert fleet_fragmentation([neg, ok])["overall"] == 0.0
+
+
 def test_simulate_plan_reports_fragmentation():
     mgr = _manager()
     plan = mgr.allocate(_streams(8))
@@ -472,3 +498,43 @@ def test_parallel_sweep_matches_serial():
     assert list(
         _manager().allocate_sweep(_streams(8), parallel=True)
     ) == [s.name for s in ALL_STRATEGIES]
+
+
+def test_parallel_sweep_solver_exception_propagates_cache_consistent():
+    """Satellite: a strategy solve raising mid-sweep must propagate out of
+    the thread pool (not vanish into a None plan), and the formulate memo
+    must stay consistent — a subsequent clean sweep succeeds and matches a
+    fresh manager's serial results."""
+    streams = _streams(8)
+    mgr = _manager()
+    orig_plan = mgr._plan
+    boom = RuntimeError("solver exploded mid-sweep")
+
+    def exploding_plan(streams_, problem, strategy):
+        if strategy.name == "ST3":
+            raise boom
+        return orig_plan(streams_, problem, strategy)
+
+    mgr._plan = exploding_plan
+    with pytest.raises(RuntimeError, match="mid-sweep"):
+        mgr.allocate_sweep(streams, parallel=True)
+    # The pool teardown path must not corrupt the shared formulate memo:
+    # cached problems are still the memoized instances ...
+    for strat in ALL_STRATEGIES:
+        try:
+            problem = mgr.formulate(streams, strat)
+        except Exception:
+            continue
+        assert mgr.formulate(streams, strat) is problem
+        problem.tensors()  # and their tensor caches are materialized/valid
+    # ... and a clean sweep over the same manager matches a fresh serial one.
+    mgr._plan = orig_plan
+    after = mgr.allocate_sweep(streams, parallel=True)
+    fresh = _manager().allocate_sweep(streams)
+    assert list(after) == list(fresh)
+    for name in fresh:
+        if fresh[name] is None:
+            assert after[name] is None
+            continue
+        assert after[name].hourly_cost == pytest.approx(fresh[name].hourly_cost)
+        after[name].solution.validate()
