@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
   consolidation      — policy layer: bounded-migration consolidation vs pinning
   lifecycle          — instance lifecycle & billing: quantized billing,
                        acting autoscaler vs reactive, billing-aware moves
+  spot               — spot/preemptible market: risk-aware vs naive spot vs
+                       all-on-demand on a preemption-heavy trace
   roofline_report    — §Roofline table from dry-run artifacts
 
 Suites that emit a gated artifact (``churn_replan`` → ``BENCH_replan.json``,
@@ -31,6 +33,7 @@ GATED_ARTIFACTS = {
     "churn": "BENCH_replan.json",
     "policy": "BENCH_policy.json",
     "lifecycle": "BENCH_lifecycle.json",
+    "spot": "BENCH_spot.json",
 }
 
 
@@ -52,6 +55,7 @@ def main() -> None:
         lifecycle,
         roofline_report,
         solver_scaling,
+        spot,
         table2_speedup,
         table3_requirements,
         table6_strategies,
@@ -70,6 +74,7 @@ def main() -> None:
         "churn": churn_replan,
         "policy": consolidation,
         "lifecycle": lifecycle,
+        "spot": spot,
         "roofline": roofline_report,
     }
     selected = args.only or list(suites)

@@ -1,0 +1,279 @@
+"""Beyond-paper: spot/preemptible instance study — risk-aware allocation.
+
+Real clouds sell the same instance shape at two prices: on-demand, and
+spot at a deep discount paid for in *preemption risk*.  This suite builds
+a two-tier market over the paper catalog — each shape gets a
+cheap-but-flaky spot pool (30% of on-demand, λ = 0.9 interruptions per
+instance-hour) and a dearer-but-stable one (45%, λ = 0.08), the
+per-pool (price, interruption-frequency) menu real spot markets publish —
+and replays ONE seeded preemption-heavy 500-stream timed trace
+(`streams.synthetic_timed_trace(preemption_hazard=...)`: churn plus a
+Poisson shock stream, per-type-thinned at replay so every compared policy
+sees the identical events yet each spot type dies at its own catalog λ)
+through four allocators:
+
+* **ondemand** — the spot-blind baseline: on-demand types only.  Never
+  preempted, pays full rent.
+* **naive_spot** — cost-greedy over the raw two-tier catalog: the solver
+  sees only rent, so it buys the deepest discount (the flaky pool) and
+  pays in preemption churn — streams go down for a replacement boot on
+  every interruption.
+* **risk_aware** — the same catalog priced through
+  `policy.risk_adjusted_catalog`: spot decision costs carry
+  rent + λ × (re-placement penalty), so the packer buys the *stable*
+  pool's discount and the flaky pool only when its rent survives its
+  risk.  Billing still runs on true rents (`BinType.billed_rent`), and
+  spot pools bill per-second next to hourly on-demand via the per-type
+  `billing_by_type` map (`LifecycleEngine.billing_for`).
+* **risk_acting** — risk_aware plus `ActingAutoscaler` holding warm
+  spares ahead of an oracle join forecast, with ``max_spare_hazard``
+  refusing unreliable pools: spares come from the stable tier (or
+  on-demand), never the flaky one.
+
+Gated via ``BENCH_spot.json`` (`scripts/check_bench.py`): risk-aware must
+bill >= 10% less than all-on-demand while its preemption-caused degraded
+stream-seconds stay no worse than naive all-spot's, the naive run must
+demonstrably lose on degraded time, the on-demand run must never be
+preempted, and the acting run must hold no unreliable spares.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.catalog import paper_ec2_catalog, with_spot_variants
+from repro.core.lifecycle import BillingModel
+from repro.core.manager import ResourceManager
+from repro.core.policy import (
+    ActingAutoscaler,
+    PinningPolicy,
+    risk_adjusted_catalog,
+)
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_churn
+from repro.core.streams import (
+    InstancePreempted,
+    StreamAdded,
+    StreamForecast,
+    StreamSpec,
+    synthetic_timed_trace,
+)
+
+from . import consolidation
+from .common import record, write_json
+
+BOOT_H = 2.0 / 60.0
+HOURLY = BillingModel(boot_hours=BOOT_H, quantum_hours=1.0)
+#: Spot pools bill per-second (continuous is the per-second limit at
+#: hour-scale horizons) — the per-type contract map's reason to exist.
+SPOT_BILL = BillingModel(boot_hours=BOOT_H, quantum_hours=0.0)
+
+FLAKY_RATIO, FLAKY_HAZARD = 0.30, 0.9  # deep discount, reclaimed constantly
+STABLE_RATIO, STABLE_HAZARD = 0.45, 0.08  # modest discount, rarely reclaimed
+DEGRADED_PENALTY = 25.0  # $ per stream-hour of post-preemption downtime
+HAZARD_POOL = 192  # thinning pool: >= max concurrent spot instances
+N_EVENTS = 80
+MEAN_GAP_H = 0.02
+LOOKAHEAD_H = 0.15
+MAX_SPARES = 3
+MAX_SPARE_HAZARD = 0.1  # tolerate the stable pool, refuse the flaky one
+GAP_THRESHOLD = 0.3
+SEED = 7113
+
+
+def _market():
+    """(on-demand catalog, two-tier spot catalog, per-type billing map)."""
+    base = paper_ec2_catalog()
+    cat = with_spot_variants(
+        base, price_ratio=FLAKY_RATIO, hazard=FLAKY_HAZARD, suffix="-spot"
+    )
+    cat = with_spot_variants(
+        cat,
+        price_ratio=STABLE_RATIO,
+        hazard=STABLE_HAZARD,
+        suffix="-spot-stable",
+    )
+    by_type = {bt.name: SPOT_BILL for bt in cat if bt.is_spot}
+    return base, cat, by_type
+
+
+def _trace(initial):
+    """Seeded preemption-heavy churn: joins/leaves/re-rates + spot shocks."""
+    rng = np.random.RandomState(SEED)
+    kinds = consolidation.KINDS
+
+    def make_join(i):
+        return StreamSpec(f"g{i}", *kinds[i % len(kinds)])
+
+    return synthetic_timed_trace(
+        initial,
+        rng,
+        n_events=N_EVENTS,
+        mean_gap_hours=MEAN_GAP_H,
+        p_join=0.45,
+        p_leave=0.2,
+        make_join=make_join,
+        rerate_fps=lambda s: [
+            fps
+            for prog, fps in kinds
+            if prog.program_id == s.program.program_id
+        ],
+        burst=2,
+        tail_hours=0.3,
+        preemption_hazard=FLAKY_HAZARD,  # reference = the max catalog λ
+        hazard_pool=HAZARD_POOL,
+    )
+
+
+def _oracle_forecast(trace):
+    """Perfect short-horizon join forecaster read off the trace itself."""
+    adds = [(ev.at, ev.stream) for ev in trace if isinstance(ev, StreamAdded)]
+
+    def forecast(fleet, event):
+        now = event.at if event is not None else 0.0
+        live = {s.name for s in fleet}
+        upcoming = tuple(
+            s
+            for t, s in adds
+            if now < t <= now + LOOKAHEAD_H and s.name not in live
+        )
+        return StreamForecast(joins=upcoming[:MAX_SPARES])
+
+    return forecast
+
+
+def _replay(catalog, initial, trace, by_type, *, policy):
+    mgr = ResourceManager(
+        catalog, paper_profile_table(), max_nodes=consolidation.MAX_NODES
+    )
+    mgr.controller(gap_threshold=GAP_THRESHOLD)
+    return simulate_churn(
+        mgr,
+        initial,
+        trace,
+        paper_profile_table(),
+        policy=policy,
+        billing=HOURLY,
+        billing_by_type=by_type,
+    )
+
+
+def _join_degraded(out) -> float:
+    """Degraded stream-seconds from join/reset boots only (the initial
+    reset boot is identical across runs; preemption waits are broken out
+    by the simulator already)."""
+    reset = out["timeline"][0]["boot_wait_stream_hours"] * 3600.0
+    return (
+        out["degraded_stream_seconds"]
+        - out["preemption_degraded_stream_seconds"]
+        - reset
+    )
+
+
+def run() -> dict:
+    base, spot_cat, by_type = _market()
+    risk_cat = risk_adjusted_catalog(
+        spot_cat,
+        HOURLY,
+        billing_by_type=by_type,
+        degraded_penalty=DEGRADED_PENALTY,
+    )
+    initial = consolidation._initial_fleet()
+    trace = _trace(initial)
+    shocks = sum(isinstance(ev, InstancePreempted) for ev in trace)
+
+    runs = {}
+    for name, catalog, policy in (
+        ("ondemand", base, PinningPolicy()),
+        ("naive_spot", spot_cat, PinningPolicy()),
+        ("risk_aware", risk_cat, PinningPolicy()),
+        (
+            "risk_acting",
+            risk_cat,
+            ActingAutoscaler(
+                forecast=_oracle_forecast(trace),
+                max_spares=MAX_SPARES,
+                max_spare_hazard=MAX_SPARE_HAZARD,
+            ),
+        ),
+    ):
+        t0 = time.perf_counter()
+        out = _replay(catalog, initial, trace, by_type, policy=policy)
+        dt = time.perf_counter() - t0
+        runs[name] = out
+        record(
+            f"spot/{name}", dt * 1e6,
+            f"billed=${out['billed_cost']:.2f} "
+            f"preemptions={out['preemptions']} "
+            f"preempt_degraded={out['preemption_degraded_stream_seconds']:.0f}s "
+            f"join_degraded={_join_degraded(out):.0f}s",
+        )
+
+    od, naive, risk, acting = (
+        runs["ondemand"],
+        runs["naive_spot"],
+        runs["risk_aware"],
+        runs["risk_acting"],
+    )
+    risk_saving = 1.0 - risk["billed_cost"] / od["billed_cost"]
+    naive_saving = 1.0 - naive["billed_cost"] / od["billed_cost"]
+    degraded_excess = (
+        risk["preemption_degraded_stream_seconds"]
+        - naive["preemption_degraded_stream_seconds"]
+    )
+    hazard_of = {bt.name: bt.hazard for bt in risk_cat}
+    unreliable_spares = sum(
+        hazard_of.get(a.rsplit(":", 1)[-1], 0.0) > MAX_SPARE_HAZARD
+        for t in acting["timeline"]
+        for a in t["actions"]
+        if a.startswith("autoscale:provision:")
+    )
+    acting_join_cut = 1.0 - _join_degraded(acting) / max(
+        _join_degraded(risk), 1e-12
+    )
+    acting_overhead = acting["billed_cost"] / risk["billed_cost"] - 1.0
+
+    out = {
+        "billed_cost_ondemand": od["billed_cost"],
+        "billed_cost_naive_spot": naive["billed_cost"],
+        "billed_cost_risk_aware": risk["billed_cost"],
+        "billed_cost_risk_acting": acting["billed_cost"],
+        "risk_aware_billed_saving": risk_saving,
+        "naive_spot_billed_saving": naive_saving,
+        "preemptions_ondemand": od["preemptions"],
+        "preemptions_naive_spot": naive["preemptions"],
+        "preemptions_risk_aware": risk["preemptions"],
+        "preempt_degraded_seconds_naive_spot": naive[
+            "preemption_degraded_stream_seconds"
+        ],
+        "preempt_degraded_seconds_risk_aware": risk[
+            "preemption_degraded_stream_seconds"
+        ],
+        "risk_vs_naive_degraded_excess": degraded_excess,
+        "acting_join_degraded_cut": acting_join_cut,
+        "acting_billed_overhead": acting_overhead,
+        "acting_unreliable_spares": unreliable_spares,
+        "trace_shocks": shocks,
+    }
+    record(
+        "spot/summary", 0.0,
+        f"risk_saving={risk_saving:.1%} naive_saving={naive_saving:.1%} "
+        f"degraded risk={risk['preemption_degraded_stream_seconds']:.0f}s vs "
+        f"naive={naive['preemption_degraded_stream_seconds']:.0f}s "
+        f"acting_join_cut={acting_join_cut:.0%}@{acting_overhead:+.2%}",
+    )
+    write_json(
+        "BENCH_spot.json",
+        prefix="spot/",
+        meta={
+            "n_streams": consolidation.N_STREAMS,
+            "n_churn_events": N_EVENTS,
+            "hazard_pool": HAZARD_POOL,
+            "flaky_hazard": FLAKY_HAZARD,
+            "stable_hazard": STABLE_HAZARD,
+            "degraded_penalty": DEGRADED_PENALTY,
+            **out,
+        },
+    )
+    return out

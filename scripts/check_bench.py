@@ -51,6 +51,24 @@ FLOORS: dict[str, dict[str, tuple[str, float, str]]] = {
         # bill than the billing-blind policy under hourly billing.
         "billing_aware_excess": ("<=", 1e-9, "billing-aware consolidation bill"),
     },
+    "BENCH_spot.json": {
+        # Acceptance: risk-aware spot allocation must bill >= 10% less
+        # than all-on-demand on the seeded preemption-heavy trace
+        # (measured ~65% with the stable pool at 45% of on-demand) ...
+        "risk_aware_billed_saving": (">=", 0.10, "risk-aware bill cut vs on-demand"),
+        # ... while its preemption-caused degraded stream-seconds stay no
+        # worse than naive all-spot's (the replay is deterministic, so
+        # equality-up-to-eps is a real bound, not noise) ...
+        "risk_vs_naive_degraded_excess": ("<=", 1e-9, "risk-aware degraded bound"),
+        # ... and naive all-spot must demonstrably lose on degraded time
+        # (measured ~58,000 s of preemption downtime on this trace) ...
+        "preempt_degraded_seconds_naive_spot": (">=", 600.0, "naive pays in downtime"),
+        # ... an all-on-demand fleet rides out every shock unscathed ...
+        "preemptions_ondemand": ("<=", 0.0, "on-demand is never preempted"),
+        # ... and the acting autoscaler never holds a spare from a pool
+        # above its hazard tolerance (no flaky-spot spares).
+        "acting_unreliable_spares": ("<=", 0.0, "no unreliable warm spares"),
+    },
     "BENCH_policy.json": {
         # Acceptance: bounded-migration consolidation (k<=3 per event) must
         # end the 500-stream / 200-event trace >= 5% cheaper than the

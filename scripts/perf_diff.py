@@ -17,19 +17,41 @@ Handles two artifact shapes:
     Billed-cost metrics (the lifecycle artifact's "billed_*" keys and
     degraded-time counters from benchmarks/lifecycle.py) get their own
     dollar-formatted section, so billing-engine PRs can eyeball whether a
-    change moved the *bill*, not just the wall time.
+    change moved the *bill*, not just the wall time.  Spot/preemption
+    metrics (BENCH_spot.json's preemption counts, degraded-time splits,
+    and risk-aware savings) likewise get a dedicated section.
 """
 import json
 import sys
+
+# Spot-specific key prefixes only: BENCH_lifecycle.json's pre-existing
+# "acting_billed_overhead" must stay in the general meta section, so the
+# spot benchmark's acting keys are matched by their full spot-only names.
+_SPOT_PREFIXES = (
+    "preempt",
+    "risk_aware_",
+    "risk_vs_",
+    "naive_spot_",
+    "acting_join_degraded_cut",
+    "acting_unreliable_spares",
+    "trace_shocks",
+)
 
 
 def _is_billed_key(k: str) -> bool:
     return k.startswith("billed_") or k.startswith("degraded_seconds")
 
 
-def diff_billed(a: dict, b: dict) -> None:
+def _is_spot_key(k: str) -> bool:
+    return k.startswith(_SPOT_PREFIXES)
+
+
+def _diff_section(a: dict, b: dict, predicate, label: str, fmt) -> None:
+    """One meta-metric section: keys matching ``predicate``, rows
+    rendered by ``fmt(key, before, after, delta) -> str``."""
     am, bm = a.get("meta", {}), b.get("meta", {})
-    keys = sorted(k for k in set(am) | set(bm) if _is_billed_key(k))
+    keys = sorted(k for k in set(am) | set(bm) if predicate(k))
+    width = 34 if not keys else max(34, max(map(len, keys)))
     shown = False
     for k in keys:
         x, y = am.get(k), bm.get(k)
@@ -37,24 +59,43 @@ def diff_billed(a: dict, b: dict) -> None:
             continue
         if not shown:
             print(
-                f"{'billed-cost metric':34s} {'before':>12s} {'after':>12s} "
+                f"{label:{width}s} {'before':>12s} {'after':>12s} "
                 f"{'delta':>8s}"
             )
             shown = True
-        unit = "s" if k.startswith("degraded") else "$"
         delta = (y - x) / x if x else float("nan")
-        print(f"{k:34s} {unit}{x:11.2f} {unit}{y:11.2f} {delta:+8.1%}")
+        print(f"{k:{width}s} {fmt(k, x, y, delta)}")
     if shown:
         print()
 
 
+def diff_spot(a: dict, b: dict) -> None:
+    _diff_section(
+        a,
+        b,
+        _is_spot_key,
+        "spot/preemption metric",
+        lambda k, x, y, d: f"{x:12.4g} {y:12.4g} {d:+8.1%}",
+    )
+
+
+def diff_billed(a: dict, b: dict) -> None:
+    def fmt(k, x, y, d):
+        unit = "s" if k.startswith("degraded") else "$"
+        return f"{unit}{x:11.2f} {unit}{y:11.2f} {d:+8.1%}"
+
+    _diff_section(a, b, _is_billed_key, "billed-cost metric", fmt)
+
+
 def diff_meta(a: dict, b: dict) -> None:
     diff_billed(a, b)
+    diff_spot(a, b)
     am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
         k
         for k in sorted(set(am) | set(bm))
         if not _is_billed_key(k)
+        and not _is_spot_key(k)
         and (
             isinstance(am.get(k), (int, float))
             or isinstance(bm.get(k), (int, float))

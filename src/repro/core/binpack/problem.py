@@ -46,21 +46,46 @@ class InfeasibleError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class BinType:
-    """A cloud instance type: capacity vector + hourly cost."""
+    """A cloud instance type: capacity vector + hourly cost.
+
+    ``cost`` is what the solvers *minimize*; for on-demand types it is the
+    hourly rent.  Spot/preemptible variants carry an interruption
+    ``hazard`` (expected preemptions per instance-hour; 0.0 = never
+    preempted, the on-demand contract) and may price ``cost`` at a
+    *risk-adjusted effective* rate while ``rent`` keeps the true billed
+    $/hr (see `core.policy.risk_adjusted_catalog`) — billing always runs
+    on `billed_rent`, so inflating the decision cost never inflates the
+    ledger.
+    """
 
     name: str
     capacity: tuple[float, ...]
     cost: float
+    hazard: float = 0.0  # preemptions per instance-hour (0 = on-demand)
+    rent: float | None = None  # true billed $/hr when cost is risk-adjusted
 
     def __post_init__(self) -> None:
         if self.cost < 0:
             raise ValueError(f"bin {self.name}: negative cost")
         if any(c < 0 for c in self.capacity):
             raise ValueError(f"bin {self.name}: negative capacity")
+        if self.hazard < 0 or self.hazard != self.hazard:
+            raise ValueError(f"bin {self.name}: hazard must be >= 0")
+        if self.rent is not None and self.rent < 0:
+            raise ValueError(f"bin {self.name}: negative rent")
 
     @property
     def dim(self) -> int:
         return len(self.capacity)
+
+    @property
+    def is_spot(self) -> bool:
+        return self.hazard > 0.0
+
+    @property
+    def billed_rent(self) -> float:
+        """The $/hr the cloud actually bills (``cost`` unless risk-adjusted)."""
+        return self.cost if self.rent is None else self.rent
 
 
 @dataclasses.dataclass(frozen=True)

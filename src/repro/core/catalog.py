@@ -20,8 +20,11 @@ __all__ = [
     "paper_ec2_catalog",
     "tpu_cloud_catalog",
     "expand_multi_accelerator",
+    "spot_variant",
+    "with_spot_variants",
     "PAPER_DIMS",
     "TPU_DIMS",
+    "SPOT_SUFFIX",
 ]
 
 #: Dimension labels for the paper catalog (single-accelerator form).
@@ -67,6 +70,97 @@ def tpu_cloud_catalog() -> tuple[BinType, ...]:
     )
 
 
+#: Naming convention for spot variants: "<on-demand name>-spot".
+SPOT_SUFFIX = "-spot"
+
+
+def spot_variant(
+    bin_type: BinType,
+    *,
+    price_ratio: float = 0.35,
+    hazard: float = 0.05,
+    suffix: str = SPOT_SUFFIX,
+) -> BinType:
+    """The spot/preemptible variant of an on-demand instance type.
+
+    Same capacity vector, rent discounted to ``price_ratio`` of the
+    on-demand price (clouds sell spot at a deep discount — 2018-era EC2
+    spot cleared around 30-40% of on-demand), and an interruption
+    ``hazard`` (expected preemptions per instance-hour) — the risk the
+    discount pays for.  The variant is a *separate* catalog entry, so a
+    fleet can mix spot and on-demand copies of the same shape and the
+    solver prices each on its own contract.  ``suffix`` names the spot
+    pool: real markets sell the same shape from several pools at
+    different (price, interruption-frequency) points, and a catalog may
+    carry one entry per pool.
+    """
+    if not 0.0 < price_ratio <= 1.0:
+        raise ValueError(f"price_ratio must be in (0, 1], got {price_ratio}")
+    if hazard <= 0.0:
+        raise ValueError(f"spot variant needs hazard > 0, got {hazard}")
+    if bin_type.is_spot or bin_type.rent is not None:
+        # Discounting an already-spot (or risk-adjusted) entry would
+        # compound the discount off a decision cost and bill a figure
+        # that was never rent.
+        raise ValueError(
+            f"bin {bin_type.name}: spot variants derive from on-demand "
+            f"entries only"
+        )
+    return BinType(
+        name=bin_type.name + suffix,
+        capacity=bin_type.capacity,
+        cost=bin_type.cost * price_ratio,
+        hazard=hazard,
+    )
+
+
+def with_spot_variants(
+    catalog: "tuple[BinType, ...]",
+    *,
+    price_ratio: float = 0.35,
+    hazard: float = 0.05,
+    hazards: "dict[str, float] | None" = None,
+    suffix: str = SPOT_SUFFIX,
+) -> tuple[BinType, ...]:
+    """A two-tier market: every on-demand type plus its spot variant.
+
+    ``hazards`` overrides the interruption rate per on-demand type name
+    (scarce shapes — GPU boxes — get reclaimed more often than plentiful
+    CPU ones).  Types already carrying a hazard pass through unchanged.
+    Apply repeatedly with distinct ``suffix``es to model several spot
+    pools per shape (cheap-but-flaky next to dearer-but-stable).
+    """
+    out = list(catalog)
+    taken = {bt.name for bt in catalog}
+    unknown = set(hazards or {}) - {bt.name for bt in catalog if not bt.is_spot}
+    if unknown:
+        # A typo'd override would silently mint the pool at the default
+        # hazard — under-pricing its eviction risk everywhere downstream.
+        raise KeyError(
+            f"hazards= names no on-demand catalog type: {sorted(unknown)}"
+        )
+    for bt in catalog:
+        if bt.is_spot:
+            continue
+        sv = spot_variant(
+            bt,
+            price_ratio=price_ratio,
+            hazard=(hazards or {}).get(bt.name, hazard),
+            suffix=suffix,
+        )
+        if sv.name in taken:
+            # Same suffix applied twice: two same-named BinTypes would
+            # resolve ambiguously everywhere the catalog is name-keyed
+            # (re-pricing, billing_by_type, spare matching).
+            raise ValueError(
+                f"spot variant {sv.name!r} already in catalog — use a "
+                f"distinct suffix per pool"
+            )
+        taken.add(sv.name)
+        out.append(sv)
+    return tuple(out)
+
+
 def expand_multi_accelerator(bin_type: BinType, n_accelerators: int) -> BinType:
     """Lift a single-accelerator-form bin into the 2 + 2N dimension space.
 
@@ -81,4 +175,10 @@ def expand_multi_accelerator(bin_type: BinType, n_accelerators: int) -> BinType:
         slots += [0.0, 0.0] * (n_accelerators - 1)
     else:
         slots += [0.0, 0.0] * n_accelerators
-    return BinType(bin_type.name, capacity=(cores, mem, *slots), cost=bin_type.cost)
+    return BinType(
+        bin_type.name,
+        capacity=(cores, mem, *slots),
+        cost=bin_type.cost,
+        hazard=bin_type.hazard,
+        rent=bin_type.rent,
+    )

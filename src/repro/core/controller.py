@@ -74,6 +74,25 @@ Acting (not merely advisory) autoscaling rides the same ledger:
 new bin consumes a matching spare's uid instead of a cold boot — the
 join lands on an already-warm instance.  `release_spare` retires unused
 spares; `core.policy.ActingAutoscaler` drives both ends.
+
+## Spot instances & preemption
+
+The instance market is two-tier: spot `BinType`s carry an interruption
+``hazard`` (λ preemptions per instance-hour) next to their discounted
+rent.  A `streams.InstancePreempted` event is the cloud calling the
+discount in: the controller resolves the victim (an explicit uid, or
+per-type thinning of a sampled shock against the alive spot fleet —
+`_preemption_target`), force-closes it through
+`LifecycleEngine.preempt` (no drain window; billing still rounds the
+final quantum up), and re-places the displaced streams through the
+ordinary greedy-repair + exact-pinned-subsolve path.  Unlike a planned
+migration there is no make-before-break overlap, so the replacement's
+boot wait is charged to degraded time by the simulator.  Risk-aware
+allocation prices that risk up front: `core.policy.risk_adjusted_catalog`
+sets spot decision costs to rent + λ x re-placement penalty (billing
+keeps the true rent via `BinType.billed_rent`), and
+`core.policy.ActingAutoscaler` refuses to hold spares on types above its
+hazard tolerance.
 """
 from __future__ import annotations
 
@@ -97,6 +116,7 @@ from .manager import AllocationPlan, PlacedStream
 from .strategies import ST3, Strategy
 from .streams import (
     FleetEvent,
+    InstancePreempted,
     PriceChanged,
     StreamAdded,
     StreamRateChanged,
@@ -197,6 +217,7 @@ class FleetController:
         sub_max_nodes: int = 50_000,
         policy=None,
         billing: BillingModel | None = None,
+        billing_by_type: dict[str, BillingModel] | None = None,
     ) -> None:
         from .policy import PinningPolicy
 
@@ -208,8 +229,13 @@ class FleetController:
         # Default billing is the timeless model (instant boot, continuous
         # quantum): the lifecycle ledger then reproduces snapshot costing
         # exactly and every pre-lifecycle call site behaves unchanged.
+        # `billing_by_type` layers per-instance-type contracts over it
+        # (spot vs on-demand), resolved by the ledger's `billing_for`.
         self.billing = billing if billing is not None else BillingModel()
-        self.lifecycle = LifecycleEngine(self.billing)
+        self.billing_by_type = dict(billing_by_type or {})
+        self.lifecycle = LifecycleEngine(
+            self.billing, billing_by_type=self.billing_by_type
+        )
         self.now = 0.0  # monotone clock, hours (advanced by event `at`s)
         self._spares: dict[int, BinType] = {}  # warm spare uid -> type
         self._ledger_live: set[int] = set()  # bin uids at the last sync
@@ -250,7 +276,9 @@ class FleetController:
         if at is not None:
             self.now = at
         self._spares = {}
-        self.lifecycle = LifecycleEngine(self.billing)
+        self.lifecycle = LifecycleEngine(
+            self.billing, billing_by_type=self.billing_by_type
+        )
         self._ledger_live = set()
         self._adopt_solution(problem, plan.solution, match_old=False)
         self._plan = plan
@@ -300,19 +328,11 @@ class FleetController:
             raise RuntimeError("FleetController.apply before reset()")
         if isinstance(event, PriceChanged):
             return self._apply_price(event)
+        if isinstance(event, InstancePreempted):
+            return self._apply_preemption(event)
         new_streams = list(apply_events(self._streams, [event]))
         if fleet_key(new_streams) == fleet_key(self._streams):
-            assert self._plan is not None
-            lb = self._lower_bound(self._problem)
-            return ReplanResult(
-                plan=self._plan,
-                mode="noop",
-                displaced=(),
-                migrated=(),
-                lower_bound=lb,
-                gap=_gap(self._plan.hourly_cost, lb),
-                nodes=0,
-            )
+            return self._noop_result()
 
         # Displaced streams: appended at the fleet's tail by apply_events.
         if isinstance(event, StreamAdded):
@@ -550,7 +570,9 @@ class FleetController:
         uids = []
         for _ in range(count):
             uid = next(self._uid)
-            self.lifecycle.provision(uid, bin_type.name, bin_type.cost, self.now)
+            self.lifecycle.provision(
+                uid, bin_type.name, bin_type.billed_rent, self.now
+            )
             self._spares[uid] = bin_type
             uids.append(uid)
         return tuple(uids)
@@ -624,19 +646,30 @@ class FleetController:
             )
         return best
 
-    def set_billing(self, billing: BillingModel) -> None:
+    def set_billing(
+        self,
+        billing: BillingModel,
+        *,
+        by_type: dict[str, BillingModel] | None = None,
+    ) -> None:
         """Swap the billing model on a live controller.
 
         A fresh ledger is seeded with the current bins as already-RUNNING
         at ``now`` (their boot is history — only forward billing changes);
-        held spares re-provision under the new model.
+        held spares re-provision under the new model.  ``by_type`` swaps
+        the per-instance-type contract map as well (None keeps the
+        current map; pass ``{}`` to clear it).
         """
         self.billing = billing
-        eng = LifecycleEngine(billing)
+        if by_type is not None:
+            self.billing_by_type = dict(by_type)
+        eng = LifecycleEngine(billing, billing_by_type=self.billing_by_type)
         for b in self._bins:
-            eng.adopt_running(b.uid, b.bin_type.name, b.bin_type.cost, self.now)
+            eng.adopt_running(
+                b.uid, b.bin_type.name, b.bin_type.billed_rent, self.now
+            )
         for uid, bt in self._spares.items():
-            eng.provision(uid, bt.name, bt.cost, self.now)
+            eng.provision(uid, bt.name, bt.billed_rent, self.now)
         self.lifecycle = eng
         self._ledger_live = {b.uid for b in self._bins}
 
@@ -655,7 +688,7 @@ class FleetController:
         eng = self.lifecycle
         live = {b.uid: b.bin_type for b in self._bins}
         for uid in [u for u in live if u not in eng]:
-            eng.provision(uid, live[uid].name, live[uid].cost, self.now)
+            eng.provision(uid, live[uid].name, live[uid].billed_rent, self.now)
         drain_until = self.now
         for uid in live:
             if uid not in self._ledger_live:
@@ -672,11 +705,25 @@ class FleetController:
     def _alloc_uid(self, bin_type: BinType) -> int:
         """Uid for a newly opened bin: consume a warm spare of the same
         type when one is held (the bin inherits its ledger record — and
-        its already-elapsed boot), else mint a cold uid."""
+        its already-elapsed boot), else mint a cold uid.
+
+        Among matching spares, the one with the earliest ``running_at``
+        wins (ties keep pool order): a fully-booted spare must never idle
+        while a still-PROVISIONING one is handed to the join — consuming
+        spares in bare dict-insertion order broke the "join lands warm"
+        promise whenever the pool held mixed boot stages.
+        """
+        best: int | None = None
+        best_running = float("inf")
         for uid, bt in self._spares.items():
-            if bt.name == bin_type.name and self.lifecycle.accepting(uid, self.now):
-                del self._spares[uid]
-                return uid
+            if bt.name != bin_type.name or not self.lifecycle.accepting(uid, self.now):
+                continue
+            running_at = self.lifecycle.record(uid).running_at
+            if running_at < best_running:
+                best, best_running = uid, running_at
+        if best is not None:
+            del self._spares[best]
+            return best
         return next(self._uid)
 
     def _billed_migration_delta(
@@ -693,17 +740,27 @@ class FleetController:
         when replacements must boot; each cold new bin bills fresh quanta
         for the whole horizon (it could close earlier, so this is the
         conservative side).  Spare-held credit is ignored, likewise
-        conservative.
+        conservative.  Billing contracts resolve per instance type, and
+        new bins price at ``bt.cost`` — the *decision* cost, which under a
+        risk-adjusted catalog already carries the spot-hazard premium, so
+        the certification weighs eviction risk, not just rent.
         """
         end = self.now + horizon
-        boot = self.billing.boot_hours if new_types else 0.0
+        boot = max(
+            (
+                self.lifecycle.billing_for(bt.name).boot_hours
+                for bt in new_types
+            ),
+            default=0.0,
+        )
         saving = sum(
             self.lifecycle.termination_saving(uid, self.now + boot, end)
             for uid in closed_uids
             if uid in self.lifecycle
         )
         cost_new = sum(
-            self.billing.billed_hours(max(0.0, horizon)) * bt.cost
+            self.lifecycle.billing_for(bt.name).billed_hours(max(0.0, horizon))
+            * bt.cost
             for bt in new_types
         )
         return cost_new - saving
@@ -794,15 +851,27 @@ class FleetController:
 
         The catalog lives on the (shared) manager, so EVERY live
         controller's state is re-priced — a sibling strategy's pinned bins
-        must not keep charging stale costs.
+        must not keep charging stale costs.  ``event.cost`` is the new
+        *billed rent*: on a risk-adjusted spot entry (``rent`` set) the
+        decision cost keeps its risk premium on top of the new rent —
+        exact premium re-derivation needs the penalty parameters, so
+        callers wanting it re-run `policy.risk_adjusted_catalog` — and
+        the ledger re-prices at the new rent, never the decision cost.
         """
         mgr = self.manager
         if not any(bt.name == event.instance_type for bt in mgr.catalog):
             raise KeyError(f"no instance type {event.instance_type!r}")
+
+        def repriced(bt: BinType) -> BinType:
+            if bt.rent is None:
+                return dataclasses.replace(bt, cost=event.cost)
+            premium = max(0.0, bt.cost - bt.rent)
+            return dataclasses.replace(
+                bt, cost=event.cost + premium, rent=event.cost
+            )
+
         mgr.catalog = tuple(
-            dataclasses.replace(bt, cost=event.cost)
-            if bt.name == event.instance_type
-            else bt
+            repriced(bt) if bt.name == event.instance_type else bt
             for bt in mgr.catalog
         )
         mgr._formulate_cache.clear()  # cached Problems embed stale prices
@@ -818,6 +887,93 @@ class FleetController:
             self._problem, list(self._streams), len(self._streams), set()
         )
 
+    def _apply_preemption(self, event: InstancePreempted) -> ReplanResult:
+        """Fold a spot interruption in: force-close the victim, re-place.
+
+        The victim resolves via `_preemption_target` (an explicit uid, or
+        thinning a sampled shock against the alive spot instances).  A
+        miss — no alive spot instance at the sampled slot, or a stale uid
+        that already terminated — is a no-op: an all-on-demand fleet
+        rides out every shock unscathed.  A hit force-closes the bin
+        through `LifecycleEngine.preempt` (no drain window: unlike a
+        planned migration there is no make-before-break overlap) and
+        re-places the displaced streams through the ordinary greedy-repair
+        + exact-pinned-subsolve path; the simulator charges their
+        replacement boot wait to degraded time.
+        """
+        uid = self._preemption_target(event)
+        if uid is None:
+            return self._noop_result()
+        if uid in self._spares:
+            # A held warm spare dies: nothing was placed on it, so the
+            # fleet plan stands — only the ledger and spare pool change.
+            del self._spares[uid]
+            self.lifecycle.preempt(uid, self.now)
+            return self._noop_result()
+        victim = next(b for b in self._bins if b.uid == uid)
+        displaced_names = set(victim.members)
+        self.lifecycle.preempt(uid, self.now)
+        self._bins = [b for b in self._bins if b.uid != uid]
+        self._ledger_live.discard(uid)
+        # Survivors keep their order; the displaced move to the tail —
+        # the layout `_replan` expects (and `_formulate_incremental`
+        # derives tensors for via a pure permutation, no re-stack).
+        survivors = [s for s in self._streams if s.name not in displaced_names]
+        displaced = [s for s in self._streams if s.name in displaced_names]
+        new_streams = survivors + displaced
+        problem = self._formulate_incremental(new_streams)
+        return self._replan(
+            problem, new_streams, len(survivors), displaced_names
+        )
+
+    def _preemption_target(self, event: InstancePreempted) -> int | None:
+        """Resolve which live instance a preemption event kills, if any.
+
+        Explicit ``uid >= 0``: that instance, provided it is still alive
+        (a stale interruption for a bin the fleet already closed is a
+        no-op — replays race real clouds the same way).  Sampled
+        (``uid = -1``): order the alive spot instances (open bins and
+        warm spares with ``hazard > 0``) by uid and take slot
+        ``int(draw * pool)``; a slot beyond the spot fleet misses, and
+        with a ``hazard_ref`` the slotted victim is accepted with
+        probability ``hazard / hazard_ref`` via the draw's fractional
+        slot position — per-type thinning, so each spot type dies at its
+        own catalog hazard (see `streams.InstancePreempted`).
+        """
+        alive = {b.uid: b.bin_type for b in self._bins}
+        alive.update(self._spares)
+        if event.uid >= 0:
+            if event.uid in alive and (
+                event.uid not in self.lifecycle
+                or self.lifecycle.record(event.uid).terminated_at is None
+            ):
+                return event.uid
+            return None
+        spots = sorted(u for u, bt in alive.items() if bt.hazard > 0.0)
+        scaled = event.draw * event.pool
+        slot = int(scaled)
+        if slot >= len(spots):
+            return None
+        uid = spots[slot]
+        if event.hazard_ref > 0.0:
+            frac = scaled - slot  # uniform [0,1), independent of the slot
+            if frac * event.hazard_ref >= alive[uid].hazard:
+                return None
+        return uid
+
+    def _noop_result(self) -> ReplanResult:
+        assert self._plan is not None and self._problem is not None
+        lb = self._lower_bound(self._problem)
+        return ReplanResult(
+            plan=self._plan,
+            mode="noop",
+            displaced=(),
+            migrated=(),
+            lower_bound=lb,
+            gap=_gap(self._plan.hourly_cost, lb),
+            nodes=0,
+        )
+
     def _reprice(self, by_name: dict[str, BinType]) -> None:
         """Adopt a re-priced catalog into this controller's live state:
         bin states point at the new `BinType`s, the cached problem is
@@ -829,9 +985,13 @@ class FleetController:
         for b in self._bins:
             b.bin_type = by_name[b.bin_type.name]
         for rec in self.lifecycle.records():
-            if rec.terminated_at is None and rec.instance_type in by_name:
+            # DRAINING records (terminated_at scheduled past `now`) still
+            # bill their remaining drain span — re-price them too.
+            if (
+                rec.terminated_at is None or rec.terminated_at > self.now
+            ) and rec.instance_type in by_name:
                 self.lifecycle.reprice(
-                    rec.uid, self.now, by_name[rec.instance_type].cost
+                    rec.uid, self.now, by_name[rec.instance_type].billed_rent
                 )
         self._spares = {
             uid: by_name.get(bt.name, bt) for uid, bt in self._spares.items()

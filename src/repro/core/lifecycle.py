@@ -7,12 +7,16 @@ the cost side:
 * `BillingModel` — the cloud contract: boot latency (an instance is billed
   from launch but serves nothing until it finishes PROVISIONING), billing
   quantum (hourly vs per-second vs continuous), and a minimum billed
-  duration.
+  duration.  Contracts resolve *per instance type* through
+  `LifecycleEngine.billing_for` — a ``billing_by_type`` map layered over
+  the global default (spot and on-demand bill differently); global-only
+  configurations are bit-identical to the single-model engine.
 * `InstanceRecord` + `LifecycleEngine` — a per-instance state machine
 
       PROVISIONING -> RUNNING -> DRAINING -> TERMINATED
 
-  driven by `provision` / `decommission` calls at monotone timestamps, and
+  driven by `provision` / `decommission` / `preempt` (forced spot
+  interruption: no drain window) calls at monotone timestamps, and
   an accountant that integrates *billed* cost over the timeline: every
   instance is billed from its provisioning instant to its termination
   instant, rounded up to the quantum, minimum-duration floored — including
@@ -127,7 +131,10 @@ class InstanceRecord:
     ``running_at = provisioned_at + boot``; ``draining_at`` /
     ``terminated_at`` stay None while the instance serves.  A termination
     scheduled in the future (a drain window) shows as DRAINING until it
-    elapses.
+    elapses.  ``preempted_at`` marks a *forced* termination (the cloud
+    reclaimed a spot instance): set by `LifecycleEngine.preempt`, always
+    equal to ``terminated_at`` when set — there is no drain window, the
+    instance is gone the moment the interruption lands.
     """
 
     uid: int
@@ -137,6 +144,7 @@ class InstanceRecord:
     running_at: float
     draining_at: float | None = None
     terminated_at: float | None = None
+    preempted_at: float | None = None
     #: (since, $/hr) rate segments, first entry at provisioned_at.  Price
     #: changes append here (`LifecycleEngine.reprice`) so billing stays
     #: causal: hours already billed keep the rate they were billed at.
@@ -175,11 +183,28 @@ class LifecycleEngine:
     Owned by a `FleetController`; also usable standalone (the benchmarks
     and property tests drive it directly).  All mutation timestamps must be
     non-decreasing per instance; billing queries are pure.
+
+    ``billing`` is the global default contract; ``billing_by_type`` maps
+    instance-type names to per-type `BillingModel`s layered over it (real
+    clouds bill spot and on-demand differently — boot, quantum, and
+    minimum duration all resolve through `billing_for`).  A global-only
+    configuration (``billing_by_type`` empty or None) is bit-identical to
+    the pre-map engine.
     """
 
-    def __init__(self, billing: BillingModel | None = None) -> None:
+    def __init__(
+        self,
+        billing: BillingModel | None = None,
+        *,
+        billing_by_type: dict[str, BillingModel] | None = None,
+    ) -> None:
         self.billing = billing if billing is not None else BillingModel()
+        self.billing_by_type = dict(billing_by_type or {})
         self._records: dict[int, InstanceRecord] = {}
+
+    def billing_for(self, instance_type: str) -> BillingModel:
+        """The billing contract for one instance type (map over default)."""
+        return self.billing_by_type.get(instance_type, self.billing)
 
     # ------------------------------------------------------------ mutation
 
@@ -194,7 +219,7 @@ class LifecycleEngine:
             instance_type=instance_type,
             hourly_cost=hourly_cost,
             provisioned_at=at,
-            running_at=at + self.billing.boot_hours,
+            running_at=at + self.billing_for(instance_type).boot_hours,
             rate_history=[(at, hourly_cost)],
         )
         self._records[uid] = rec
@@ -222,6 +247,14 @@ class LifecycleEngine:
         The drain window models migration hand-off — the source instance
         keeps serving its streams (and keeps being billed) until the
         destination finishes booting; during it the fleet double-bills.
+
+        A ``drain_until`` in the past (``< at``) is **clamped to ``at``**:
+        the deadline already elapsed, so the retirement is an instant kill
+        at ``at`` — never a termination scheduled before the decommission
+        instant, which would rewrite billed history.  This clamp is
+        contractual (regression-tested): `FleetController._sync_lifecycle`
+        computes drain deadlines from *previously recorded* boot completions
+        and relies on stale ones collapsing to "terminate now".
         """
         rec = self._records[uid]
         if rec.terminated_at is not None:
@@ -231,14 +264,47 @@ class LifecycleEngine:
         rec.terminated_at = end
         return rec
 
+    def preempt(self, uid: int, at: float) -> InstanceRecord:
+        """Forcibly terminate an instance at ``at`` (a spot interruption).
+
+        No drain window — the cloud reclaims the capacity immediately, so
+        any streams it served are down until a replacement boots (that
+        boot wait is charged to degraded time by the simulator, unlike a
+        planned migration's make-before-break hand-off).  Billing closes
+        exactly as a `decommission` at the same instant would: the cloud's
+        quantum rules still round the final partial quantum up.
+        """
+        rec = self._records[uid]
+        if rec.terminated_at is not None:
+            raise ValueError(f"instance uid {uid} already terminated")
+        rec.draining_at = at
+        rec.terminated_at = at
+        rec.preempted_at = at
+        return rec
+
     def reprice(self, uid: int, at: float, hourly_cost: float) -> None:
         """Change an instance's rent going forward from ``at``.
 
         Hours already billed keep the rate they were billed at (a new
         segment is appended; history is never restated) — only the
         portion of the billed span past ``at`` prices at the new rate.
+        Once a termination is on record, re-pricing is valid only inside
+        the drain window ``[draining_at, terminated_at)`` — a DRAINING
+        instance still billing future hours may re-price; ``at`` at or
+        past ``terminated_at`` (the segment could never bill) or before
+        ``draining_at`` (an out-of-order call restating hours billed
+        before the retirement) raises, mirroring `decommission`'s
+        already-terminated guard.
         """
         rec = self._records[uid]
+        if rec.terminated_at is not None and (
+            at >= rec.terminated_at
+            or (rec.draining_at is not None and at < rec.draining_at)
+        ):
+            raise ValueError(
+                f"instance uid {uid} terminated at t={rec.terminated_at}: "
+                f"cannot re-price at t={at}"
+            )
         since = max(at, rec.rate_history[-1][0])
         rec.rate_history.append((since, hourly_cost))
         rec.hourly_cost = hourly_cost
@@ -283,7 +349,7 @@ class LifecycleEngine:
         if len(hist) == 1:
             return hist[0][1] * hours
         end = start + hours
-        q = self.billing.quantum_hours
+        q = self.billing_for(rec.instance_type).quantum_hours
         if q > 0.0:
 
             def rate_at(t: float) -> float:
@@ -316,7 +382,8 @@ class LifecycleEngine:
         rec = self._records[uid]
         if until <= rec.provisioned_at:
             return 0.0
-        return self._priced(rec, self.billing.billed_hours(rec.lifetime_hours(until)))
+        billing = self.billing_for(rec.instance_type)
+        return self._priced(rec, billing.billed_hours(rec.lifetime_hours(until)))
 
     def billed_cost(self, until: float) -> float:
         """Total dollars billed across the fleet as of time ``until``."""
@@ -336,6 +403,7 @@ class LifecycleEngine:
         keeping it through ``until`` — zero while ``until`` stays inside
         the already-paid quantum."""
         rec = self._records[uid]
-        keep = self.billing.billed_hours(max(0.0, until - rec.provisioned_at))
-        cut = self.billing.billed_hours(max(0.0, at - rec.provisioned_at))
+        billing = self.billing_for(rec.instance_type)
+        keep = billing.billed_hours(max(0.0, until - rec.provisioned_at))
+        cut = billing.billed_hours(max(0.0, at - rec.provisioned_at))
         return max(0.0, self._priced(rec, keep) - self._priced(rec, cut))

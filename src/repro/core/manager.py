@@ -146,11 +146,16 @@ class ResourceManager:
             self._controllers[strategy.name] = ctrl
         else:
             # Reconfigure in place — replacing would silently drop the
-            # live fleet state a prior allocate() established.
+            # live fleet state a prior allocate() established.  Billing
+            # swaps (global model and/or per-type map) go through
+            # set_billing together so the fresh ledger sees both.
+            if "billing" in kwargs or "billing_by_type" in kwargs:
+                ctrl.set_billing(
+                    kwargs.pop("billing", ctrl.billing),
+                    by_type=kwargs.pop("billing_by_type", None),
+                )
             for key, value in kwargs.items():
-                if key == "billing":
-                    ctrl.set_billing(value)
-                elif key in ("gap_threshold", "sub_max_nodes", "policy"):
+                if key in ("gap_threshold", "sub_max_nodes", "policy"):
                     setattr(ctrl, key, value)
                 else:
                     raise TypeError(f"unknown controller option {key!r}")

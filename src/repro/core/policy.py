@@ -71,9 +71,73 @@ __all__ = [
     "ActingAutoscaler",
     "CompositePolicy",
     "cheapest_provisioning_path",
+    "spot_effective_cost",
+    "risk_adjusted_catalog",
 ]
 
 _EPS = 1e-9
+
+
+def spot_effective_cost(
+    bin_type,
+    billing=None,
+    *,
+    billing_by_type=None,
+    degraded_penalty: float = 0.0,
+) -> float:
+    """Risk-adjusted hourly cost of a (possibly spot) instance type.
+
+        effective = rent + hazard x (re-placement penalty per preemption)
+
+    where the per-preemption penalty is the replacement's double-billed
+    boot (``boot_hours x rent`` — when the cloud reclaims a spot bin, its
+    streams re-place onto a fresh instance that bills while it boots, and
+    under quantized billing the killed bin's in-progress quantum is paid
+    but unused, conservatively folded into the same boot term) plus
+    ``boot_hours x degraded_penalty`` — the operator's dollar price on one
+    stream-hour of post-preemption degradation, scaled by the boot the
+    displaced streams wait out.  On-demand types (hazard 0) pass through
+    unchanged.  Billing contracts resolve per type, mirroring
+    `core.lifecycle.LifecycleEngine.billing_for`.
+    """
+    if bin_type.hazard <= 0.0:
+        return bin_type.cost
+    billing = (billing_by_type or {}).get(bin_type.name, billing)
+    boot = billing.boot_hours if billing is not None else 0.0
+    penalty = boot * (bin_type.billed_rent + degraded_penalty)
+    return bin_type.billed_rent + bin_type.hazard * penalty
+
+
+def risk_adjusted_catalog(
+    catalog,
+    billing=None,
+    *,
+    billing_by_type=None,
+    degraded_penalty: float = 0.0,
+):
+    """Price a catalog's spot types at their risk-adjusted effective cost.
+
+    Returns a catalog whose spot entries carry ``cost = effective`` (what
+    the packer, the warm re-plan, and the consolidation certification all
+    minimize — eviction risk now weighs against rent everywhere decisions
+    are made) while ``rent`` keeps the true discounted $/hr (what the
+    lifecycle ledger actually bills — see `BinType.billed_rent`).
+    On-demand entries are returned untouched, so a hazard-free catalog is
+    bit-identical under this transform.
+    """
+    out = []
+    for bt in catalog:
+        if bt.hazard <= 0.0:
+            out.append(bt)
+            continue
+        eff = spot_effective_cost(
+            bt,
+            billing,
+            billing_by_type=billing_by_type,
+            degraded_penalty=degraded_penalty,
+        )
+        out.append(dataclasses.replace(bt, cost=eff, rent=bt.billed_rent))
+    return tuple(out)
 
 
 class ReplanPolicy:
@@ -398,9 +462,17 @@ class ActingAutoscaler(LookaheadAutoscaler):
     the billed overhead per event is at most ``max_spares`` times the
     cheapest-host rent — the ≤5% overhead envelope the lifecycle
     benchmark gates.
+
+    Spares are held to *absorb* boot waits, so an unreliable spare is
+    worse than none: when the packer's open rule lands on a spot type
+    whose interruption hazard exceeds ``max_spare_hazard`` (default 0.0 —
+    only preemption-proof spares), the autoscaler holds the cheapest
+    sufficiently-reliable host type instead; with no such type it holds
+    nothing.  Hazard-free catalogs behave exactly as before.
     """
 
     max_spares: int = 2
+    max_spare_hazard: float = 0.0
 
     def on_event(self, mech, event, result):
         fc = self._resolve(mech, event)
@@ -461,6 +533,19 @@ class ActingAutoscaler(LookaheadAutoscaler):
                 continue
             try:
                 bt = mech.open_host_bin(join)
+                if bt.hazard > self.max_spare_hazard:
+                    # Warm-spot is unreliable: hold the cheapest host the
+                    # cloud cannot reclaim out from under the forecast.
+                    bt = next(
+                        (
+                            c
+                            for c in mech.host_candidates(join)
+                            if c.hazard <= self.max_spare_hazard
+                        ),
+                        None,
+                    )
+                    if bt is None:
+                        continue  # nothing reliable enough: hold nothing
             except InfeasibleError:
                 continue
             eff = np.asarray(bt.capacity, dtype=np.float64) * cap

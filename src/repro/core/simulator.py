@@ -155,6 +155,7 @@ def simulate_churn(
     target: float | None = None,
     policy=None,
     billing=None,
+    billing_by_type=None,
     horizon: float | None = None,
 ) -> dict:
     """Replay a churn trace through the manager's live controller as a
@@ -183,9 +184,19 @@ def simulate_churn(
     (migrating streams keep serving on their draining source, so only
     first placements degrade — the metric warm pre-provisioning buys
     down).  ``policy`` installs a re-planning policy for the replay
-    (e.g. ``ConsolidationPolicy(3)``).
+    (e.g. ``ConsolidationPolicy(3)``).  ``billing_by_type`` lays
+    per-instance-type contracts over the global model (spot vs on-demand
+    — see `LifecycleEngine.billing_for`).
+
+    Spot interruptions (`streams.InstancePreempted`) are first-class
+    fleet events: a preempted bin's streams are *down* until their
+    replacement serves (no make-before-break hand-off), so their
+    replacement boot wait is charged to ``degraded_stream_seconds`` —
+    and broken out separately as
+    ``preemption_degraded_stream_seconds``, next to the ``preemptions``
+    count off the ledger's ``preempted_at`` markers.
     """
-    from .streams import TimedTrace
+    from .streams import InstancePreempted, TimedTrace
     from .strategies import ST3
 
     trace = TimedTrace.coerce(events)
@@ -199,12 +210,18 @@ def simulate_churn(
         kwargs["policy"] = policy
     if billing is not None:
         kwargs["billing"] = billing
+    if billing_by_type is not None:
+        kwargs["billing_by_type"] = billing_by_type
     ctrl = manager.controller(strategy, **kwargs)
     results = [ctrl.reset(initial_streams, at=0.0)]
     uid_steps = [ctrl.instance_uids]
+    preempted_steps: list[tuple[str, ...]] = [()]
     for ev in trace:
         results.append(ctrl.apply(ev))
         uid_steps.append(ctrl.instance_uids)
+        preempted_steps.append(
+            results[-1].displaced if isinstance(ev, InstancePreempted) else ()
+        )
     ledger = ctrl.lifecycle
     times = [r.at for r in results]
     ends = times[1:] + [max(horizon, times[-1])]
@@ -212,9 +229,12 @@ def simulate_churn(
     timeline = []
     misses = 0
     degraded_hours = 0.0
+    preempt_degraded_hours = 0.0
+    rents: list[float] = []  # per step: true billed $/hr of the open fleet
     served: set = set()  # stream names that have been placed before
-    for step, (r, uids, t0, t1) in enumerate(
-        zip(results, uid_steps, times, ends)
+    degraded_until: dict = {}  # stream -> end of its already-charged wait
+    for step, (r, uids, hit, t0, t1) in enumerate(
+        zip(results, uid_steps, preempted_steps, times, ends)
     ):
         sim = simulate_plan(r.plan, profiles, target=target)
         if not sim["meets_target"]:
@@ -224,21 +244,57 @@ def simulate_churn(
         # eliminate.  Streams that merely migrate keep serving on their
         # draining source until the destination boots (make-before-break;
         # the ledger's drain window bills that overlap), so they do not
-        # degrade.
+        # degrade.  Streams a preemption displaced are the exception:
+        # their source instance is already gone, so they wait out their
+        # replacement's remaining boot exactly like a fresh placement.
+        # A wait window already charged is never charged twice: when a
+        # still-booting replacement is itself preempted, only the extra
+        # wait past the previously charged window counts
+        # (``degraded_until`` clamps the start of each new charge).
         step_boot_wait = 0.0
+        step_preempt_wait = 0.0
+        hit_names = set(hit)
         for p in r.plan.placements:
-            if p.stream.name in served:
-                continue
-            rec = ledger.record(uids[p.instance_index])
-            step_boot_wait += max(0.0, rec.running_at - t0)
+            name = p.stream.name
+            down_until = degraded_until.get(name, 0.0)
+            if name in hit_names or name not in served or down_until > t0:
+                # Fresh placements and preemption victims wait out their
+                # instance's boot; a stream *still* waiting one out
+                # (``down_until > t0``) that a re-plan moved to a
+                # later-booting instance waits the extension too — for an
+                # unmoved stream the instance's running_at equals the
+                # charged window's end, so the extension is zero.  Waits
+                # are charged up front at placement time and never
+                # refunded (a later move onto running capacity keeps the
+                # original charge): deliberately conservative, and the
+                # per-step rows stay comparable across PRs.
+                rec = ledger.record(uids[p.instance_index])
+                since = max(t0, down_until)
+                wait = max(0.0, rec.running_at - since)
+                if wait > 0.0:
+                    degraded_until[name] = rec.running_at
+                if name in hit_names:
+                    step_preempt_wait += wait
+                else:
+                    step_boot_wait += wait
         served.update(p.stream.name for p in r.plan.placements)
+        step_boot_wait += step_preempt_wait
         degraded_hours += step_boot_wait
+        preempt_degraded_hours += step_preempt_wait
+        rents.append(
+            sum(b.bin_type.billed_rent for b in r.plan.solution.bins)
+        )
         timeline.append(
             {
                 "step": step,
                 "at": t0,
                 "mode": r.mode,
+                # `cost` is the plan's *decision* cost (the solver
+                # objective — hazard-inflated under a risk-adjusted
+                # catalog); `rent_cost` is the open fleet's true billed
+                # $/hr.  They coincide on un-adjusted catalogs.
                 "cost": r.plan.hourly_cost,
+                "rent_cost": rents[-1],
                 "billed": ledger.billed_cost(t0),
                 "gap": r.gap,
                 "lower_bound": r.lower_bound,
@@ -246,6 +302,7 @@ def simulate_churn(
                 "streams": len(r.plan.placements),
                 "migrations": len(r.migrated),
                 "boot_wait_stream_hours": step_boot_wait,
+                "preempted_streams": list(hit),
                 "performance": sim["overall_performance"],
                 "fragmentation": sim["fragmentation"]["overall"],
                 "actions": list(r.actions),
@@ -254,8 +311,14 @@ def simulate_churn(
         )
     costs = [t["cost"] for t in timeline]
     frags = [t["fragmentation"] for t in timeline]
+    # The snapshot integral is *dollars*: it prices open bins at their
+    # true billed rent (`BinType.billed_rent`), not the plan's decision
+    # cost — under a risk-adjusted catalog the two differ, and only the
+    # rent integral keeps the invariant billed_cost >= integral.  With
+    # un-adjusted catalogs rent == cost, so this is bit-identical to the
+    # historical cost integral.
     integral = float(
-        sum(c * (t1 - t0) for c, t0, t1 in zip(costs, times, ends))
+        sum(c * (t1 - t0) for c, t0, t1 in zip(rents, times, ends))
     )
     billed = ledger.billed_cost(max(horizon, times[-1]))
     return {
@@ -279,6 +342,11 @@ def simulate_churn(
         "snapshot_cost_integral": integral,
         "billed_overhead": (billed / integral - 1.0) if integral > 0 else 0.0,
         "degraded_stream_seconds": degraded_hours * 3600.0,
+        # ---- spot / preemption (zero on hazard-free traces) ----
+        "preemptions": sum(
+            1 for rec in ledger.records() if rec.preempted_at is not None
+        ),
+        "preemption_degraded_stream_seconds": preempt_degraded_hours * 3600.0,
         "instance_records": [
             {
                 "uid": rec.uid,
@@ -287,6 +355,7 @@ def simulate_churn(
                 "provisioned_at": rec.provisioned_at,
                 "running_at": rec.running_at,
                 "terminated_at": rec.terminated_at,
+                "preempted_at": rec.preempted_at,
                 "billed": ledger.billed_instance(
                     rec.uid, max(horizon, times[-1])
                 ),

@@ -3,9 +3,11 @@
 Besides the static fleet model (`StreamSpec`), this module defines the
 *fleet event* vocabulary consumed by `core.controller.FleetController`:
 cameras join (`StreamAdded`), drop (`StreamRemoved`), renegotiate frame
-rates (`StreamRateChanged`), and the cloud re-prices instance types
-(`PriceChanged`).  `apply_events` is the pure fleet-transition function
-(price events leave the stream list untouched), and `fleet_key` is the
+rates (`StreamRateChanged`), the cloud re-prices instance types
+(`PriceChanged`), and the cloud reclaims spot instances
+(`InstancePreempted` — forced termination, seeded-sampled or by uid).
+`apply_events` is the pure fleet-transition function (instance-side
+events leave the stream list untouched), and `fleet_key` is the
 canonical order-insensitive fingerprint used to detect no-op transitions
 and key re-plan caches.
 
@@ -38,6 +40,7 @@ __all__ = [
     "StreamRemoved",
     "StreamRateChanged",
     "PriceChanged",
+    "InstancePreempted",
     "apply_events",
     "fleet_key",
     "StreamForecast",
@@ -154,6 +157,53 @@ class PriceChanged(FleetEvent):
             raise ValueError(f"{self.instance_type}: negative cost")
 
 
+@dataclasses.dataclass(frozen=True)
+class InstancePreempted(FleetEvent):
+    """The cloud reclaimed a spot instance: forced termination, no drain.
+
+    ``uid`` names the lifecycle ledger record of the reclaimed instance;
+    ``uid = -1`` means the victim is *sampled* at replay time: the
+    controller orders its alive spot instances (``BinType.hazard > 0``,
+    held spares included) by uid and takes the one at slot
+    ``int(draw * pool)`` — no alive spot instance at that slot means the
+    shock misses (an all-on-demand fleet is never preempted).  This is
+    Poisson thinning: a trace generated with shock rate
+    ``hazard_ref * pool`` delivers each spot instance at most a
+    ``hazard_ref``/hr interruption rate (exact while the fleet holds at
+    most ``pool`` spot instances), while the pre-generated event sequence
+    stays identical across the policies compared on it.
+
+    ``hazard_ref`` > 0 additionally thins *per type*: the slotted victim
+    is accepted only when the draw's fractional slot position (uniform,
+    independent of the slot) falls below ``victim.hazard / hazard_ref``,
+    so a type with hazard λ ≤ ``hazard_ref`` is interrupted at exactly
+    λ/hr — scarce high-hazard shapes die more often than plentiful
+    low-hazard ones under the *same* shock sequence.  ``hazard_ref = 0``
+    (the default) accepts any slotted spot instance regardless of its
+    type hazard.
+    """
+
+    uid: int = -1
+    draw: float = dataclasses.field(default=0.0, kw_only=True)
+    pool: int = dataclasses.field(default=1, kw_only=True)
+    hazard_ref: float = dataclasses.field(default=0.0, kw_only=True)
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.uid < -1:
+            raise ValueError(
+                f"preemption uid must be >= 0 (or -1 = sampled), got {self.uid}"
+            )
+        if not 0.0 <= self.draw < 1.0:
+            raise ValueError(f"preemption draw must be in [0, 1), got {self.draw}")
+        if self.pool < 1:
+            raise ValueError(f"preemption pool must be >= 1, got {self.pool}")
+        if self.hazard_ref < 0 or self.hazard_ref != self.hazard_ref:
+            raise ValueError(
+                f"preemption hazard_ref must be >= 0, got {self.hazard_ref}"
+            )
+
+
 def apply_events(
     streams: Sequence[StreamSpec], events: Iterable[FleetEvent]
 ) -> tuple[StreamSpec, ...]:
@@ -180,8 +230,8 @@ def apply_events(
                 raise KeyError(f"no stream named {ev.name!r}")
             fleet = [s for s in fleet if s.name != ev.name]
             fleet.append(dataclasses.replace(hit[0], desired_fps=ev.desired_fps))
-        elif isinstance(ev, PriceChanged):
-            pass  # catalog-side event; the controller re-prices the catalog
+        elif isinstance(ev, (PriceChanged, InstancePreempted)):
+            pass  # instance-side events; the controller folds them in
         else:
             raise TypeError(f"unknown fleet event {ev!r}")
     return tuple(fleet)
@@ -299,6 +349,8 @@ def synthetic_timed_trace(
     rerate_fps: "Callable[[StreamSpec], Sequence[float]] | None" = None,
     burst: int = 1,
     tail_hours: float | None = None,
+    preemption_hazard: float = 0.0,
+    hazard_pool: int = 64,
 ) -> TimedTrace:
     """Generate a seeded timed churn trace against a pure fleet replay.
 
@@ -313,6 +365,20 @@ def synthetic_timed_trace(
     (default: keep its current rate — a no-op event).  The trace is
     pre-generated against a replayed fleet copy so every policy compared
     on it sees the identical sequence.
+
+    ``preemption_hazard`` overlays a seeded spot-interruption process:
+    `InstancePreempted` shocks arrive as a Poisson stream at rate
+    ``preemption_hazard * hazard_pool`` over the trace span, each
+    carrying a uniform ``draw`` the replaying controller thins against
+    its alive spot instances (see `InstancePreempted`).
+    ``preemption_hazard`` is the *reference* (maximum) per-instance
+    interruption rate: a spot type with ``hazard = λ ≤ preemption_hazard``
+    is interrupted at exactly λ/hr regardless of how many spot instances
+    each compared policy actually holds (exact up to ``hazard_pool`` of
+    them; types with λ above the reference clamp to it).  The shocks are
+    drawn *after* the churn sequence from the same rng, so
+    ``preemption_hazard=0`` leaves the churn draws — and the trace —
+    bit-identical to the pre-spot generator.
     """
     fleet = list(streams)
     events: list[FleetEvent] = []
@@ -350,6 +416,26 @@ def synthetic_timed_trace(
     horizon = t + (
         tail_hours if tail_hours is not None else 2.0 * mean_gap_hours
     )
+    if preemption_hazard > 0.0:
+        if hazard_pool < 1:
+            raise ValueError(f"hazard_pool must be >= 1, got {hazard_pool}")
+        shocks: list[FleetEvent] = []
+        rate = preemption_hazard * hazard_pool
+        ts = 0.0
+        while True:
+            ts += float(rng.exponential(1.0 / rate))
+            if ts >= horizon:
+                break
+            shocks.append(
+                InstancePreempted(
+                    at=ts,
+                    draw=float(rng.rand()),
+                    pool=hazard_pool,
+                    hazard_ref=preemption_hazard,
+                )
+            )
+        # Stable merge: churn events keep their relative order at ties.
+        events = sorted(events + shocks, key=lambda ev: ev.at)
     return TimedTrace(events=tuple(events), horizon=horizon)
 
 

@@ -6,6 +6,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# Heavy JAX compile/serving tests: excluded from the quick core gate
+# via `pytest -m "not slow"` (see pytest.ini).
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(42)
 
 

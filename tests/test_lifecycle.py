@@ -135,6 +135,87 @@ def test_lifecycle_billing_includes_drain_window():
     assert eng.billed_instance(1, 0.25) == pytest.approx(1.675)
 
 
+def test_reprice_terminated_instance_raises():
+    """Bugfix regression: re-pricing a terminated uid silently appended a
+    rate segment past ``terminated_at`` — now it raises, mirroring
+    `decommission`'s already-terminated guard."""
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    eng.decommission(1, 1.0)
+    billed_before = eng.billed_instance(1, 10.0)
+    with pytest.raises(ValueError):
+        eng.reprice(1, 2.0, 5.0)
+    # An out-of-order re-price *before* the retirement would restate
+    # hours billed prior to the decommission — equally rejected.
+    with pytest.raises(ValueError):
+        eng.reprice(1, 0.5, 99.0)
+    # The failed re-prices appended nothing: billing is unchanged.
+    assert eng.billed_instance(1, 10.0) == billed_before
+    assert eng.record(1).rate_history == [(0.0, 1.0)]
+    # A DRAINING instance still billing future hours may re-price ...
+    eng.provision(2, "c4.2xlarge", 1.0, at=0.0)
+    eng.decommission(2, 1.0, drain_until=3.0)
+    eng.reprice(2, 2.0, 2.0)
+    assert eng.record(2).hourly_cost == 2.0
+    # ... but not at/after its scheduled termination instant.
+    with pytest.raises(ValueError):
+        eng.reprice(2, 3.0, 4.0)
+
+
+def test_price_event_repriced_draining_records_too():
+    """A price move landing inside a drain window re-prices the draining
+    record's remaining span (it still bills until ``terminated_at``)."""
+    mgr = _manager()
+    ctrl = mgr.controller(billing=BillingModel(quantum_hours=0.0))
+    ctrl.reset(_streams(6), at=0.0)
+    uid = ctrl.instance_uids[0]
+    itype = ctrl.lifecycle.record(uid).instance_type
+    ctrl.now = 1.0
+    ctrl.lifecycle.decommission(uid, 1.0, drain_until=2.0)
+    from repro.core.streams import PriceChanged
+
+    ctrl.apply(PriceChanged(itype, 9.9, at=1.5))
+    rec = ctrl.lifecycle.record(uid)
+    assert rec.hourly_cost == 9.9  # the drain span bills the new rent
+    assert rec.rate_history[-1] == (1.5, 9.9)
+
+
+def test_decommission_clamps_stale_drain_deadline():
+    """Documented-contract regression: a ``drain_until`` in the past is
+    clamped to the decommission instant (instant kill), never a
+    termination scheduled before ``at`` — `_sync_lifecycle`'s drain math
+    relies on exactly this collapse for stale boot deadlines."""
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    rec = eng.decommission(1, 2.0, drain_until=0.5)  # stale deadline
+    assert rec.draining_at == 2.0
+    assert rec.terminated_at == 2.0  # clamped to `at`, not 0.5
+    assert eng.state(1, 2.0) is InstanceState.TERMINATED
+    # Billing covers the full life up to the clamped termination.
+    assert eng.billed_instance(1, 10.0) == pytest.approx(2.0)
+
+
+def test_alloc_uid_prefers_booted_spare_over_provisioning():
+    """Bugfix regression: with two same-type spares at different boot
+    stages, a re-plan must consume the fully-booted one — dict-insertion
+    order could hand out a still-PROVISIONING spare while a RUNNING one
+    of the same type idled, breaking the "join lands warm" promise."""
+    mgr = _manager()
+    ctrl = mgr.controller(billing=BillingModel(boot_hours=0.2, quantum_hours=1.0))
+    ctrl.reset(_streams(4), at=0.0)
+    bt = ctrl.cheapest_host_bin(StreamSpec("x", ZF, 5.0))
+    (warm,) = ctrl.pre_provision(bt)  # provisioned at 0.0, boots at 0.2
+    ctrl.now = 0.5
+    (cold,) = ctrl.pre_provision(bt)  # provisioned at 0.5, boots at 0.7
+    # Adversarial pool order: the still-booting spare listed first.
+    ctrl._spares = {cold: ctrl._spares[cold], warm: ctrl._spares[warm]}
+    assert ctrl.lifecycle.state(cold, 0.5).value == "provisioning"
+    assert ctrl.lifecycle.state(warm, 0.5).value == "running"
+    assert ctrl._alloc_uid(bt) == warm  # earliest running_at wins
+    assert ctrl._alloc_uid(bt) == cold  # then the booting one
+    assert not ctrl.spares
+
+
 def test_reprice_never_restates_billed_history():
     """A price change applies forward only: the hours already billed keep
     the rate they were billed at."""

@@ -1,15 +1,21 @@
-"""Randomized billing-engine invariants (ISSUE-4 satellite properties).
+"""Randomized billing-engine invariants (ISSUE-4/5 satellite properties).
 
 Over random billing models (quantum, boot latency, minimum duration) and
 random instance lifetimes:
 
 * billed cost always dominates the instantaneous $/hr integral — the
-  quantum only ever rounds *up*;
+  quantum only ever rounds *up* — including under a per-instance-type
+  billing map, where the bound holds per type;
 * billed cost is monotone in the query time;
 * the termination saving is non-negative, never exceeds the kept-instance
   bill, and is exactly zero while the horizon stays inside the already
   paid quantum (the decision-flipping fact billing-aware consolidation is
-  built on).
+  built on);
+* `preempt` bills exactly like `decommission` at the same instant (the
+  cloud's quantum rules close both the same way);
+* a global-only configuration (empty or irrelevant ``billing_by_type``)
+  is bit-identical to the plain single-model engine — the PR-4 replay
+  contract.
 """
 import pytest
 
@@ -17,6 +23,13 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lifecycle import BillingModel, LifecycleEngine
+
+_MODELS = st.builds(
+    BillingModel,
+    boot_hours=st.floats(0.0, 0.2),
+    quantum_hours=st.sampled_from([0.0, 1.0 / 3600.0, 0.25, 1.0]),
+    min_billed_hours=st.sampled_from([0.0, 0.5]),
+)
 
 
 @settings(max_examples=60, deadline=None)
@@ -47,6 +60,105 @@ def test_billed_cost_dominates_instantaneous_integral(
     assert billed >= eng.instantaneous_integral(until) - 1e-9
     # Monotone in the query time.
     assert billed <= eng.billed_cost(until + 1.0) + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    default=_MODELS,
+    by_type=st.dictionaries(
+        st.sampled_from(["a", "b", "c"]), _MODELS, max_size=3
+    ),
+    spans=st.lists(
+        st.tuples(
+            st.sampled_from(["a", "b", "c", "d"]),
+            st.floats(0.0, 5.0),
+            st.floats(0.0, 5.0),
+        ),
+        min_size=1,
+        max_size=8,
+    ),
+    until=st.floats(0.0, 12.0),
+)
+def test_per_type_billing_map_dominates_integral(default, by_type, spans, until):
+    """Billed >= instantaneous integral per instance type, with each type
+    resolving its own contract through the billing_by_type map."""
+    eng = LifecycleEngine(default, billing_by_type=by_type)
+    for uid, (itype, start, dur) in enumerate(spans):
+        eng.provision(uid, itype, 1.0 + 0.1 * uid, at=start)
+        if dur > 0:
+            eng.decommission(uid, start + dur)
+    for uid, (itype, _, _) in enumerate(spans):
+        billed = eng.billed_instance(uid, until)
+        rec = eng.record(uid)
+        integral = rec.hourly_cost * rec.lifetime_hours(until)
+        assert billed >= integral - 1e-9
+        assert billed <= eng.billed_instance(uid, until + 1.0) + 1e-9
+    assert eng.billed_cost(until) >= eng.instantaneous_integral(until) - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    default=_MODELS,
+    spot_model=_MODELS,
+    start=st.floats(0.0, 2.0),
+    life=st.floats(0.0, 3.0),
+    until=st.floats(0.0, 8.0),
+)
+def test_preempt_bills_like_decommission_same_instant(
+    default, spot_model, start, life, until
+):
+    """A preemption closes billing exactly as a same-instant decommission
+    (no drain) would — under any global/per-type contract pair."""
+    by_type = {"spot": spot_model}
+    a = LifecycleEngine(default, billing_by_type=by_type)
+    b = LifecycleEngine(default, billing_by_type=by_type)
+    for eng in (a, b):
+        eng.provision(0, "spot", 1.3, at=start)
+        eng.provision(1, "ondemand", 0.7, at=start)
+    a.preempt(0, start + life)
+    b.decommission(0, start + life)
+    a.preempt(1, start + life)
+    b.decommission(1, start + life)
+    assert a.billed_cost(until) == b.billed_cost(until)
+    assert a.record(0).preempted_at == start + life
+    assert b.record(0).preempted_at is None
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    billing=_MODELS,
+    spans=st.lists(
+        st.tuples(st.floats(0.0, 5.0), st.floats(0.0, 5.0)),
+        min_size=1,
+        max_size=6,
+    ),
+    until=st.floats(0.0, 12.0),
+)
+def test_global_only_billing_map_bit_identical(billing, spans, until):
+    """An empty (or irrelevant-keyed) billing_by_type map replays the
+    single-model engine bit for bit — the PR-4 compatibility contract."""
+    plain = LifecycleEngine(billing)
+    empty = LifecycleEngine(billing, billing_by_type={})
+    irrelevant = LifecycleEngine(
+        billing, billing_by_type={"never-used": BillingModel(quantum_hours=9.0)}
+    )
+    for eng in (plain, empty, irrelevant):
+        for uid, (start, dur) in enumerate(spans):
+            eng.provision(uid, "t", 1.0 + 0.1 * uid, at=start)
+            if dur > 0:
+                eng.decommission(uid, start + dur)
+    assert plain.billed_cost(until) == empty.billed_cost(until)
+    assert plain.billed_cost(until) == irrelevant.billed_cost(until)
+    assert (
+        plain.instantaneous_integral(until)
+        == empty.instantaneous_integral(until)
+        == irrelevant.instantaneous_integral(until)
+    )
+    for uid in range(len(spans)):
+        assert plain.record(uid).running_at == empty.record(uid).running_at
+        assert (
+            plain.record(uid).running_at == irrelevant.record(uid).running_at
+        )
 
 
 @settings(max_examples=60, deadline=None)

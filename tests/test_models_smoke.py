@@ -17,6 +17,10 @@ from repro.models import transformer as tfm
 from repro.train import AdamWConfig
 from repro.train.train_loop import init_state, make_train_step
 
+# Heavy JAX compile/serving tests: excluded from the quick core gate
+# via `pytest -m "not slow"` (see pytest.ini).
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -15,6 +15,10 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, smoke_variant
 from repro.models import transformer as tfm
 
+# Heavy JAX compile/serving tests: excluded from the quick core gate
+# via `pytest -m "not slow"` (see pytest.ini).
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(7)
 
 # bf16 residual accumulation puts a floor on achievable agreement.

@@ -20,6 +20,10 @@ from repro.configs import get_config, smoke_variant
 from repro.models import transformer as tfm
 from repro.sharding import specs as sh
 
+# Heavy JAX compile/serving tests: excluded from the quick core gate
+# via `pytest -m "not slow"` (see pytest.ini).
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

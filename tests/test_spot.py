@@ -1,0 +1,594 @@
+"""Spot/preemptible instances: events, catalog, risk-aware policies.
+
+Deterministic coverage of the two-tier market (PR-5): the
+`InstancePreempted` event and its per-type thinning, `LifecycleEngine.
+preempt` (forced termination, billed like a same-instant decommission),
+the controller's force-close + re-place path, spot catalog variants,
+risk-adjusted effective costs (decision cost vs billed rent), per-type
+billing plumbing, preemption accounting in `simulate_churn`, and the
+acting autoscaler's hazard tolerance.  Randomized per-type billing
+invariants live in ``test_lifecycle_properties.py``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.binpack import BinType
+from repro.core.catalog import (
+    paper_ec2_catalog,
+    spot_variant,
+    with_spot_variants,
+)
+from repro.core.lifecycle import BillingModel, LifecycleEngine
+from repro.core.manager import ResourceManager
+from repro.core.policy import (
+    ActingAutoscaler,
+    PinningPolicy,
+    risk_adjusted_catalog,
+    spot_effective_cost,
+)
+from repro.core.profiler import paper_profile_table
+from repro.core.simulator import simulate_churn
+from repro.core.streams import (
+    AnalysisProgram,
+    InstancePreempted,
+    StreamAdded,
+    StreamForecast,
+    StreamSpec,
+    TimedTrace,
+    apply_events,
+    synthetic_timed_trace,
+)
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+KINDS = [(VGG, 0.25), (VGG, 0.2), (ZF, 0.5), (ZF, 2.0), (ZF, 5.0)]
+HOURLY = BillingModel(boot_hours=2.0 / 60.0, quantum_hours=1.0)
+CONTINUOUS_BOOT = BillingModel(boot_hours=2.0 / 60.0, quantum_hours=0.0)
+
+
+def _streams(n, prefix="s"):
+    return [
+        StreamSpec(f"{prefix}{i}", *KINDS[i % len(KINDS)]) for i in range(n)
+    ]
+
+
+def _manager(catalog=None, **kw):
+    kw.setdefault("max_nodes", 50_000)
+    return ResourceManager(
+        catalog if catalog is not None else paper_ec2_catalog(),
+        paper_profile_table(),
+        **kw,
+    )
+
+
+def _spot_catalog(**kw):
+    kw.setdefault("price_ratio", 0.35)
+    kw.setdefault("hazard", 0.2)
+    return with_spot_variants(paper_ec2_catalog(), **kw)
+
+
+# ------------------------------------------------------------------- events
+
+
+def test_instance_preempted_validation():
+    InstancePreempted(3, at=1.0)
+    InstancePreempted(at=0.5, draw=0.99, pool=64, hazard_ref=0.9)
+    with pytest.raises(ValueError):
+        InstancePreempted(draw=1.0)  # draw must be < 1
+    with pytest.raises(ValueError):
+        InstancePreempted(draw=-0.1)
+    with pytest.raises(ValueError):
+        InstancePreempted(pool=0)
+    with pytest.raises(ValueError):
+        InstancePreempted(hazard_ref=-1.0)
+    with pytest.raises(ValueError):
+        InstancePreempted(at=-1.0)
+    with pytest.raises(ValueError):
+        InstancePreempted(-2)  # only -1 means "sampled"
+
+
+def test_preemption_leaves_stream_list_untouched():
+    fleet = tuple(_streams(3))
+    assert apply_events(fleet, [InstancePreempted(0, at=1.0)]) == fleet
+
+
+def test_synthetic_trace_hazard_overlay_and_bitidentity():
+    streams = _streams(6)
+    with_hazard = synthetic_timed_trace(
+        streams,
+        np.random.RandomState(11),
+        n_events=12,
+        preemption_hazard=0.5,
+        hazard_pool=16,
+    )
+    without = synthetic_timed_trace(
+        streams, np.random.RandomState(11), n_events=12
+    )
+    shocks = [ev for ev in with_hazard if isinstance(ev, InstancePreempted)]
+    churn = [ev for ev in with_hazard if not isinstance(ev, InstancePreempted)]
+    # Hazard 0 must not perturb the churn rng draws (PR-4 bit-identity).
+    assert churn == list(without.events)
+    assert all(ev.hazard_ref == 0.5 and ev.pool == 16 for ev in shocks)
+    assert with_hazard.times() == tuple(sorted(with_hazard.times()))
+    with pytest.raises(ValueError):
+        synthetic_timed_trace(
+            streams,
+            np.random.RandomState(1),
+            n_events=2,
+            preemption_hazard=0.1,
+            hazard_pool=0,
+        )
+
+
+# ------------------------------------------------------------------ catalog
+
+
+def test_spot_variant_fields():
+    base = BinType("x", (8, 15, 0, 0), 1.0)
+    sv = spot_variant(base, price_ratio=0.4, hazard=0.3)
+    assert sv.name == "x-spot" and sv.cost == pytest.approx(0.4)
+    assert sv.is_spot and sv.hazard == 0.3 and sv.capacity == base.capacity
+    assert sv.billed_rent == sv.cost  # un-adjusted: rent is the cost
+    assert not base.is_spot
+    with pytest.raises(ValueError):
+        spot_variant(base, price_ratio=0.0)
+    with pytest.raises(ValueError):
+        spot_variant(base, hazard=0.0)
+    with pytest.raises(ValueError):
+        spot_variant(sv)  # compounding a spot discount is rejected
+    with pytest.raises(ValueError):
+        spot_variant(dataclasses.replace(base, rent=0.8))  # risk-adjusted
+    with pytest.raises(ValueError):
+        BinType("y", (1,), 1.0, hazard=-0.1)
+
+
+def test_with_spot_variants_pools():
+    cat = _spot_catalog(hazards={"g2.2xlarge": 0.9})
+    names = [bt.name for bt in cat]
+    assert "c4.2xlarge-spot" in names and "g2.2xlarge-spot" in names
+    by_name = {bt.name: bt for bt in cat}
+    assert by_name["g2.2xlarge-spot"].hazard == 0.9
+    assert by_name["c4.2xlarge-spot"].hazard == 0.2
+    # A second pool under another suffix; existing spot entries untouched.
+    two = with_spot_variants(
+        cat, price_ratio=0.5, hazard=0.05, suffix="-spot-stable"
+    )
+    assert "c4.2xlarge-spot-stable" in [bt.name for bt in two]
+    assert sum(bt.name == "c4.2xlarge-spot" for bt in two) == 1
+    # Re-applying the same suffix would mint duplicate names: rejected.
+    with pytest.raises(ValueError):
+        with_spot_variants(cat)
+    # A hazard override naming no on-demand type is a typo, not a no-op.
+    with pytest.raises(KeyError):
+        with_spot_variants(
+            paper_ec2_catalog(), hazards={"g2.2xlarge-typo": 0.9}
+        )
+
+
+def test_risk_adjusted_catalog_prices_risk_not_rent():
+    billing = BillingModel(boot_hours=0.1, quantum_hours=1.0)
+    cat = _spot_catalog()
+    ra = risk_adjusted_catalog(cat, billing, degraded_penalty=10.0)
+    by_name = {bt.name: bt for bt in ra}
+    for bt in cat:
+        if not bt.is_spot:
+            assert by_name[bt.name] is bt  # on-demand entries untouched
+            continue
+        adj = by_name[bt.name]
+        expected = bt.cost + bt.hazard * 0.1 * (bt.cost + 10.0)
+        assert adj.cost == pytest.approx(expected)
+        assert adj.billed_rent == pytest.approx(bt.cost)  # bill true rent
+        assert spot_effective_cost(
+            bt, billing, degraded_penalty=10.0
+        ) == pytest.approx(expected)
+    # Hazard-free catalogs pass through bit-identically.
+    assert risk_adjusted_catalog(paper_ec2_catalog(), billing) == paper_ec2_catalog()
+    # Per-type billing resolves the spot type's own boot latency.
+    fast_boot = {"c4.2xlarge-spot": BillingModel(boot_hours=0.0)}
+    ra2 = risk_adjusted_catalog(
+        cat, billing, billing_by_type=fast_boot, degraded_penalty=10.0
+    )
+    c4s = next(bt for bt in ra2 if bt.name == "c4.2xlarge-spot")
+    assert c4s.cost == pytest.approx(c4s.billed_rent)  # zero boot: no penalty
+
+
+# ------------------------------------------------------------------- ledger
+
+
+def test_preempt_bills_exactly_like_decommission_same_instant():
+    a = LifecycleEngine(HOURLY)
+    b = LifecycleEngine(HOURLY)
+    for eng in (a, b):
+        eng.provision(1, "g2.2xlarge-spot", 0.2275, at=0.2)
+    a.preempt(1, 1.7)
+    b.decommission(1, 1.7)
+    for until in (0.5, 1.7, 2.0, 5.0):
+        assert a.billed_instance(1, until) == b.billed_instance(1, until)
+    assert a.record(1).preempted_at == 1.7
+    assert b.record(1).preempted_at is None
+    with pytest.raises(ValueError):
+        a.preempt(1, 2.0)  # already terminated
+    with pytest.raises(ValueError):
+        a.decommission(1, 2.0)
+
+
+def test_billing_by_type_resolution():
+    eng = LifecycleEngine(
+        HOURLY,
+        billing_by_type={"spotty": BillingModel(quantum_hours=0.0)},
+    )
+    assert eng.billing_for("spotty").quantum_hours == 0.0
+    assert eng.billing_for("anything-else") is eng.billing
+    eng.provision(1, "spotty", 1.0, at=0.0)
+    eng.provision(2, "other", 1.0, at=0.0)
+    # Per-second (continuous) spot vs hourly on-demand at t=0.5:
+    assert eng.billed_instance(1, 0.5) == pytest.approx(0.5)
+    assert eng.billed_instance(2, 0.5) == pytest.approx(1.0)
+    # Boot latency resolves per type too.
+    eng2 = LifecycleEngine(
+        BillingModel(boot_hours=0.5),
+        billing_by_type={"fast": BillingModel(boot_hours=0.0)},
+    )
+    assert eng2.provision(1, "fast", 1.0, at=1.0).running_at == 1.0
+    assert eng2.provision(2, "slow", 1.0, at=1.0).running_at == 1.5
+
+
+# ------------------------------------------------ controller: preemption
+
+
+def _spot_controller(n=6, hazard=0.2):
+    mgr = _manager(_spot_catalog(hazard=hazard))
+    ctrl = mgr.controller(billing=HOURLY)
+    ctrl.reset(_streams(n), at=0.0)
+    return ctrl
+
+
+def test_preempt_explicit_uid_forces_replacement():
+    ctrl = _spot_controller()
+    uid = ctrl.instance_uids[0]
+    members = {
+        p.stream.name
+        for p in ctrl.plan.placements
+        if ctrl.instance_uids[p.instance_index] == uid
+    }
+    n_streams = len(ctrl.plan.placements)
+    r = ctrl.apply(InstancePreempted(uid, at=0.4))
+    assert uid not in ctrl.instance_uids
+    rec = ctrl.lifecycle.record(uid)
+    assert rec.preempted_at == 0.4 and rec.terminated_at == 0.4  # no drain
+    assert set(r.displaced) == members
+    assert len(r.plan.placements) == n_streams  # every stream re-placed
+    # Replacement instances boot from the preemption instant: cold uids
+    # provisioned at 0.4 (unless the displaced fit pinned residuals).
+    for u in ctrl.instance_uids:
+        assert ctrl.lifecycle.record(u).terminated_at is None
+
+
+def test_preempt_stale_or_unknown_uid_is_noop():
+    ctrl = _spot_controller()
+    plan_before = ctrl.plan
+    r = ctrl.apply(InstancePreempted(10**9, at=0.3))
+    assert r.mode == "noop" and r.plan is plan_before
+    # Preempt a real bin, then replay the same uid: stale -> noop.
+    uid = ctrl.instance_uids[0]
+    ctrl.apply(InstancePreempted(uid, at=0.5))
+    r2 = ctrl.apply(InstancePreempted(uid, at=0.6))
+    assert r2.mode == "noop"
+
+
+def test_sampled_preemption_thins_per_type():
+    ctrl = _spot_controller()
+    spots = sorted(
+        uid
+        for uid, bt in zip(ctrl.instance_uids, ctrl.plan.instances)
+        if bt.endswith("-spot")
+    )
+    if not spots:
+        pytest.skip("plan opened no spot bins")
+    pool = 8
+    # Slot 0 with frac 0 -> always accepted against any hazard > 0.
+    ev = InstancePreempted(at=0.2, draw=0.0, pool=pool, hazard_ref=0.2)
+    assert ctrl._preemption_target(ev) == spots[0]
+    # A slot past the spot fleet misses.
+    miss = InstancePreempted(
+        at=0.2, draw=(pool - 0.5) / pool, pool=pool, hazard_ref=0.2
+    )
+    assert ctrl._preemption_target(miss) is None
+    # Fractional thinning: hazard 0.2 against ref 1.0 accepts only
+    # frac < 0.2 — draw slot 0 with frac 0.5 is rejected.
+    rej = InstancePreempted(at=0.2, draw=0.5 / pool, pool=pool, hazard_ref=1.0)
+    assert ctrl._preemption_target(rej) is None
+    acc = InstancePreempted(at=0.2, draw=0.1 / pool, pool=pool, hazard_ref=1.0)
+    assert ctrl._preemption_target(acc) == spots[0]
+
+
+def test_ondemand_fleet_never_preempted_by_sampled_shock():
+    mgr = _manager()  # on-demand catalog only
+    ctrl = mgr.controller(billing=HOURLY)
+    ctrl.reset(_streams(6), at=0.0)
+    r = ctrl.apply(InstancePreempted(at=0.4, draw=0.0, pool=4, hazard_ref=0.9))
+    assert r.mode == "noop"
+    assert all(
+        rec.preempted_at is None for rec in ctrl.lifecycle.records()
+    )
+
+
+def test_preempted_spare_leaves_fleet_plan_untouched():
+    ctrl = _spot_controller()
+    bt = next(b for b in ctrl.manager.catalog if b.is_spot)
+    (uid,) = ctrl.pre_provision(bt)
+    plan_before = ctrl.plan
+    r = ctrl.apply(InstancePreempted(uid, at=0.3))
+    assert r.mode == "noop" and ctrl.plan is plan_before
+    assert uid not in ctrl.spares
+    assert ctrl.lifecycle.record(uid).preempted_at == 0.3
+
+
+def test_simulate_churn_charges_preemption_boot_wait():
+    mgr = _manager(_spot_catalog())
+    trace = TimedTrace(
+        [InstancePreempted(at=0.5, draw=0.0, pool=1)], horizon=2.0
+    )
+    out = simulate_churn(
+        mgr, _streams(6), trace, paper_profile_table(), billing=HOURLY
+    )
+    if out["preemptions"]:
+        assert out["preemption_degraded_stream_seconds"] > 0.0
+        assert (
+            out["degraded_stream_seconds"]
+            >= out["preemption_degraded_stream_seconds"]
+        )
+        assert any(t["preempted_streams"] for t in out["timeline"])
+        recs = [
+            r for r in out["instance_records"] if r["preempted_at"] is not None
+        ]
+        assert len(recs) == out["preemptions"]
+    assert out["billed_cost"] >= out["snapshot_cost_integral"]
+
+
+def test_simulate_churn_billing_by_type_splits_contracts():
+    cat = _spot_catalog()
+    by_type = {
+        bt.name: CONTINUOUS_BOOT for bt in cat if bt.is_spot
+    }
+    out = simulate_churn(
+        _manager(cat),
+        _streams(6),
+        TimedTrace([], horizon=0.5),
+        paper_profile_table(),
+        billing=HOURLY,
+        billing_by_type=by_type,
+    )
+    spot_recs = [
+        r
+        for r in out["instance_records"]
+        if r["instance_type"].endswith("-spot")
+    ]
+    od_recs = [
+        r
+        for r in out["instance_records"]
+        if not r["instance_type"].endswith("-spot")
+    ]
+    # Spot bills the exact half-hour fraction; on-demand a full quantum.
+    for r in spot_recs:
+        assert r["billed"] == pytest.approx(0.5 * r["hourly_cost"])
+    for r in od_recs:
+        assert r["billed"] == pytest.approx(1.0 * r["hourly_cost"])
+
+
+def test_snapshot_integral_prices_rent_not_decision_cost():
+    """Under a risk-adjusted catalog the snapshot integral must price
+    open bins at their true billed rent, keeping billed >= integral —
+    the decision cost is hazard-inflated and never billed."""
+    # Hazard low enough that spot stays the packer's choice, yet its
+    # decision cost is visibly inflated above the billed rent.
+    cat = risk_adjusted_catalog(
+        _spot_catalog(price_ratio=0.35, hazard=0.2),
+        HOURLY,
+        degraded_penalty=25.0,
+    )
+    out = simulate_churn(
+        _manager(cat),
+        _streams(6),
+        TimedTrace([], horizon=0.9),
+        paper_profile_table(),
+        billing=CONTINUOUS_BOOT,
+    )
+    assert any(
+        r["instance_type"].endswith("-spot") for r in out["instance_records"]
+    )
+    assert out["billed_cost"] >= out["snapshot_cost_integral"] > 0.0
+    # The decision-cost integral would exceed the billed total here.
+    decision_integral = out["timeline"][0]["cost"] * 0.9
+    assert decision_integral > out["billed_cost"]
+
+
+def test_repeated_preemption_never_double_counts_boot_wait():
+    """A replacement preempted while still booting charges only the wait
+    past the window already charged — total degraded time equals the
+    true downtime span, not the sum of overlapping boots."""
+    boot = 0.2
+    mgr = _manager(_spot_catalog())
+    ctrl = mgr.controller(billing=BillingModel(boot_hours=boot, quantum_hours=1.0))
+    streams = [StreamSpec("only", ZF, 5.0)]
+    trace = TimedTrace(
+        [
+            # First preemption at 0.5: replacement boots until 0.5+boot.
+            InstancePreempted(at=0.5, draw=0.0, pool=1),
+            # Second at 0.55, mid-boot of the replacement: only the extra
+            # 0.05 h of wait may be charged on top.
+            InstancePreempted(at=0.55, draw=0.0, pool=1),
+        ],
+        horizon=1.5,
+    )
+    out = simulate_churn(
+        mgr, streams, trace, paper_profile_table(),
+        billing=BillingModel(boot_hours=boot, quantum_hours=1.0),
+    )
+    if out["preemptions"] == 2:
+        # True downtime: 0.5 -> 0.55+boot, one stream.
+        expected = (boot + 0.05) * 3600.0
+        assert out["preemption_degraded_stream_seconds"] == pytest.approx(
+            expected
+        )
+
+
+def test_global_only_billing_map_bit_identical_to_pr4_replay():
+    """Satellite: a global-only billing config (empty per-type map) must
+    replay a PR-4-style lifecycle scenario bit-identically to the plain
+    single-model configuration."""
+    streams = _streams(10)
+    events = TimedTrace(
+        [
+            StreamAdded(StreamSpec("x1", ZF, 5.0), at=0.2),
+            StreamAdded(StreamSpec("x2", ZF, 2.0), at=0.7),
+        ],
+        horizon=1.5,
+    )
+    plain = simulate_churn(
+        _manager(), streams, events, paper_profile_table(), billing=HOURLY
+    )
+    mapped = simulate_churn(
+        _manager(),
+        streams,
+        events,
+        paper_profile_table(),
+        billing=HOURLY,
+        billing_by_type={},
+    )
+    assert plain["billed_cost"] == mapped["billed_cost"]
+    assert plain["degraded_stream_seconds"] == mapped["degraded_stream_seconds"]
+    assert [t["cost"] for t in plain["timeline"]] == [
+        t["cost"] for t in mapped["timeline"]
+    ]
+    assert [t["billed"] for t in plain["timeline"]] == [
+        t["billed"] for t in mapped["timeline"]
+    ]
+
+
+def test_price_event_reprices_rent_under_risk_adjusted_catalog():
+    """Bugfix regression: `PriceChanged` on a risk-adjusted spot type
+    re-prices the *billed rent* (ledger included) while the decision cost
+    keeps its risk premium — the stale-rent path billed the old price
+    forever and stripped the hazard premium from the packer."""
+    cat = risk_adjusted_catalog(
+        _spot_catalog(price_ratio=0.35, hazard=0.2),
+        HOURLY,
+        degraded_penalty=25.0,
+    )
+    mgr = _manager(cat)
+    ctrl = mgr.controller(billing=HOURLY)
+    ctrl.reset(_streams(6), at=0.0)
+    target = next(bt for bt in cat if bt.is_spot)
+    premium = target.cost - target.billed_rent
+    assert premium > 0.0
+    from repro.core.streams import PriceChanged
+
+    ctrl.apply(PriceChanged(target.name, 0.123, at=0.5))
+    new = next(bt for bt in mgr.catalog if bt.name == target.name)
+    assert new.billed_rent == pytest.approx(0.123)  # rent re-priced
+    assert new.cost == pytest.approx(0.123 + premium)  # premium kept
+    for rec in ctrl.lifecycle.records():
+        if rec.instance_type == target.name and rec.terminated_at is None:
+            assert rec.hourly_cost == pytest.approx(0.123)  # ledger too
+
+
+def test_timeline_reports_true_rent_next_to_decision_cost():
+    cat = risk_adjusted_catalog(
+        _spot_catalog(price_ratio=0.35, hazard=0.2),
+        HOURLY,
+        degraded_penalty=25.0,
+    )
+    out = simulate_churn(
+        _manager(cat),
+        _streams(6),
+        TimedTrace([], horizon=0.5),
+        paper_profile_table(),
+        billing=CONTINUOUS_BOOT,
+    )
+    step = out["timeline"][0]
+    if any(
+        r["instance_type"].endswith("-spot") for r in out["instance_records"]
+    ):
+        assert step["rent_cost"] < step["cost"]  # premium never billed
+    plain = simulate_churn(
+        _manager(),
+        _streams(6),
+        TimedTrace([], horizon=0.5),
+        paper_profile_table(),
+        billing=CONTINUOUS_BOOT,
+    )
+    step = plain["timeline"][0]
+    assert step["rent_cost"] == pytest.approx(step["cost"])
+
+
+# ------------------------------------------------- risk-aware autoscaling
+
+
+def test_acting_autoscaler_refuses_unreliable_spares():
+    """With the flaky pool cheapest, the spare held against a forecast
+    join is the cheapest *reliable* host — never the hazardous type the
+    open rule would pick on cost alone."""
+    cat = _spot_catalog(price_ratio=0.3, hazard=0.9)
+    mgr = _manager(cat)
+    ctrl = mgr.controller(billing=HOURLY)
+    join = StreamSpec("x", ZF, 5.0)
+    assert ctrl.open_host_bin(join).is_spot  # cost-greedy picks spot
+    pol = ActingAutoscaler(
+        forecast=StreamForecast(joins=(join,)),
+        max_spares=1,
+        max_spare_hazard=0.0,
+    )
+    ctrl.policy = pol
+    ctrl.reset(_streams(4), at=0.0)
+    for bt in ctrl.spares.values():
+        assert bt.hazard == 0.0  # on-demand spares only
+    demand = pol.spare_demand(ctrl, (join,))
+    for name, (bt, _) in demand.items():
+        assert bt.hazard == 0.0
+
+
+def test_acting_autoscaler_tolerates_hazard_below_threshold():
+    cat = with_spot_variants(
+        paper_ec2_catalog(), price_ratio=0.4, hazard=0.05
+    )
+    mgr = _manager(cat)
+    ctrl = mgr.controller(billing=HOURLY)
+    join = StreamSpec("x", ZF, 5.0)
+    pol = ActingAutoscaler(
+        forecast=StreamForecast(joins=(join,)),
+        max_spares=1,
+        max_spare_hazard=0.1,
+    )
+    ctrl.policy = pol
+    ctrl.reset(_streams(4), at=0.0)
+    demand = pol.spare_demand(ctrl, (join,))
+    if demand:  # when the join fits no residual, the spot spare is OK
+        assert all(bt.hazard <= 0.1 for _, (bt, _) in demand.items())
+
+
+def test_risk_aware_catalog_flows_through_allocation():
+    """End to end: the packer avoids a spot pool whose effective cost
+    exceeds on-demand, but buys one whose discount survives its risk."""
+    flaky = with_spot_variants(
+        paper_ec2_catalog(), price_ratio=0.3, hazard=0.9
+    )
+    both = with_spot_variants(
+        flaky, price_ratio=0.45, hazard=0.05, suffix="-spot-stable"
+    )
+    ra = risk_adjusted_catalog(both, HOURLY, degraded_penalty=25.0)
+    mgr = _manager(ra)
+    plan = mgr.allocate(_streams(10))
+    used = set(plan.instances)
+    assert not any(t.endswith("-spot") for t in used)  # flaky avoided
+    assert any(t.endswith("-spot-stable") for t in used)  # discount kept
+    # The ledger bills true discounted rents, not the risk-adjusted cost.
+    ctrl = mgr.controller()
+    by_name = {bt.name: bt for bt in ra}
+    for uid, t in zip(ctrl.instance_uids, plan.instances):
+        rec = ctrl.lifecycle.record(uid)
+        assert rec.hourly_cost == pytest.approx(by_name[t].billed_rent)
+        if by_name[t].is_spot:
+            assert rec.hourly_cost < by_name[t].cost

@@ -10,6 +10,10 @@ from repro.train import AdamWConfig, train
 from repro.train.checkpoint import restore, save
 from repro.train.optimizer import adamw_update, cosine_lr, init_opt_state
 
+# Heavy JAX compile/serving tests: excluded from the quick core gate
+# via `pytest -m "not slow"` (see pytest.ini).
+pytestmark = pytest.mark.slow
+
 
 def test_adamw_first_step_is_signed_lr():
     """After one step (bias-corrected), |delta| ~ lr for wd=0."""
