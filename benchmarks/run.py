@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
                        acting autoscaler vs reactive, billing-aware moves
   spot               — spot/preemptible market: risk-aware vs naive spot vs
                        all-on-demand on a preemption-heavy trace
+  storm              — fault-injection storms: SLA tiers, graceful frame-rate
+                       degradation, interruption-notice draining
   roofline_report    — §Roofline table from dry-run artifacts
 
 Suites that emit a gated artifact (``churn_replan`` → ``BENCH_replan.json``,
@@ -34,6 +36,7 @@ GATED_ARTIFACTS = {
     "policy": "BENCH_policy.json",
     "lifecycle": "BENCH_lifecycle.json",
     "spot": "BENCH_spot.json",
+    "storm": "BENCH_storm.json",
 }
 
 
@@ -56,6 +59,7 @@ def main() -> None:
         roofline_report,
         solver_scaling,
         spot,
+        storms,
         table2_speedup,
         table3_requirements,
         table6_strategies,
@@ -75,6 +79,7 @@ def main() -> None:
         "policy": consolidation,
         "lifecycle": lifecycle,
         "spot": spot,
+        "storm": storms,
         "roofline": roofline_report,
     }
     selected = args.only or list(suites)

@@ -69,6 +69,25 @@ FLOORS: dict[str, dict[str, tuple[str, float, str]]] = {
         # above its hazard tolerance (no flaky-spot spares).
         "acting_unreliable_spares": ("<=", 0.0, "no unreliable warm spares"),
     },
+    "BENCH_storm.json": {
+        # Acceptance: the tiered run must end the seeded storm with ZERO
+        # GOLD SLA violations (GOLD budgets are never spent on blackout) ...
+        "gold_violations_tiered": ("<=", 0.0, "GOLD never violated"),
+        # ... total blackout stream-seconds must drop >= 60% vs the PR-5
+        # risk-aware baseline on the identical trace (measured ~88%) ...
+        "blackout_drop_vs_baseline": (">=", 0.60, "blackout cut vs PR-5 baseline"),
+        # ... at <= 10% billed-cost overhead (measured ~-5%: degraded
+        # streams shrink, so the tiered fleet actually bills less) ...
+        "tiered_billed_overhead": ("<=", 0.10, "billed-cost overhead ceiling"),
+        # ... >= 80% of victim-bearing notice steps must drain tail-free
+        # (kill converted to an ordinary migration, measured 100%) ...
+        "notice_conversion": (">=", 0.80, "notice-to-migration conversion"),
+        # ... on a trace that actually exercises the drain path ...
+        "notice_victim_steps": (">=", 1.0, "trace exercises noticed victims"),
+        # ... and degraded-mode service must cost less total utility than
+        # the baseline's pure-blackout penalty (measured ~0.83).
+        "utility_penalty_ratio": ("<=", 1.0, "degraded beats blackout on utility"),
+    },
     "BENCH_policy.json": {
         # Acceptance: bounded-migration consolidation (k<=3 per event) must
         # end the 500-stream / 200-event trace >= 5% cheaper than the

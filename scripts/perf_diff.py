@@ -19,7 +19,10 @@ Handles two artifact shapes:
     dollar-formatted section, so billing-engine PRs can eyeball whether a
     change moved the *bill*, not just the wall time.  Spot/preemption
     metrics (BENCH_spot.json's preemption counts, degraded-time splits,
-    and risk-aware savings) likewise get a dedicated section.
+    and risk-aware savings) likewise get a dedicated section, as do the
+    storm-harness SLA metrics (BENCH_storm.json's blackout stream-second
+    splits, notice-conversion rate, utility penalties, and per-tier
+    violation counts).
 """
 import json
 import sys
@@ -38,12 +41,33 @@ _SPOT_PREFIXES = (
 )
 
 
+# Storm-harness SLA metrics (BENCH_storm.json).  "tiered_billed_overhead"
+# is listed here by full name so it lands with its storm siblings rather
+# than in the dollar-formatted billed section (it is a ratio, not a bill).
+_STORM_PREFIXES = (
+    "blackout_",
+    "drain_blackout_",
+    "gold_violations",
+    "sla_violations_",
+    "utility_penalty",
+    "notice_conversion",
+    "notice_victim_steps",
+    "trace_notices",
+    "trace_kills",
+    "tiered_billed_overhead",
+)
+
+
 def _is_billed_key(k: str) -> bool:
     return k.startswith("billed_") or k.startswith("degraded_seconds")
 
 
 def _is_spot_key(k: str) -> bool:
     return k.startswith(_SPOT_PREFIXES)
+
+
+def _is_storm_key(k: str) -> bool:
+    return k.startswith(_STORM_PREFIXES)
 
 
 def _diff_section(a: dict, b: dict, predicate, label: str, fmt) -> None:
@@ -79,6 +103,14 @@ def diff_spot(a: dict, b: dict) -> None:
     )
 
 
+def diff_storm(a: dict, b: dict) -> None:
+    def fmt(k, x, y, d):
+        unit = "s" if k.startswith("blackout_seconds") else " "
+        return f"{x:11.4g}{unit} {y:11.4g}{unit} {d:+8.1%}"
+
+    _diff_section(a, b, _is_storm_key, "storm/SLA metric", fmt)
+
+
 def diff_billed(a: dict, b: dict) -> None:
     def fmt(k, x, y, d):
         unit = "s" if k.startswith("degraded") else "$"
@@ -90,12 +122,14 @@ def diff_billed(a: dict, b: dict) -> None:
 def diff_meta(a: dict, b: dict) -> None:
     diff_billed(a, b)
     diff_spot(a, b)
+    diff_storm(a, b)
     am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
         k
         for k in sorted(set(am) | set(bm))
         if not _is_billed_key(k)
         and not _is_spot_key(k)
+        and not _is_storm_key(k)
         and (
             isinstance(am.get(k), (int, float))
             or isinstance(bm.get(k), (int, float))

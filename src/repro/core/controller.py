@@ -93,6 +93,27 @@ sets spot decision costs to rent + λ x re-placement penalty (billing
 keeps the true rent via `BinType.billed_rent`), and
 `core.policy.ActingAutoscaler` refuses to hold spares on types above its
 hazard tolerance.
+
+## Interruption notices & graceful degradation
+
+Real clouds warn ~2 minutes ahead of a spot reclamation.  A
+`streams.InstancePreemptionNotice` resolves its victim exactly like a
+preemption, marks it non-accepting in the ledger
+(`LifecycleEngine.notice`), and — when ``drain_on_notice`` is on — the
+controller *evacuates* it immediately: the victim bin leaves the plan,
+its members re-place through the ordinary repair path, and the victim
+drains (still serving, still billing) until its replacements boot or the
+deadline hits, whichever is first.  The paired kill then lands on an
+already-empty instance: blackout became an ordinary double-billed
+migration.  With ``drain_on_notice=False`` the warning is recorded but
+ignored — the naive baseline the storm benchmark compares against.
+
+Degradation is a mechanism move too: `set_stream_rung` shrinks a
+stream's requirement vector to a lower rung of its `streams.SLATier`
+rate ladder (an internal rate-change fold — the stream's *nominal* rate
+is remembered and restored), and `park_stream`/`unpark_stream` take a
+parkable stream off the fleet entirely.  The *when* — which streams,
+under what pressure — is `core.policy.GracefulDegradationPolicy`'s call.
 """
 from __future__ import annotations
 
@@ -117,6 +138,7 @@ from .strategies import ST3, Strategy
 from .streams import (
     FleetEvent,
     InstancePreempted,
+    InstancePreemptionNotice,
     PriceChanged,
     StreamAdded,
     StreamRateChanged,
@@ -218,6 +240,7 @@ class FleetController:
         policy=None,
         billing: BillingModel | None = None,
         billing_by_type: dict[str, BillingModel] | None = None,
+        drain_on_notice: bool = True,
     ) -> None:
         from .policy import PinningPolicy
 
@@ -226,6 +249,10 @@ class FleetController:
         self.gap_threshold = gap_threshold
         self.sub_max_nodes = sub_max_nodes
         self.policy = policy if policy is not None else PinningPolicy()
+        #: Act on `InstancePreemptionNotice` by evacuating the victim
+        #: inside the warning window (make-before-break); False records
+        #: the warning but keeps serving — the naive blackout baseline.
+        self.drain_on_notice = drain_on_notice
         # Default billing is the timeless model (instant boot, continuous
         # quantum): the lifecycle ledger then reproduces snapshot costing
         # exactly and every pre-lifecycle call site behaves unchanged.
@@ -238,7 +265,13 @@ class FleetController:
         )
         self.now = 0.0  # monotone clock, hours (advanced by event `at`s)
         self._spares: dict[int, BinType] = {}  # warm spare uid -> type
+        self._pending_release: set[int] = set()  # spares released end-of-event
         self._ledger_live: set[int] = set()  # bin uids at the last sync
+        self._noticed: dict[int, float] = {}  # noticed uid -> kill deadline
+        self._notice_ids: dict[int, int | None] = {}  # notice_id -> victim uid
+        self._nominal: dict[str, float] = {}  # degraded stream -> nominal fps
+        self._degraded: dict[str, int] = {}  # degraded stream -> ladder rung
+        self._parked: dict[str, StreamSpec] = {}  # parked name -> nominal spec
         self._streams: list[StreamSpec] = []
         self._problem: Problem | None = None
         self._plan: AllocationPlan | None = None
@@ -276,10 +309,16 @@ class FleetController:
         if at is not None:
             self.now = at
         self._spares = {}
+        self._pending_release = set()
         self.lifecycle = LifecycleEngine(
             self.billing, billing_by_type=self.billing_by_type
         )
         self._ledger_live = set()
+        self._noticed = {}
+        self._notice_ids = {}
+        self._nominal = {}
+        self._degraded = {}
+        self._parked = {}
         self._adopt_solution(problem, plan.solution, match_old=False)
         self._plan = plan
         self._prices = None  # stale for the new fleet era; refreshed lazily
@@ -298,6 +337,7 @@ class FleetController:
             at=self.now,
         )
         result = self.policy.on_reset(self, result)
+        self._flush_spare_releases()
         self._sync_lifecycle()
         return result
 
@@ -319,6 +359,7 @@ class FleetController:
         """
         self.now = max(self.now, event.at)
         result = self.policy.on_event(self, event, self._fold(event))
+        self._flush_spare_releases()
         self._sync_lifecycle()
         return dataclasses.replace(result, at=self.now)
 
@@ -330,6 +371,49 @@ class FleetController:
             return self._apply_price(event)
         if isinstance(event, InstancePreempted):
             return self._apply_preemption(event)
+        if isinstance(event, InstancePreemptionNotice):
+            return self._apply_notice(event)
+        # External stream events speak for the *nominal* service level:
+        # a departure or an analyst's renegotiation clears any internal
+        # degradation bookkeeping for that stream, and events naming a
+        # parked stream resolve against the parking lot (the stream is
+        # not in the live fleet).
+        if isinstance(event, StreamRemoved):
+            if event.name in self._parked:
+                del self._parked[event.name]
+                return self._noop_result()
+            self._nominal.pop(event.name, None)
+            self._degraded.pop(event.name, None)
+        elif isinstance(event, StreamRateChanged):
+            if event.name in self._parked:
+                self._parked[event.name] = dataclasses.replace(
+                    self._parked[event.name], desired_fps=event.desired_fps
+                )
+                return self._noop_result()
+            self._nominal.pop(event.name, None)
+            self._degraded.pop(event.name, None)
+        elif isinstance(event, StreamAdded) and event.stream.name in self._parked:
+            raise ValueError(
+                f"stream {event.stream.name!r} is parked; unpark it instead"
+            )
+        return self._fold_stream_event(event)
+
+    def _fold_stream_event(
+        self, event: FleetEvent, *, allow_full: bool = True
+    ) -> ReplanResult:
+        """Fold a join/leave/re-rate into the fleet and re-plan.
+
+        Shared by external events (via `_fold`, which first reconciles
+        degradation bookkeeping) and the internal degradation moves
+        (`set_stream_rung`, `park_stream`, `unpark_stream`), which manage
+        that bookkeeping themselves.  Degradation moves pass
+        ``allow_full=False``: they are local, reversible requirement
+        shrinks issued mid-storm, exactly when the controller must stay
+        fast — a poor dual-certified gap then keeps the warm repair
+        instead of escalating to a global re-solve (degraded fleets mix
+        fractional rates into many small item classes, the worst case for
+        the exact pattern solvers).
+        """
         new_streams = list(apply_events(self._streams, [event]))
         if fleet_key(new_streams) == fleet_key(self._streams):
             return self._noop_result()
@@ -352,7 +436,10 @@ class FleetController:
 
         problem = self._formulate_incremental(new_streams)
         n_kept = len(new_streams) - len(displaced_names)
-        return self._replan(problem, new_streams, n_kept, displaced_names)
+        return self._replan(
+            problem, new_streams, n_kept, displaced_names,
+            allow_full=allow_full,
+        )
 
     def what_if(
         self, fleets: Sequence[Sequence[StreamSpec]], *, best_fit: bool = False
@@ -545,6 +632,97 @@ class FleetController:
         self._refresh_prices(self._problem)
         return self._lower_bound(self._problem)
 
+    # ------------------------------------------------ graceful degradation
+
+    @property
+    def degraded_rungs(self) -> dict[str, int]:
+        """Streams currently served below nominal (name -> ladder rung)."""
+        return dict(self._degraded)
+
+    @property
+    def parked(self) -> dict[str, StreamSpec]:
+        """Streams parked off the fleet (name -> nominal-rate spec)."""
+        return dict(self._parked)
+
+    def nominal_fps(self, name: str) -> float:
+        """A live stream's *nominal* rate (its contract rate, not the
+        possibly-degraded rate currently served)."""
+        if name in self._nominal:
+            return self._nominal[name]
+        spec = next((s for s in self._streams if s.name == name), None)
+        if spec is None:
+            raise KeyError(f"no stream named {name!r}")
+        return spec.desired_fps
+
+    def set_stream_rung(self, name: str, rung: int) -> ReplanResult:
+        """Serve ``name`` at rung ``rung`` of its tier's rate ladder.
+
+        Rung 0 is full (nominal) rate; higher rungs shrink the stream's
+        requirement vector via an internal rate-change fold — the
+        mechanism's degradation move, re-planned through the ordinary
+        incremental path.  The nominal rate is remembered so later calls
+        (including restores back to rung 0) ladder off the contract rate,
+        never off an already-degraded one; an *external*
+        `StreamRateChanged` resets the contract and clears the rung.
+        """
+        if name in self._parked:
+            raise ValueError(f"stream {name!r} is parked; unpark it first")
+        spec = next((s for s in self._streams if s.name == name), None)
+        if spec is None:
+            raise KeyError(f"no stream named {name!r}")
+        ladder = spec.tier.rate_ladder
+        if not 0 <= rung < len(ladder):
+            raise ValueError(
+                f"stream {name!r}: rung {rung} outside tier "
+                f"{spec.tier.name} ladder of {len(ladder)}"
+            )
+        nominal = self._nominal.get(name, spec.desired_fps)
+        fps = nominal * ladder[rung]
+        if rung == 0:
+            self._nominal.pop(name, None)
+            self._degraded.pop(name, None)
+        else:
+            self._nominal[name] = nominal
+            self._degraded[name] = rung
+        if abs(fps - spec.desired_fps) <= _EPS * max(1.0, nominal):
+            return self._noop_result()
+        return self._fold_stream_event(
+            StreamRateChanged(name, fps, at=self.now), allow_full=False
+        )
+
+    def park_stream(self, name: str) -> ReplanResult:
+        """Take a parkable stream off the fleet entirely (last resort).
+
+        The stream's nominal-rate spec is remembered in the parking lot;
+        `unpark_stream` re-joins it at full rate.  Only tiers with
+        ``parkable=True`` may be parked.  Parked time is full blackout —
+        the simulator charges it against the tier's budget and penalty.
+        """
+        if name in self._parked:
+            raise ValueError(f"stream {name!r} is already parked")
+        spec = next((s for s in self._streams if s.name == name), None)
+        if spec is None:
+            raise KeyError(f"no stream named {name!r}")
+        if not spec.tier.parkable:
+            raise ValueError(
+                f"stream {name!r}: tier {spec.tier.name} is not parkable"
+            )
+        nominal = self._nominal.pop(name, spec.desired_fps)
+        self._degraded.pop(name, None)
+        self._parked[name] = dataclasses.replace(spec, desired_fps=nominal)
+        return self._fold_stream_event(
+            StreamRemoved(name, at=self.now), allow_full=False
+        )
+
+    def unpark_stream(self, name: str) -> ReplanResult:
+        """Re-join a parked stream at its nominal rate."""
+        if name not in self._parked:
+            raise KeyError(f"no parked stream named {name!r}")
+        spec = self._parked.pop(name)
+        return self._fold_stream_event(
+            StreamAdded(spec, at=self.now), allow_full=False
+        )
+
     # -------------------------------------------------- lifecycle & billing
 
     @property
@@ -582,7 +760,32 @@ class FleetController:
         if uid not in self._spares:
             raise KeyError(f"no spare with uid {uid}")
         del self._spares[uid]
+        self._pending_release.discard(uid)
         self.lifecycle.decommission(uid, self.now)
+
+    def defer_release_spare(self, uid: int) -> None:
+        """Mark a warm spare for release at the *end* of the current event.
+
+        `release_spare` retires the spare immediately, which races the
+        rest of the same replay step: a policy running after the release
+        (or a re-plan it triggers) can no longer consume the spare even
+        though it is still billed for the quantum.  A deferred release
+        keeps the spare consumable until the event finishes folding; the
+        controller flushes the marks after the policy hook returns, and a
+        mark on a spare that a re-plan consumed in the meantime simply
+        evaporates.
+        """
+        if uid not in self._spares:
+            raise KeyError(f"no spare with uid {uid}")
+        self._pending_release.add(uid)
+
+    def _flush_spare_releases(self) -> None:
+        """End-of-event: retire the spares still marked and unconsumed."""
+        for uid in sorted(self._pending_release):
+            if uid in self._spares:
+                del self._spares[uid]
+                self.lifecycle.decommission(uid, self.now)
+        self._pending_release.clear()
 
     def stream_requirements(self, stream: StreamSpec) -> list[np.ndarray]:
         """Strategy-filtered requirement vectors, one per execution choice."""
@@ -699,32 +902,65 @@ class FleetController:
                 and rec.uid not in live
                 and rec.uid not in self._spares
             ):
-                eng.decommission(rec.uid, self.now, drain_until=drain_until)
+                # A noticed victim drains no longer than its reclamation
+                # deadline — the cloud takes the instance back then no
+                # matter how long the replacements still need to boot.
+                deadline = self._noticed.get(rec.uid)
+                end = drain_until if deadline is None else min(drain_until, deadline)
+                eng.decommission(rec.uid, self.now, drain_until=end)
         self._ledger_live = set(live)
 
-    def _alloc_uid(self, bin_type: BinType) -> int:
-        """Uid for a newly opened bin: consume a warm spare of the same
-        type when one is held (the bin inherits its ledger record — and
-        its already-elapsed boot), else mint a cold uid.
+    def _alloc_uid(self, bin_type: BinType) -> tuple[int, BinType]:
+        """Uid (and final type) for a newly opened bin.
 
-        Among matching spares, the one with the earliest ``running_at``
-        wins (ties keep pool order): a fully-booted spare must never idle
-        while a still-PROVISIONING one is handed to the join — consuming
-        spares in bare dict-insertion order broke the "join lands warm"
-        promise whenever the pool held mixed boot stages.
+        Consume a warm spare of the same type when one is held (the bin
+        inherits its ledger record — and its already-elapsed boot), else
+        mint a cold uid.  Among matching spares, the one with the
+        earliest ``running_at`` wins (ties keep pool order): a
+        fully-booted spare must never idle while a still-PROVISIONING one
+        is handed to the join — consuming spares in bare dict-insertion
+        order broke the "join lands warm" promise whenever the pool held
+        mixed boot stages.
+
+        Cross-type substitution: when the open rule landed on a cold
+        *spot* type and no same-type spare is held, a capacity-compatible
+        **on-demand** spare (hazard-free, every capacity dimension at
+        least the requested type's) absorbs the open instead — the bin is
+        re-typed to the spare's contract, trading the spot discount for
+        an already-billed warm boot and zero interruption risk.  The
+        returned `BinType` is the one the bin must carry.
         """
-        best: int | None = None
-        best_running = float("inf")
-        for uid, bt in self._spares.items():
-            if bt.name != bin_type.name or not self.lifecycle.accepting(uid, self.now):
-                continue
-            running_at = self.lifecycle.record(uid).running_at
-            if running_at < best_running:
-                best, best_running = uid, running_at
+
+        def pick(match) -> int | None:
+            best: int | None = None
+            best_running = float("inf")
+            for uid, bt in self._spares.items():
+                if not match(bt) or not self.lifecycle.accepting(uid, self.now):
+                    continue
+                running_at = self.lifecycle.record(uid).running_at
+                if running_at < best_running:
+                    best, best_running = uid, running_at
+            return best
+
+        best = pick(lambda bt: bt.name == bin_type.name)
         if best is not None:
             del self._spares[best]
-            return best
-        return next(self._uid)
+            self._pending_release.discard(best)
+            return best, bin_type
+        if bin_type.hazard > 0.0:
+            req = np.asarray(bin_type.capacity, dtype=np.float64)
+            best = pick(
+                lambda bt: bt.hazard <= 0.0
+                and len(bt.capacity) == len(bin_type.capacity)
+                and bool(
+                    np.all(np.asarray(bt.capacity, dtype=np.float64) >= req - _EPS)
+                )
+            )
+            if best is not None:
+                spare_type = self._spares.pop(best)
+                self._pending_release.discard(best)
+                return best, spare_type
+        return next(self._uid), bin_type
 
     def _billed_migration_delta(
         self,
@@ -773,6 +1009,7 @@ class FleetController:
         new_streams: list[StreamSpec],
         n_kept: int,
         displaced_names: set[str],
+        allow_full: bool = True,
     ) -> ReplanResult:
         old_uid_of = self._uid_map()
         pinned_bins = list(self._bins)
@@ -810,7 +1047,7 @@ class FleetController:
         # Adopt the warm (pinned) solution into the bin states; the full
         # fallback then reads it back as its warm-start incumbent.
         self._adopt_pinned_solution(pinned_bins, sub_problem, sol)
-        if gap <= self.gap_threshold:
+        if gap <= self.gap_threshold or not allow_full:
             mode = "warm"
             optimal = gap <= _EPS  # only a met lower bound certifies globally
         else:
@@ -900,17 +1137,41 @@ class FleetController:
         re-places the displaced streams through the ordinary greedy-repair
         + exact-pinned-subsolve path; the simulator charges their
         replacement boot wait to degraded time.
+
+        A kill carrying a ``notice_id`` resolves against whatever
+        instance the matching notice hit (or misses if the notice did):
+        the pair always targets the same instance, no matter what the
+        policy did in between.  When that instance was already evacuated
+        (drain-ahead-of-kill) the plan is untouched — the kill merely
+        restates the scheduled drain end to the reclamation instant.
         """
-        uid = self._preemption_target(event)
-        if uid is None:
-            return self._noop_result()
+        if event.notice_id >= 0:
+            uid = self._notice_ids.pop(event.notice_id, None)
+            if uid is None or uid not in self.lifecycle:
+                return self._noop_result()
+            rec = self.lifecycle.record(uid)
+            if rec.terminated_at is not None and rec.terminated_at <= self.now:
+                return self._noop_result()
+        else:
+            uid = self._preemption_target(event)
+            if uid is None:
+                return self._noop_result()
+        self._noticed.pop(uid, None)
         if uid in self._spares:
             # A held warm spare dies: nothing was placed on it, so the
             # fleet plan stands — only the ledger and spare pool change.
             del self._spares[uid]
+            self._pending_release.discard(uid)
             self.lifecycle.preempt(uid, self.now)
             return self._noop_result()
-        victim = next(b for b in self._bins if b.uid == uid)
+        victim = next((b for b in self._bins if b.uid == uid), None)
+        if victim is None:
+            # Already evacuated ahead of the kill (notice drain): the
+            # plan stands; the drain scheduled past `now` cuts to `now`.
+            rec = self.lifecycle.record(uid)
+            if rec.terminated_at is None or rec.terminated_at > self.now:
+                self.lifecycle.preempt(uid, self.now)
+            return self._noop_result()
         displaced_names = set(victim.members)
         self.lifecycle.preempt(uid, self.now)
         self._bins = [b for b in self._bins if b.uid != uid]
@@ -918,6 +1179,51 @@ class FleetController:
         # Survivors keep their order; the displaced move to the tail —
         # the layout `_replan` expects (and `_formulate_incremental`
         # derives tensors for via a pure permutation, no re-stack).
+        survivors = [s for s in self._streams if s.name not in displaced_names]
+        displaced = [s for s in self._streams if s.name in displaced_names]
+        new_streams = survivors + displaced
+        problem = self._formulate_incremental(new_streams)
+        return self._replan(
+            problem, new_streams, len(survivors), displaced_names
+        )
+
+    def _apply_notice(self, event: InstancePreemptionNotice) -> ReplanResult:
+        """Fold a reclamation warning in: mark the victim, maybe evacuate.
+
+        The victim resolves exactly like a preemption's (explicit uid or
+        seeded thinning — the warning precedes the kill it announces).  A
+        hit is recorded in the ledger (`LifecycleEngine.notice`: the
+        instance stops accepting placements but keeps serving and
+        billing) and remembered under ``event.notice_id`` so the paired
+        kill targets the same instance.  With ``drain_on_notice`` the
+        victim is then evacuated make-before-break: a noticed spare is
+        released on the spot; a noticed bin leaves the plan, its members
+        re-place through the ordinary repair path, and `_sync_lifecycle`
+        drains the victim until its replacements boot — clamped to the
+        deadline, past which the cloud reclaims it regardless.
+        """
+        uid = self._preemption_target(event)
+        if event.notice_id >= 0:
+            self._notice_ids[event.notice_id] = uid
+        if uid is None:
+            return self._noop_result()
+        deadline = max(event.deadline, self.now)
+        self.lifecycle.notice(uid, self.now, deadline)
+        self._noticed[uid] = deadline
+        if not self.drain_on_notice:
+            return self._noop_result()
+        if uid in self._spares:
+            # A doomed spare absorbs nothing — hand it back immediately
+            # (billed quanta stay billed; the paired kill then no-ops).
+            del self._spares[uid]
+            self._pending_release.discard(uid)
+            self.lifecycle.decommission(uid, self.now)
+            return self._noop_result()
+        victim = next(b for b in self._bins if b.uid == uid)
+        displaced_names = set(victim.members)
+        # No `preempt` here: the victim keeps serving its streams during
+        # the drain window — leaving the plan is what evacuates it.
+        self._bins = [b for b in self._bins if b.uid != uid]
         survivors = [s for s in self._streams if s.name not in displaced_names]
         displaced = [s for s in self._streams if s.name in displaced_names]
         new_streams = survivors + displaced
@@ -948,6 +1254,12 @@ class FleetController:
                 or self.lifecycle.record(event.uid).terminated_at is None
             ):
                 return event.uid
+            if event.uid in self._noticed and event.uid in self.lifecycle:
+                # Evacuated ahead of its announced kill: still draining,
+                # so the reclamation lands on the ledger record.
+                rec = self.lifecycle.record(event.uid)
+                if rec.terminated_at is None or rec.terminated_at > self.now:
+                    return event.uid
             return None
         spots = sorted(u for u, bt in alive.items() if bt.hazard > 0.0)
         scaled = event.draw * event.pool
@@ -1152,7 +1464,7 @@ class FleetController:
             key = (b.bin_type.name, frozenset(b.members.items()))
             b.uid = old.get(key, -1)
             if b.uid < 0:
-                b.uid = self._alloc_uid(b.bin_type)
+                b.uid, b.bin_type = self._alloc_uid(b.bin_type)
         self._bins = bins
 
     def _adopt_pinned_solution(
@@ -1171,13 +1483,8 @@ class FleetController:
         n_pinned = len(pinned_bins)
         bins = list(pinned_bins)
         for b in solution.bins[n_pinned:]:
-            bins.append(
-                _BinState(
-                    uid=self._alloc_uid(b.bin_type),
-                    bin_type=b.bin_type,
-                    members={},
-                )
-            )
+            uid, bin_type = self._alloc_uid(b.bin_type)
+            bins.append(_BinState(uid=uid, bin_type=bin_type, members={}))
         for a in solution.assignments:
             if a.item_index >= n_free:
                 continue  # ghost (pinned load) item

@@ -145,6 +145,13 @@ class InstanceRecord:
     draining_at: float | None = None
     terminated_at: float | None = None
     preempted_at: float | None = None
+    #: Set by `LifecycleEngine.notice`: the cloud warned at ``noticed_at``
+    #: that this instance dies at ``notice_deadline``.  A notice is not a
+    #: termination — the record keeps billing until decommissioned or
+    #: killed (a false alarm bills forever) — but a noticed instance
+    #: accepts no new placements.
+    noticed_at: float | None = None
+    notice_deadline: float | None = None
     #: (since, $/hr) rate segments, first entry at provisioned_at.  Price
     #: changes append here (`LifecycleEngine.reprice`) so billing stays
     #: causal: hours already billed keep the rate they were billed at.
@@ -164,8 +171,12 @@ class InstanceRecord:
 
         PROVISIONING instances accept (placements wait out the boot —
         that wait is the degraded window the autoscaler pre-provisions
-        away); DRAINING and TERMINATED ones never do.
+        away); DRAINING and TERMINATED ones never do, and neither does an
+        instance under an interruption notice — it is living on the
+        cloud's borrowed time.
         """
+        if self.noticed_at is not None and at >= self.noticed_at:
+            return False
         return self.state(at) in (
             InstanceState.PROVISIONING,
             InstanceState.RUNNING,
@@ -264,6 +275,32 @@ class LifecycleEngine:
         rec.terminated_at = end
         return rec
 
+    def notice(self, uid: int, at: float, deadline: float) -> InstanceRecord:
+        """Record a cloud interruption warning: ``uid`` dies at ``deadline``.
+
+        The record keeps billing — a notice is a warning, not a
+        termination, and a false alarm (notice never followed by a kill)
+        bills forever — but `InstanceRecord.accepting` turns False from
+        ``at`` so the controller drains ahead of the kill instead of
+        placing new work on doomed capacity.  Valid on an
+        already-DRAINING record (the warning just annotates the scheduled
+        retirement); re-noticing updates the deadline.
+        """
+        rec = self._records[uid]
+        if deadline < at or deadline != deadline:
+            raise ValueError(
+                f"notice deadline must be >= {at}, got {deadline}"
+            )
+        if rec.terminated_at is not None and rec.terminated_at <= at:
+            raise ValueError(
+                f"instance uid {uid} already terminated at "
+                f"t={rec.terminated_at}: cannot notice at t={at}"
+            )
+        if rec.noticed_at is None:
+            rec.noticed_at = at
+        rec.notice_deadline = deadline
+        return rec
+
     def preempt(self, uid: int, at: float) -> InstanceRecord:
         """Forcibly terminate an instance at ``at`` (a spot interruption).
 
@@ -273,11 +310,17 @@ class LifecycleEngine:
         planned migration's make-before-break hand-off).  Billing closes
         exactly as a `decommission` at the same instant would: the cloud's
         quantum rules still round the final partial quantum up.
+
+        A kill may land *inside* a scheduled drain window (the controller
+        evacuated a noticed instance, then the cloud reclaimed it before
+        the planned drain end): the future termination restates to ``at``
+        — no billed history is rewritten, the cancelled span had not
+        elapsed yet.  A termination already in the past still raises.
         """
         rec = self._records[uid]
-        if rec.terminated_at is not None:
+        if rec.terminated_at is not None and rec.terminated_at <= at:
             raise ValueError(f"instance uid {uid} already terminated")
-        rec.draining_at = at
+        rec.draining_at = at if rec.draining_at is None else min(rec.draining_at, at)
         rec.terminated_at = at
         rec.preempted_at = at
         return rec

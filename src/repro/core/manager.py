@@ -155,7 +155,12 @@ class ResourceManager:
                     by_type=kwargs.pop("billing_by_type", None),
                 )
             for key, value in kwargs.items():
-                if key in ("gap_threshold", "sub_max_nodes", "policy"):
+                if key in (
+                    "gap_threshold",
+                    "sub_max_nodes",
+                    "policy",
+                    "drain_on_notice",
+                ):
                     setattr(ctrl, key, value)
                 else:
                     raise TypeError(f"unknown controller option {key!r}")

@@ -36,6 +36,17 @@ Three concrete policies (plus the identity and a combinator):
   the next re-plan that opens a bin of that type consumes the spare's
   already-booted uid, and spares the forecast no longer wants are
   released.  Joins land on warm capacity instead of waiting out a boot.
+* `GracefulDegradationPolicy` — SLA-tiered load shedding.  When a storm
+  (preemption or reclamation notice) or a protected join leaves streams
+  placed on still-booting instances, it degrades the least-protected
+  running streams one rung down their `streams.SLATier` rate ladder
+  (`FleetController.set_stream_rung`) and asks the mechanism to re-home
+  the stranded victims into the freed warm residual (`try_migrate` — the
+  exact sub-solve is still the arbiter); parkable stranded victims park
+  as a last resort.  After ``restore_patience`` calm events it unparks
+  and restores rungs, most-protected first.  On a default-tier fleet
+  every ladder has one rung and nothing is parkable, so the policy is
+  exactly `PinningPolicy` — the bit-identity regression anchor.
 * `CompositePolicy` — folds several policies left to right (e.g.
   consolidate, then age prices, then attach autoscaling advice).
 
@@ -60,7 +71,14 @@ from .binpack.problem import InfeasibleError
 # Cycle-free: controller.py imports this module only lazily (inside
 # FleetController.__init__), so the gap helper is shared, not duplicated.
 from .controller import _gap
-from .streams import FleetEvent, StreamForecast, StreamSpec, forecast_cone
+from .streams import (
+    FleetEvent,
+    InstancePreempted,
+    InstancePreemptionNotice,
+    StreamForecast,
+    StreamSpec,
+    forecast_cone,
+)
 
 __all__ = [
     "ReplanPolicy",
@@ -69,6 +87,7 @@ __all__ = [
     "DualPriceAgingPolicy",
     "LookaheadAutoscaler",
     "ActingAutoscaler",
+    "GracefulDegradationPolicy",
     "CompositePolicy",
     "cheapest_provisioning_path",
     "spot_effective_cost",
@@ -484,7 +503,14 @@ class ActingAutoscaler(LookaheadAutoscaler):
         for uid, bt in mech.spares.items():
             held[bt.name] = held.get(bt.name, 0) + 1
             if held[bt.name] > (wanted[bt.name][1] if bt.name in wanted else 0):
-                mech.release_spare(uid)
+                # Deferred, not immediate: an immediate release races the
+                # rest of this replay step — a policy running after this
+                # one (or a re-plan it triggers, e.g. re-homing a storm's
+                # victims) could no longer consume the still-billed
+                # spare.  The controller flushes unconsumed marks at
+                # end-of-event, so the billed outcome is unchanged when
+                # nobody claims the spare.
+                mech.defer_release_spare(uid)
                 held[bt.name] -= 1
                 actions.append(f"autoscale:release:{bt.name}")
         for name, (bt, count) in wanted.items():
@@ -556,6 +582,205 @@ class ActingAutoscaler(LookaheadAutoscaler):
             slot = wanted.setdefault(bt.name, [bt, 0])
             slot[1] += 1
         return wanted
+
+
+@dataclasses.dataclass
+class GracefulDegradationPolicy(ReplanPolicy):
+    """SLA-tiered load shedding: degrade the expendable, re-home the rest.
+
+    Engages when the mechanism left *stranded* streams — displaced
+    streams placed on instances still booting (a preemption's victims, a
+    notice's evacuees, or a protected join that landed cold).  Under
+    storm pressure (any stranding after a preemption or notice, or a
+    rank-0 stream stranded by anything) it:
+
+    1. degrades the least-protected (highest tier rank) streams running
+       on *warm* instances one rung down their rate ladder, shrinking
+       their requirement vectors in place;
+    2. asks the mechanism to re-home the stranded victims
+       (`try_migrate`) — closing their fresh cold bins for the freed
+       warm residual certifies a strict saving, so the exact sub-solve
+       adopts it and the victims serve immediately;
+    3. repeats up to ``max_rounds`` times within a ``max_moves`` total
+       degradation budget, then parks still-stranded *parkable* victims
+       (they would sit dark through a boot anyway; parking closes their
+       cold bin and is charged as blackout against their own tier).
+
+    After ``restore_patience`` consecutive calm events (no storm, no
+    stranding) it restores service: unpark first, then lift rungs one
+    step, most-protected tiers first, under the same per-event budget.
+
+    Degradation never touches rank-0 (most protected) streams' rates —
+    their ladders are single-rung by construction — and the policy is an
+    exact no-op on default-tier fleets (nothing to degrade, nothing to
+    park), which is the PR-5 bit-identity regression anchor.
+    """
+
+    max_moves: int = 8  # degradation/restore budget per event
+    max_rounds: int = 3  # degrade -> re-home rounds per storm event
+    restore_patience: int = 2  # calm events before restoring service
+    park_stranded: bool = True  # park parkable victims still cold after shedding
+    _calm: int = dataclasses.field(default=0, init=False, repr=False)
+
+    def on_reset(self, mech, result):
+        self._calm = 0
+        return result
+
+    def on_event(self, mech, event, result):
+        storm = isinstance(
+            event, (InstancePreempted, InstancePreemptionNotice)
+        )
+        victims = set(result.displaced)
+        cold = self._cold_placed(mech, victims)
+        if cold and (
+            storm
+            or any(self._tier_of(mech, n).rank == 0 for n in cold)
+        ):
+            self._calm = 0
+            return self._shed(mech, result, victims, storm)
+        if storm or cold:
+            self._calm = 0
+            return result
+        self._calm += 1
+        if self._calm < self.restore_patience:
+            return result
+        return self._restore(mech, result)
+
+    # ------------------------------------------------------------- internals
+
+    def _tier_of(self, mech, name: str):
+        for s in mech.fleet:
+            if s.name == name:
+                return s.tier
+        return mech.parked[name].tier
+
+    def _cold_placed(self, mech, names: set) -> set:
+        """Which of ``names`` sit on instances still booting at ``now``."""
+        if not names or mech.plan is None:
+            return set()
+        uids = mech.instance_uids
+        eng = mech.lifecycle
+        out = set()
+        for p in mech.plan.placements:
+            if p.stream.name not in names:
+                continue
+            uid = uids[p.instance_index]
+            if uid in eng:
+                running = eng.record(uid).running_at
+            else:
+                # Opened this very step: the ledger sync (after the
+                # policy hook) will provision it now, booting from here.
+                running = mech.now + eng.billing_for(p.instance_type).boot_hours
+            if running > mech.now + _EPS:
+                out.add(p.stream.name)
+        return out
+
+    def _degrade_candidates(self, mech, exclude: set) -> list:
+        """Degradable streams on warm instances, least protected first.
+
+        Returns ``(name, next_rung)`` pairs ordered by tier rank
+        descending (shed BRONZE before SILVER), current rung ascending
+        (spread the pain before deepening it), then name.
+        """
+        rungs = mech.degraded_rungs
+        uids = mech.instance_uids
+        eng = mech.lifecycle
+        out = []
+        for p in mech.plan.placements:
+            s = p.stream
+            if s.name in exclude:
+                continue
+            cur = rungs.get(s.name, 0)
+            if cur + 1 >= len(s.tier.rate_ladder):
+                continue
+            uid = uids[p.instance_index]
+            if uid not in eng or eng.record(uid).running_at > mech.now + _EPS:
+                continue  # cold host: degrading frees nothing warm
+            out.append((-s.tier.rank, cur, s.name))
+        out.sort()
+        return [(name, cur + 1) for _, cur, name in out]
+
+    def _shed(self, mech, result, victims: set, storm: bool):
+        actions: list[str] = []
+        migrated = set(result.migrated)
+        lb, gap, nodes = result.lower_bound, result.gap, result.nodes
+        moves = 0
+        for _ in range(self.max_rounds):
+            cold = self._cold_placed(mech, victims)
+            if not cold or moves >= self.max_moves:
+                break
+            stepped = False
+            for name, rung in self._degrade_candidates(mech, victims):
+                if moves >= self.max_moves:
+                    break
+                r2 = mech.set_stream_rung(name, rung)
+                lb, gap, nodes = r2.lower_bound, r2.gap, nodes + r2.nodes
+                actions.append(f"degrade:{name}:{rung}")
+                moves += 1
+                stepped = True
+            if not stepped:
+                break
+            cold = sorted(self._cold_placed(mech, victims))
+            if not cold:
+                break
+            mig = mech.try_migrate(cold)
+            nodes += mig.nodes
+            if mig.accepted:
+                lb, gap = mig.lower_bound, mig.gap
+                migrated |= set(mig.migrated)
+                actions.append(f"rehome:{len(mig.migrated)}")
+        if self.park_stranded and storm:
+            for name in sorted(self._cold_placed(mech, victims)):
+                if not self._tier_of(mech, name).parkable:
+                    continue
+                r2 = mech.park_stream(name)
+                lb, gap, nodes = r2.lower_bound, r2.gap, nodes + r2.nodes
+                actions.append(f"park:{name}")
+        if not actions:
+            return result
+        return dataclasses.replace(
+            result,
+            plan=mech.plan,
+            migrated=tuple(sorted(migrated)),
+            lower_bound=lb,
+            gap=gap,
+            nodes=nodes,
+            actions=result.actions + tuple(actions),
+        )
+
+    def _restore(self, mech, result):
+        actions: list[str] = []
+        lb, gap, nodes = result.lower_bound, result.gap, result.nodes
+        budget = self.max_moves
+        for name in sorted(mech.parked):
+            if budget <= 0:
+                break
+            r2 = mech.unpark_stream(name)
+            lb, gap, nodes = r2.lower_bound, r2.gap, nodes + r2.nodes
+            actions.append(f"unpark:{name}")
+            budget -= 1
+        ranked = sorted(
+            mech.degraded_rungs.items(),
+            key=lambda kv: (self._tier_of(mech, kv[0]).rank, kv[0]),
+        )
+        for name, rung in ranked:
+            if budget <= 0:
+                break
+            r2 = mech.set_stream_rung(name, rung - 1)
+            lb, gap, nodes = r2.lower_bound, r2.gap, nodes + r2.nodes
+            actions.append(f"restore:{name}:{rung - 1}")
+            budget -= 1
+        if not actions:
+            return result
+        self._calm = 0
+        return dataclasses.replace(
+            result,
+            plan=mech.plan,
+            lower_bound=lb,
+            gap=gap,
+            nodes=nodes,
+            actions=result.actions + tuple(actions),
+        )
 
 
 class CompositePolicy(ReplanPolicy):

@@ -157,6 +157,7 @@ def simulate_churn(
     billing=None,
     billing_by_type=None,
     horizon: float | None = None,
+    drain_on_notice: bool | None = None,
 ) -> dict:
     """Replay a churn trace through the manager's live controller as a
     discrete-event simulation over the instance-lifecycle ledger.
@@ -195,6 +196,22 @@ def simulate_churn(
     and broken out separately as
     ``preemption_degraded_stream_seconds``, next to the ``preemptions``
     count off the ledger's ``preempted_at`` markers.
+
+    SLA accounting (zero-notice single-tier replays are unaffected):
+    ``blackout_stream_seconds`` totals the stream-seconds streams spend
+    fully dark — preemption waits, the *uncovered tail* of an
+    interruption-notice drain (the victim serves until its
+    ``terminated_at``; only the gap to the replacement's ``running_at``
+    is dark — zero when the notice window covers the boot, widened when
+    the paired kill lands *before* the scheduled drain end), parked
+    time, and un-park boot waits.  ``drain_on_notice=False`` replays a
+    naive controller that sits on notices until the kill.  Per-stream
+    blackout rolls up by `streams.SLATier` into ``sla`` (streams,
+    budget ``violations``, blackout / reduced-rate / parked exposure)
+    and ``sla_violations``; ``utility_penalty`` integrates each tier's
+    ``rung_penalty`` over reduced-rate hours plus ``blackout_penalty``
+    over blackout hours, pricing graceful degradation against blackout
+    in one scalar.
     """
     from .streams import InstancePreempted, TimedTrace
     from .strategies import ST3
@@ -212,13 +229,31 @@ def simulate_churn(
         kwargs["billing"] = billing
     if billing_by_type is not None:
         kwargs["billing_by_type"] = billing_by_type
+    if drain_on_notice is not None:
+        kwargs["drain_on_notice"] = drain_on_notice
     ctrl = manager.controller(strategy, **kwargs)
+    tiers: dict = {}  # stream name -> SLATier, sticky across removals
+
+    def note_tiers() -> None:
+        for s in ctrl.fleet:
+            tiers[s.name] = s.tier
+        for s in ctrl.parked.values():
+            tiers[s.name] = s.tier
+
     results = [ctrl.reset(initial_streams, at=0.0)]
     uid_steps = [ctrl.instance_uids]
     preempted_steps: list[tuple[str, ...]] = [()]
+    event_names = ["init"]
+    rung_steps = [ctrl.degraded_rungs]
+    park_steps = [ctrl.parked]
+    note_tiers()
     for ev in trace:
         results.append(ctrl.apply(ev))
         uid_steps.append(ctrl.instance_uids)
+        event_names.append(type(ev).__name__)
+        rung_steps.append(ctrl.degraded_rungs)
+        park_steps.append(ctrl.parked)
+        note_tiers()
         preempted_steps.append(
             results[-1].displaced if isinstance(ev, InstancePreempted) else ()
         )
@@ -233,12 +268,35 @@ def simulate_churn(
     rents: list[float] = []  # per step: true billed $/hr of the open fleet
     served: set = set()  # stream names that have been placed before
     degraded_until: dict = {}  # stream -> end of its already-charged wait
+    blackout_by: dict[str, float] = {}  # stream -> fully-dark hours
+    rung_hours_by: dict[str, float] = {}  # stream -> reduced-rate hours
+    parked_hours_by: dict[str, float] = {}  # stream -> parked hours
+    utility_penalty = 0.0
+    notice_tail_hours = 0.0
+    prev_uid_set: set[int] = set()
+    prev_host: dict[str, int] = {}
+
+    def charge_blackout(name: str, hours: float) -> None:
+        nonlocal utility_penalty
+        if hours <= 0.0:
+            return
+        blackout_by[name] = blackout_by.get(name, 0.0) + hours
+        tier = tiers.get(name)
+        if tier is not None:
+            utility_penalty += tier.blackout_penalty * hours
+
     for step, (r, uids, hit, t0, t1) in enumerate(
         zip(results, uid_steps, preempted_steps, times, ends)
     ):
         sim = simulate_plan(r.plan, profiles, target=target)
         if not sim["meets_target"]:
             misses += 1
+        rungs = rung_steps[step]
+        parked = park_steps[step]
+        unparked = {
+            a.split(":", 1)[1] for a in r.actions if a.startswith("unpark:")
+        }
+        step_notice_tail = 0.0
         # Stream-hours *new* streams spend waiting for their instance to
         # boot — the post-join degraded window pre-provisioned spares
         # eliminate.  Streams that merely migrate keep serving on their
@@ -253,11 +311,17 @@ def simulate_churn(
         # (``degraded_until`` clamps the start of each new charge).
         step_boot_wait = 0.0
         step_preempt_wait = 0.0
+        step_unpark_wait = 0.0
         hit_names = set(hit)
         for p in r.plan.placements:
             name = p.stream.name
             down_until = degraded_until.get(name, 0.0)
-            if name in hit_names or name not in served or down_until > t0:
+            if (
+                name in hit_names
+                or name in unparked
+                or name not in served
+                or down_until > t0
+            ):
                 # Fresh placements and preemption victims wait out their
                 # instance's boot; a stream *still* waiting one out
                 # (``down_until > t0``) that a re-plan moved to a
@@ -275,12 +339,71 @@ def simulate_churn(
                     degraded_until[name] = rec.running_at
                 if name in hit_names:
                     step_preempt_wait += wait
+                    charge_blackout(name, wait)
+                elif name in unparked:
+                    # An un-parked stream was dark while parked and stays
+                    # dark until its new instance serves — its boot wait
+                    # is blackout, not a mere degraded join.
+                    step_unpark_wait += wait
+                    charge_blackout(name, wait)
                 else:
                     step_boot_wait += wait
         served.update(p.stream.name for p in r.plan.placements)
-        step_boot_wait += step_preempt_wait
-        degraded_hours += step_boot_wait
+        # Notice-drain tails: a victim evacuated on an interruption
+        # notice keeps serving its old streams until its ``terminated_at``
+        # (make-before-break against the clock); only the gap from that
+        # end to the replacement's ``running_at`` is dark.  With a notice
+        # window longer than the boot the tail is zero — the conversion
+        # the drain buys.  ``terminated_at`` is read from the *final*
+        # ledger, so a paired kill that lands before the scheduled drain
+        # end (restating the termination backwards) widens the tail
+        # charged here — up-front charging, consistent with how boot
+        # waits are assessed at placement time and never refunded.
+        cur_uid_set = set(uids)
+        step_notice_victims = 0
+        for vuid in prev_uid_set - cur_uid_set:
+            if vuid not in ledger:
+                continue
+            vrec = ledger.record(vuid)
+            if (
+                vrec.noticed_at is None
+                or vrec.noticed_at != r.at
+                or vrec.terminated_at is None
+            ):
+                continue
+            step_notice_victims += 1
+            planned_end = vrec.terminated_at
+            for p in r.plan.placements:
+                name = p.stream.name
+                if prev_host.get(name) != vuid:
+                    continue
+                repl_running = ledger.record(uids[p.instance_index]).running_at
+                start = max(planned_end, degraded_until.get(name, 0.0))
+                tail = max(0.0, repl_running - start)
+                if tail > 0.0:
+                    degraded_until[name] = repl_running
+                    step_notice_tail += tail
+                    charge_blackout(name, tail)
+        prev_uid_set = cur_uid_set
+        prev_host = {
+            p.stream.name: uids[p.instance_index]
+            for p in r.plan.placements
+        }
+        # Parked streams are fully dark for the whole step interval;
+        # reduced-rate streams accrue rung-weighted utility penalty.
+        dt = t1 - t0
+        for name in parked:
+            parked_hours_by[name] = parked_hours_by.get(name, 0.0) + dt
+            charge_blackout(name, dt)
+        for name, rung in rungs.items():
+            rung_hours_by[name] = rung_hours_by.get(name, 0.0) + dt
+            tier = tiers.get(name)
+            if tier is not None:
+                utility_penalty += tier.rung_penalty * rung * dt
+        step_boot_wait += step_preempt_wait + step_unpark_wait
+        degraded_hours += step_boot_wait + step_notice_tail
         preempt_degraded_hours += step_preempt_wait
+        notice_tail_hours += step_notice_tail
         rents.append(
             sum(b.bin_type.billed_rent for b in r.plan.solution.bins)
         )
@@ -288,6 +411,7 @@ def simulate_churn(
             {
                 "step": step,
                 "at": t0,
+                "event": event_names[step],
                 "mode": r.mode,
                 # `cost` is the plan's *decision* cost (the solver
                 # objective — hazard-inflated under a risk-adjusted
@@ -302,7 +426,12 @@ def simulate_churn(
                 "streams": len(r.plan.placements),
                 "migrations": len(r.migrated),
                 "boot_wait_stream_hours": step_boot_wait,
+                "notice_tail_stream_hours": step_notice_tail,
+                "notice_victims": step_notice_victims,
                 "preempted_streams": list(hit),
+                "displaced": list(r.displaced),
+                "parked": len(parked),
+                "degraded_streams": len(rungs),
                 "performance": sim["overall_performance"],
                 "fragmentation": sim["fragmentation"]["overall"],
                 "actions": list(r.actions),
@@ -321,6 +450,29 @@ def simulate_churn(
         sum(c * (t1 - t0) for c, t0, t1 in zip(rents, times, ends))
     )
     billed = ledger.billed_cost(max(horizon, times[-1]))
+    # Per-tier SLA rollup: every stream that ever existed counts against
+    # its tier (removal does not forgive an already-blown budget).
+    sla: dict[str, dict] = {}
+    sla_violations = 0
+    for name, tier in sorted(tiers.items()):
+        bucket = sla.setdefault(
+            tier.name,
+            {
+                "streams": 0,
+                "violations": 0,
+                "blackout_stream_seconds": 0.0,
+                "rung_stream_hours": 0.0,
+                "parked_stream_hours": 0.0,
+            },
+        )
+        bucket["streams"] += 1
+        dark_s = blackout_by.get(name, 0.0) * 3600.0
+        bucket["blackout_stream_seconds"] += dark_s
+        bucket["rung_stream_hours"] += rung_hours_by.get(name, 0.0)
+        bucket["parked_stream_hours"] += parked_hours_by.get(name, 0.0)
+        if dark_s > tier.blackout_budget_s:
+            bucket["violations"] += 1
+            sla_violations += 1
     return {
         "timeline": timeline,
         "mean_cost": float(np.mean(costs)) if costs else 0.0,
@@ -347,6 +499,12 @@ def simulate_churn(
             1 for rec in ledger.records() if rec.preempted_at is not None
         ),
         "preemption_degraded_stream_seconds": preempt_degraded_hours * 3600.0,
+        # ---- SLA tiers & graceful degradation (zero without tiers) ----
+        "blackout_stream_seconds": float(sum(blackout_by.values())) * 3600.0,
+        "notice_tail_stream_seconds": notice_tail_hours * 3600.0,
+        "utility_penalty": utility_penalty,
+        "sla": sla,
+        "sla_violations": sla_violations,
         "instance_records": [
             {
                 "uid": rec.uid,

@@ -11,6 +11,26 @@ events leave the stream list untouched), and `fleet_key` is the
 canonical order-insensitive fingerprint used to detect no-op transitions
 and key re-plan caches.
 
+QoS is first-class: every stream carries an `SLATier` — a service
+contract naming its protection rank, its legal frame-rate ladder
+(descending fractions of the nominal rate the allocator may degrade it
+to, paper-style 30→15→5 FPS), its blackout budget (SLA-violation
+threshold on service-interruption seconds), and the dollar penalties the
+simulator accrues per degraded rung-hour and blackout-hour.  The default
+tier (`DEFAULT_TIER`) is inert — no ladder, no budgets, no penalties —
+so single-tier fleets replay bit-identically to the pre-tier controller.
+
+Real clouds warn before reclaiming spot capacity:
+`InstancePreemptionNotice` is that warning (same sampled-victim form as
+`InstancePreempted`, plus a reclamation ``deadline``), and a
+``notice_id`` links a notice to its follow-up kill so the pair targets
+the *same* instance across policies that do and do not act on notices.
+`storm_trace` composes seeded correlated-failure scenarios
+(`StormPhase`: whole-pool reclamation, notice-then-kill waves, price
+spikes, flash-crowd joins) over a background churn trace — the
+fault-injection harness `benchmarks/storms.py` replays identically
+across policies.
+
 For the policy layer's lookahead autoscaler, `StreamForecast` describes a
 short-horizon join/leave forecast and `forecast_cone` expands it into the
 lattice of hypothetical fleets (every prefix of joins crossed with every
@@ -35,18 +55,26 @@ __all__ = [
     "StreamSpec",
     "AnalysisProgram",
     "COMMON_FRAME_SIZES",
+    "SLATier",
+    "DEFAULT_TIER",
+    "GOLD",
+    "SILVER",
+    "BRONZE",
     "FleetEvent",
     "StreamAdded",
     "StreamRemoved",
     "StreamRateChanged",
     "PriceChanged",
     "InstancePreempted",
+    "InstancePreemptionNotice",
     "apply_events",
     "fleet_key",
     "StreamForecast",
     "forecast_cone",
     "TimedTrace",
     "synthetic_timed_trace",
+    "StormPhase",
+    "storm_trace",
 ]
 
 
@@ -86,6 +114,84 @@ class AnalysisProgram:
 
 
 @dataclasses.dataclass(frozen=True)
+class SLATier:
+    """A stream's service contract: protection rank, rate ladder, budgets.
+
+    ``rank`` orders tiers by protection: 0 is the most protected; under
+    pressure the allocator sheds the *highest* rank first.  The
+    ``rate_ladder`` lists the legal service levels as descending fractions
+    of the stream's nominal frame rate — rung 0 is always full rate
+    (``1.0``); e.g. ``(1.0, 0.5, 1/6)`` is the paper-style 30→15→5 FPS
+    ladder for a 30 FPS stream.  A one-rung ladder means the stream may
+    never be degraded.
+
+    ``blackout_budget_s`` is the SLA: the cumulative *blackout* (service
+    fully interrupted — preemption gaps, uncovered notice tails, parked
+    time) a stream may suffer over a trace before it counts as an SLA
+    violation.  ``rung_penalty`` and ``blackout_penalty`` are the utility
+    penalties (`$`/stream-hour per rung below full, and `$`/stream-hour
+    dark) `core.simulator.simulate_churn` accrues, making its output a
+    cost-vs-QoS pair rather than a single billed number.  ``parkable``
+    tiers may be taken off the fleet entirely (parked) as a last resort.
+    """
+
+    name: str
+    rank: int
+    rate_ladder: tuple[float, ...] = (1.0,)
+    blackout_budget_s: float = float("inf")
+    rung_penalty: float = 0.0
+    blackout_penalty: float = 0.0
+    parkable: bool = False
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "rate_ladder", tuple(self.rate_ladder))
+        if self.rank < 0:
+            raise ValueError(f"tier {self.name}: rank must be >= 0")
+        if not self.rate_ladder or self.rate_ladder[0] != 1.0:
+            raise ValueError(
+                f"tier {self.name}: rate ladder must start at full rate (1.0)"
+            )
+        for lo, hi in zip(self.rate_ladder[1:], self.rate_ladder):
+            if not 0.0 < lo < hi:
+                raise ValueError(
+                    f"tier {self.name}: ladder must be strictly decreasing "
+                    f"and positive, got {self.rate_ladder}"
+                )
+        if self.blackout_budget_s < 0 or self.blackout_budget_s != self.blackout_budget_s:
+            raise ValueError(f"tier {self.name}: blackout budget must be >= 0")
+        if self.rung_penalty < 0 or self.blackout_penalty < 0:
+            raise ValueError(f"tier {self.name}: penalties must be >= 0")
+
+
+#: Inert contract: no ladder, no budget, no penalties.  Fleets left on the
+#: default tier replay bit-identically to the pre-tier controller.
+DEFAULT_TIER = SLATier("STANDARD", rank=1)
+
+#: Never degraded; tight blackout budget (one cold boot fits, two do not).
+GOLD = SLATier(
+    "GOLD", rank=0, blackout_budget_s=150.0, blackout_penalty=60.0
+)
+#: May halve its rate; generous blackout budget.
+SILVER = SLATier(
+    "SILVER",
+    rank=1,
+    rate_ladder=(1.0, 0.5),
+    blackout_budget_s=600.0,
+    rung_penalty=2.0,
+    blackout_penalty=25.0,
+)
+#: Full 30→15→5-style ladder, unbounded budget, parkable as a last resort.
+BRONZE = SLATier(
+    "BRONZE",
+    rank=2,
+    rate_ladder=(1.0, 0.5, 1.0 / 6.0),
+    rung_penalty=0.5,
+    blackout_penalty=8.0,
+    parkable=True,
+)
+
+
+@dataclasses.dataclass(frozen=True)
 class StreamSpec:
     """A network-camera stream to be analyzed (paper Fig. 2 inputs)."""
 
@@ -93,6 +199,7 @@ class StreamSpec:
     program: AnalysisProgram
     desired_fps: float
     frame_size: FrameSize = COMMON_FRAME_SIZES[0]
+    tier: SLATier = DEFAULT_TIER
 
     def __post_init__(self) -> None:
         if self.desired_fps <= 0:
@@ -187,6 +294,7 @@ class InstancePreempted(FleetEvent):
     draw: float = dataclasses.field(default=0.0, kw_only=True)
     pool: int = dataclasses.field(default=1, kw_only=True)
     hazard_ref: float = dataclasses.field(default=0.0, kw_only=True)
+    notice_id: int = dataclasses.field(default=-1, kw_only=True)
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -201,6 +309,61 @@ class InstancePreempted(FleetEvent):
         if self.hazard_ref < 0 or self.hazard_ref != self.hazard_ref:
             raise ValueError(
                 f"preemption hazard_ref must be >= 0, got {self.hazard_ref}"
+            )
+        if self.notice_id < -1:
+            raise ValueError(
+                f"notice_id must be >= 0 (or -1 = unannounced), got {self.notice_id}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class InstancePreemptionNotice(FleetEvent):
+    """The cloud's reclamation warning: this instance dies at ``deadline``.
+
+    Same victim-selection form as `InstancePreempted` (explicit ``uid`` or
+    seeded thinning via ``draw``/``pool``/``hazard_ref``), but the
+    instance keeps running until ``deadline`` (hours, absolute; must be at
+    or after ``at``).  A draining controller evacuates the victim inside
+    the window — make-before-break — converting what would have been a
+    preemption blackout into an ordinary double-billed migration; a naive
+    controller ignores the warning and eats the blackout when the kill
+    lands.
+
+    ``notice_id`` pairs the warning with its follow-up
+    `InstancePreempted(notice_id=...)` so both target the *same* resolved
+    instance at replay time regardless of what the policy did in between
+    (and a kill whose notice missed — or was a false alarm that never
+    fires — stays a no-op).  A notice is never itself a termination: an
+    instance noticed but never killed keeps billing.
+    """
+
+    uid: int = -1
+    deadline: float = dataclasses.field(default=0.0, kw_only=True)
+    draw: float = dataclasses.field(default=0.0, kw_only=True)
+    pool: int = dataclasses.field(default=1, kw_only=True)
+    hazard_ref: float = dataclasses.field(default=0.0, kw_only=True)
+    notice_id: int = dataclasses.field(default=-1, kw_only=True)
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.uid < -1:
+            raise ValueError(
+                f"notice uid must be >= 0 (or -1 = sampled), got {self.uid}"
+            )
+        if self.deadline < self.at or self.deadline != self.deadline:
+            raise ValueError(
+                f"notice deadline must be >= event time {self.at}, "
+                f"got {self.deadline}"
+            )
+        if not 0.0 <= self.draw < 1.0:
+            raise ValueError(f"notice draw must be in [0, 1), got {self.draw}")
+        if self.pool < 1:
+            raise ValueError(f"notice pool must be >= 1, got {self.pool}")
+        if self.hazard_ref < 0 or self.hazard_ref != self.hazard_ref:
+            raise ValueError(f"notice hazard_ref must be >= 0, got {self.hazard_ref}")
+        if self.notice_id < -1:
+            raise ValueError(
+                f"notice_id must be >= 0 (or -1 = unpaired), got {self.notice_id}"
             )
 
 
@@ -230,7 +393,9 @@ def apply_events(
                 raise KeyError(f"no stream named {ev.name!r}")
             fleet = [s for s in fleet if s.name != ev.name]
             fleet.append(dataclasses.replace(hit[0], desired_fps=ev.desired_fps))
-        elif isinstance(ev, (PriceChanged, InstancePreempted)):
+        elif isinstance(
+            ev, (PriceChanged, InstancePreempted, InstancePreemptionNotice)
+        ):
             pass  # instance-side events; the controller folds them in
         else:
             raise TypeError(f"unknown fleet event {ev!r}")
@@ -437,6 +602,139 @@ def synthetic_timed_trace(
         # Stable merge: churn events keep their relative order at ties.
         events = sorted(events + shocks, key=lambda ev: ev.at)
     return TimedTrace(events=tuple(events), horizon=horizon)
+
+
+_STORM_KINDS = ("reclaim", "notice", "false_alarm", "flash_crowd", "price")
+
+
+@dataclasses.dataclass(frozen=True)
+class StormPhase:
+    """One correlated-failure wave inside a `storm_trace` scenario.
+
+    ``kind`` selects the wave shape: ``"reclaim"`` is ``count`` sampled
+    no-warning kills at ``at``; ``"notice"`` is ``count`` reclamation
+    warnings at ``at`` each paired (by ``notice_id``) with a kill at
+    ``at + notice_hours``; ``"false_alarm"`` is warnings that never fire;
+    ``"flash_crowd"`` is ``count`` simultaneous joins; ``"price"``
+    re-prices ``instance_type`` to ``cost``.
+    """
+
+    kind: str
+    at: float
+    count: int = 1
+    notice_hours: float = 2.5 / 60.0
+    instance_type: str = ""
+    cost: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in _STORM_KINDS:
+            raise ValueError(f"unknown storm phase kind {self.kind!r}")
+        if self.at < 0 or self.at != self.at:
+            raise ValueError(f"storm phase time must be >= 0, got {self.at}")
+        if self.count < 1:
+            raise ValueError(f"storm phase count must be >= 1, got {self.count}")
+        if self.notice_hours < 0:
+            raise ValueError(f"notice_hours must be >= 0, got {self.notice_hours}")
+        if self.kind == "price" and not self.instance_type:
+            raise ValueError("price phase needs an instance_type")
+        if self.cost < 0:
+            raise ValueError(f"storm phase cost must be >= 0, got {self.cost}")
+
+
+def storm_trace(
+    streams: Sequence[StreamSpec],
+    rng,
+    *,
+    phases: Sequence[StormPhase],
+    n_background: int = 0,
+    mean_gap_hours: float = 0.05,
+    p_join: float = 0.3,
+    p_leave: float = 0.25,
+    make_join: "Callable[[int], StreamSpec] | None" = None,
+    rerate_fps: "Callable[[StreamSpec], Sequence[float]] | None" = None,
+    hazard_pool: int = 64,
+    hazard_ref: float = 0.0,
+    tail_hours: float | None = None,
+) -> TimedTrace:
+    """Compose a seeded fault-injection storm over a background churn trace.
+
+    The background join/leave/re-rate stream is generated first via
+    `synthetic_timed_trace` (``n_background`` events, no hazard overlay),
+    then each `StormPhase` injects its correlated wave; the merge is a
+    stable sort by timestamp, so the same seed always yields the same
+    trace and every policy replayed on it sees the identical sequence.
+    Phase draws come from the same ``rng`` *after* the background churn,
+    so two scenarios differing only in phases share their background.
+
+    ``flash_crowd`` joins use ``make_join`` (required for that kind) with
+    indices continuing after the background joins, so names never collide.
+    Notice/kill pairs share a ``notice_id``: the kill resolves against
+    whatever instance the notice hit, keeping notice-then-kill semantics
+    identical across draining and non-draining controllers.
+    """
+    bg = synthetic_timed_trace(
+        streams,
+        rng,
+        n_events=n_background,
+        mean_gap_hours=mean_gap_hours,
+        p_join=p_join,
+        p_leave=p_leave,
+        make_join=make_join,
+        rerate_fps=rerate_fps,
+        tail_hours=0.0,
+    )
+    events = list(bg.events)
+    join_index = sum(1 for ev in events if isinstance(ev, StreamAdded))
+    notice_id = 0
+    injected: list[FleetEvent] = []
+    last = max((ev.at for ev in events), default=0.0)
+    for phase in phases:
+        last = max(last, phase.at)
+        if phase.kind == "flash_crowd":
+            if make_join is None:
+                raise ValueError("flash_crowd phase needs make_join")
+            for _ in range(phase.count):
+                injected.append(StreamAdded(make_join(join_index), at=phase.at))
+                join_index += 1
+        elif phase.kind == "price":
+            injected.append(
+                PriceChanged(phase.instance_type, phase.cost, at=phase.at)
+            )
+        elif phase.kind == "reclaim":
+            for _ in range(phase.count):
+                injected.append(
+                    InstancePreempted(
+                        at=phase.at,
+                        draw=float(rng.rand()),
+                        pool=hazard_pool,
+                        hazard_ref=hazard_ref,
+                    )
+                )
+        else:  # "notice" | "false_alarm"
+            deadline = phase.at + phase.notice_hours
+            last = max(last, deadline)
+            for _ in range(phase.count):
+                draw = float(rng.rand())
+                injected.append(
+                    InstancePreemptionNotice(
+                        at=phase.at,
+                        deadline=deadline,
+                        draw=draw,
+                        pool=hazard_pool,
+                        hazard_ref=hazard_ref,
+                        notice_id=notice_id,
+                    )
+                )
+                if phase.kind == "notice":
+                    injected.append(
+                        InstancePreempted(at=deadline, notice_id=notice_id)
+                    )
+                notice_id += 1
+    merged = sorted(events + injected, key=lambda ev: ev.at)
+    horizon = last + (
+        tail_hours if tail_hours is not None else 2.0 * mean_gap_hours
+    )
+    return TimedTrace(events=tuple(merged), horizon=horizon)
 
 
 def fleet_key(streams: Sequence[StreamSpec]) -> tuple[StreamSpec, ...]:

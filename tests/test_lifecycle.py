@@ -211,8 +211,8 @@ def test_alloc_uid_prefers_booted_spare_over_provisioning():
     ctrl._spares = {cold: ctrl._spares[cold], warm: ctrl._spares[warm]}
     assert ctrl.lifecycle.state(cold, 0.5).value == "provisioning"
     assert ctrl.lifecycle.state(warm, 0.5).value == "running"
-    assert ctrl._alloc_uid(bt) == warm  # earliest running_at wins
-    assert ctrl._alloc_uid(bt) == cold  # then the booting one
+    assert ctrl._alloc_uid(bt) == (warm, bt)  # earliest running_at wins
+    assert ctrl._alloc_uid(bt) == (cold, bt)  # then the booting one
     assert not ctrl.spares
 
 
@@ -593,3 +593,92 @@ def test_acting_autoscaler_releases_stale_spares():
     assert any(a.startswith("autoscale:release") for a in r.actions)
 
 
+
+
+# --------------------------------------------- interruption notices (PR 6)
+
+
+def test_notice_marks_non_accepting_keeps_billing():
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    eng.notice(1, 0.5, 0.9)
+    rec = eng.record(1)
+    assert rec.noticed_at == 0.5 and rec.notice_deadline == 0.9
+    assert rec.accepting(0.4)  # before the warning: business as usual
+    assert not rec.accepting(0.5)  # from the warning on: doomed capacity
+    assert eng.state(1, 0.7) is InstanceState.RUNNING  # but still serving
+    # A notice is not a termination: billing is identical to an
+    # un-noticed twin at any horizon.
+    eng.provision(2, "c4.2xlarge", 1.0, at=0.0)
+    for h in (0.6, 1.0, 5.0):
+        assert eng.billed_instance(1, h) == eng.billed_instance(2, h)
+
+
+def test_notice_validation():
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    with pytest.raises(ValueError):
+        eng.notice(1, 1.0, 0.5)  # deadline before the warning
+    with pytest.raises(ValueError):
+        eng.notice(1, 1.0, float("nan"))
+    eng.decommission(1, 2.0)
+    with pytest.raises(ValueError):
+        eng.notice(1, 3.0, 4.0)  # already terminated
+    eng.provision(2, "c4.2xlarge", 1.0, at=0.0)
+    eng.notice(2, 0.5, 0.9)
+    eng.notice(2, 0.6, 1.1)  # re-notice: first warning time sticks,
+    rec = eng.record(2)  # the deadline updates
+    assert rec.noticed_at == 0.5 and rec.notice_deadline == 1.1
+
+
+def test_notice_kill_deadline_straddles_quantum_boundary():
+    # The kill bills exactly like a decommission at the same instant:
+    # a deadline just before / at / just after the hourly boundary
+    # rounds to 1, 1, and 2 billed hours respectively.
+    for deadline, quanta in ((0.9, 1.0), (1.0, 1.0), (1.1, 2.0)):
+        eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+        eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+        eng.notice(1, 0.5, deadline)
+        eng.preempt(1, deadline)
+        assert eng.billed_instance(1, 10.0) == pytest.approx(quanta), deadline
+
+
+def test_notice_on_draining_record_annotates_retirement():
+    # A warning may land on an instance already scheduled to retire: it
+    # only annotates — the planned drain end stands until a kill moves it.
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    eng.decommission(1, 0.5, drain_until=1.5)
+    eng.notice(1, 0.8, 1.2)
+    rec = eng.record(1)
+    assert rec.noticed_at == 0.8
+    assert rec.terminated_at == 1.5  # notice never terminates
+    assert not rec.accepting(0.9)  # DRAINING was already non-accepting
+    eng.preempt(1, 1.2)  # the announced kill: restates the future end
+    assert rec.terminated_at == 1.2
+    assert rec.draining_at == 0.5  # drain start is history, untouched
+
+
+def test_early_kill_inside_drain_window_restates_future_end():
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    eng.decommission(1, 0.5, drain_until=2.0)
+    eng.preempt(1, 1.0)  # cloud reclaims mid-drain
+    rec = eng.record(1)
+    assert rec.terminated_at == 1.0 and rec.preempted_at == 1.0
+    assert rec.draining_at == 0.5
+    assert eng.billed_instance(1, 10.0) == pytest.approx(1.0)
+    # A termination already in the past still refuses to restate.
+    with pytest.raises(ValueError):
+        eng.preempt(1, 3.0)
+
+
+def test_false_alarm_notice_bills_forever():
+    # A notice never followed by its kill is a false alarm: the instance
+    # keeps serving and keeps billing, quantum after quantum.
+    eng = LifecycleEngine(BillingModel(quantum_hours=1.0))
+    eng.provision(1, "c4.2xlarge", 1.0, at=0.0)
+    eng.notice(1, 0.5, 0.9)
+    assert eng.record(1).terminated_at is None
+    assert eng.billed_instance(1, 0.9) == pytest.approx(1.0)
+    assert eng.billed_instance(1, 7.5) == pytest.approx(8.0)
