@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
                        all-on-demand on a preemption-heavy trace
   storm              — fault-injection storms: SLA tiers, graceful frame-rate
                        degradation, interruption-notice draining
+  shard              — hierarchical sharded controller: 20k-stream replay,
+                       vmapped per-cell batched repair, flat-infeasibility
+                       probe, cost parity vs the flat controller
   roofline_report    — §Roofline table from dry-run artifacts
 
 Suites that emit a gated artifact (``churn_replan`` → ``BENCH_replan.json``,
@@ -28,6 +31,7 @@ import argparse
 import pathlib
 import subprocess
 import sys
+import time
 import traceback
 
 #: suite name -> artifact its run() emits, gated by scripts/check_bench.py.
@@ -37,6 +41,7 @@ GATED_ARTIFACTS = {
     "lifecycle": "BENCH_lifecycle.json",
     "spot": "BENCH_spot.json",
     "storm": "BENCH_storm.json",
+    "shard": "BENCH_shard.json",
 }
 
 
@@ -57,6 +62,7 @@ def main() -> None:
         fig6_streams,
         lifecycle,
         roofline_report,
+        shard,
         solver_scaling,
         spot,
         storms,
@@ -80,18 +86,23 @@ def main() -> None:
         "lifecycle": lifecycle,
         "spot": spot,
         "storm": storms,
+        "shard": shard,
         "roofline": roofline_report,
     }
     selected = args.only or list(suites)
     print("name,us_per_call,derived")
     failed = []
     for name in selected:
+        t0 = time.perf_counter()
         try:
             suites[name].run()
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
             continue
+        finally:
+            wall = time.perf_counter() - t0
+            print(f"[wall] {name}: {wall:.1f}s", file=sys.stderr)
         artifact = GATED_ARTIFACTS.get(name)
         if artifact and not args.no_gate:
             gate = pathlib.Path(__file__).parent.parent / "scripts" / "check_bench.py"

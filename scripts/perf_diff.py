@@ -22,7 +22,9 @@ Handles two artifact shapes:
     and risk-aware savings) likewise get a dedicated section, as do the
     storm-harness SLA metrics (BENCH_storm.json's blackout stream-second
     splits, notice-conversion rate, utility penalties, and per-tier
-    violation counts).
+    violation counts) and the sharded-controller scaling metrics
+    (BENCH_shard.json's per-event latencies, vmap-repair speedup, and
+    flat-vs-sharded cost parity).
 """
 import json
 import sys
@@ -58,6 +60,17 @@ _STORM_PREFIXES = (
 )
 
 
+# Sharded-controller scaling metrics (BENCH_shard.json).
+_SHARD_PREFIXES = (
+    "sharded_",
+    "vmap_repair_",
+    "flat_vs_sharded",
+    "mean_warm_event",
+    "single_cell_cost",
+    "cost_ratio_n500",
+)
+
+
 def _is_billed_key(k: str) -> bool:
     return k.startswith("billed_") or k.startswith("degraded_seconds")
 
@@ -68,6 +81,10 @@ def _is_spot_key(k: str) -> bool:
 
 def _is_storm_key(k: str) -> bool:
     return k.startswith(_STORM_PREFIXES)
+
+
+def _is_shard_key(k: str) -> bool:
+    return k.startswith(_SHARD_PREFIXES)
 
 
 def _diff_section(a: dict, b: dict, predicate, label: str, fmt) -> None:
@@ -111,6 +128,14 @@ def diff_storm(a: dict, b: dict) -> None:
     _diff_section(a, b, _is_storm_key, "storm/SLA metric", fmt)
 
 
+def diff_shard(a: dict, b: dict) -> None:
+    def fmt(k, x, y, d):
+        unit = "s" if k.endswith("_s") else " "
+        return f"{x:11.4g}{unit} {y:11.4g}{unit} {d:+8.1%}"
+
+    _diff_section(a, b, _is_shard_key, "shard scaling metric", fmt)
+
+
 def diff_billed(a: dict, b: dict) -> None:
     def fmt(k, x, y, d):
         unit = "s" if k.startswith("degraded") else "$"
@@ -123,6 +148,7 @@ def diff_meta(a: dict, b: dict) -> None:
     diff_billed(a, b)
     diff_spot(a, b)
     diff_storm(a, b)
+    diff_shard(a, b)
     am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
         k
@@ -130,6 +156,7 @@ def diff_meta(a: dict, b: dict) -> None:
         if not _is_billed_key(k)
         and not _is_spot_key(k)
         and not _is_storm_key(k)
+        and not _is_shard_key(k)
         and (
             isinstance(am.get(k), (int, float))
             or isinstance(bm.get(k), (int, float))

@@ -69,6 +69,7 @@ __all__ = [
     "best_fit_decreasing_jax",
     "pack_jax",
     "batched_fleet_costs",
+    "batched_pack",
     "placement_scores",
     "placement_scores_np",
     "evacuation_scores",
@@ -76,6 +77,10 @@ __all__ = [
 ]
 
 _FIT_EPS = 1e-9  # absolute slack on capacity comparisons
+#: Candidate-matrix size (k * C * P) below which `placement_scores` runs
+#: the numpy kernel: eager-JAX dispatch plus per-shape recompilation
+#: costs more than the broadcast until roughly this many candidates.
+_XLA_MIN_CANDIDATES = 1 << 20
 _FRAC_EPS = 1e-12  # relative slack on utilization fractions
 
 
@@ -116,6 +121,13 @@ def open_cost_score(costs, frac):
 
 
 def _pack(problem: Problem, best_fit: bool) -> Solution:
+    placements, opened = _pack_raw(problem, best_fit)
+    return build_solution(problem, placements, opened)
+
+
+def _pack_raw(problem: Problem, best_fit: bool):
+    """The FFD/BFD decision pass alone: (placements, opened) triples,
+    without materializing (and validating) a `Solution`."""
     t = problem.tensors()
     n = len(problem.items)
     dim = problem.dim
@@ -178,7 +190,7 @@ def _pack(problem: Problem, best_fit: bool) -> Solution:
         placements.append((item_i, choice_i, n_open))
         n_open += 1
 
-    return build_solution(problem, placements, opened)
+    return placements, opened
 
 
 def first_fit_decreasing(problem: Problem) -> Solution:
@@ -334,11 +346,29 @@ def batched_fleet_costs(
             [_pack(p, best_fit).cost for p in problems], dtype=np.float64
         )
     ts = [p.tensors() for p in problems]
+    reqs, masks, scores, orders = _pad_fleets(problems, ts)
+    with enable_x64():
+        _recs, _n_open, costs = _batched_kernel(best_fit)(
+            reqs, masks, scores, orders, ts[0].caps, ts[0].costs
+        )
+        return np.asarray(costs, dtype=np.float64)
+
+
+def _pad_fleets(problems, ts):
+    """Pad many fleets' tensors to common (n, C) for `_batched_kernel`.
+
+    The shared padding contract of `batched_fleet_costs` and
+    `batched_pack`: +inf-padded requirements, all-False choice-mask rows
+    for padding items (the kernel skips them), per-fleet FFD orders with
+    identity tails, and a shared catalog (validated).
+    """
     for p, t in zip(problems, ts):
         _check_feasible(p, t)
-        assert np.array_equal(t.caps, ts[0].caps) and np.array_equal(
-            t.costs, ts[0].costs
-        ), "batched_fleet_costs requires a shared catalog"
+        if not (
+            np.array_equal(t.caps, ts[0].caps)
+            and np.array_equal(t.costs, ts[0].costs)
+        ):
+            raise ValueError("batched packing requires a shared catalog")
     n_max = max(t.req.shape[0] for t in ts)
     c_max = max(t.req.shape[1] for t in ts)
     n_bt, dim = ts[0].caps.shape[0], ts[0].caps.shape[1]
@@ -355,11 +385,62 @@ def batched_fleet_costs(
         # Padding items processed last, as no-ops (all-False mask).
         orders[b, :n] = order
         orders[b, n:] = np.arange(n, n_max)
+    return reqs, masks, scores, orders
+
+
+def batched_pack(
+    problems: "list[Problem]", *, best_fit: bool = False
+) -> "list[Solution]":
+    """Full FFD/BFD packings of many fleets in ONE vmapped dispatch.
+
+    Where `batched_fleet_costs` only keeps the scalar cost, this decodes
+    the kernel's per-step records into a validated `Solution` per fleet —
+    placements are bit-equivalent to running the numpy `_pack` on each
+    fleet separately, so a sharded controller can adopt them directly.
+    Same padding contract as `batched_fleet_costs` (shared catalog
+    asserted); falls back to the per-fleet numpy loop without JAX.
+    """
+    return [
+        build_solution(p, placements, opened)
+        for p, (placements, opened) in zip(
+            problems, _batched_pack_raw(problems, best_fit=best_fit)
+        )
+    ]
+
+
+def _batched_pack_raw(problems: "list[Problem]", *, best_fit: bool = False):
+    """The batched decision pass alone: per-fleet (placements, opened),
+    decoded from one vmapped `_pack_core` dispatch (numpy fallback
+    without JAX) — `Solution` materialization left to the caller."""
+    if not problems:
+        return []
+    if not HAS_JAX:
+        return [_pack_raw(p, best_fit) for p in problems]
+    ts = [p.tensors() for p in problems]
+    reqs, masks, scores, orders = _pad_fleets(problems, ts)
     with enable_x64():
-        _recs, _n_open, costs = _batched_kernel(best_fit)(
+        recs, n_open, _costs = _batched_kernel(best_fit)(
             reqs, masks, scores, orders, ts[0].caps, ts[0].costs
         )
-        return np.asarray(costs, dtype=np.float64)
+        bin_rec, choice_rec, bt_rec = (np.asarray(r) for r in recs)
+        n_open = np.asarray(n_open)
+    out = []
+    for b, p in enumerate(problems):
+        placed = bin_rec[b] >= 0  # padding items: skipped by the kernel
+        triples = np.stack(
+            [orders[b][placed], choice_rec[b][placed], bin_rec[b][placed]],
+            axis=1,
+        )
+        placements = [tuple(row) for row in triples.tolist()]
+        opened: "list[BinType | None]" = [None] * int(n_open[b])
+        opener = placed & (bt_rec[b] >= 0)
+        for bin_i, bt_i in zip(
+            bin_rec[b][opener].tolist(), bt_rec[b][opener].tolist()
+        ):
+            opened[bin_i] = p.bin_types[bt_i]
+        assert all(bt is not None for bt in opened)
+        out.append((placements, opened))
+    return out
 
 
 def placement_scores(
@@ -371,10 +452,17 @@ def placement_scores(
     effective capacity.  Returns (k, C, P): the tightest-fit score (the
     BFD rule's residual slack, lower is tighter), +inf where the candidate
     does not fit.  One broadcast — the controller scores every repair
-    candidate for every displaced stream in a single dispatch (JAX when
-    available, numpy otherwise).
+    candidate for every displaced stream in a single dispatch.
+
+    Small candidate matrices go to the numpy kernel (identical
+    arithmetic): per-cell repairs in a sharded fleet present a *different*
+    (k, C, P) shape per cell per event, and eager JAX recompiles on every
+    new shape (~12 ms each, dwarfing the sub-ms broadcast), while the
+    dispatch alone overshadows numpy below ~1M candidates.  The XLA path
+    is kept for fleet-scale matrices, where the broadcast itself pays.
     """
-    if HAS_JAX:
+    n_candidates = req.shape[0] * req.shape[1] * resid.shape[0]
+    if HAS_JAX and n_candidates >= _XLA_MIN_CANDIDATES:
         with enable_x64():
             r = jnp.asarray(req)[:, :, None, :]  # (k, C, 1, dim)
             rb = jnp.asarray(resid)[None, None, :, :]  # (1, 1, P, dim)
@@ -407,8 +495,8 @@ def evacuation_scores(
     One numpy broadcast covers the whole fleet — deliberately NOT the XLA
     path: the candidate matrix's (items, bins) shape churns every event,
     so eager JAX recompiles per event (measured ~200 ms/event, dwarfing
-    the ≤1 ms broadcast at fleet scale).  `placement_scores` keeps the JAX
-    path because the repair loop calls it at near-constant shapes.
+    the ≤1 ms broadcast at fleet scale).  `placement_scores` applies the
+    same reasoning dynamically, routing by candidate-matrix size.
     """
     owner = np.asarray(owner, dtype=np.int64)
     scores = placement_scores_np(req, choice_mask, resid)

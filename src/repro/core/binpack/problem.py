@@ -451,20 +451,48 @@ class Solution:
     def validate(self, atol: float = 1e-9) -> None:
         """Assert solution feasibility; raises AssertionError on violation."""
         p = self.problem
-        assert len(self.assignments) == len(p.items), "not all items assigned"
-        seen = {a.item_index for a in self.assignments}
-        assert seen == set(range(len(p.items))), "item indices wrong"
-        loads = [np.zeros(p.dim) for _ in self.bins]
-        for a in self.assignments:
-            req = np.asarray(p.items[a.item_index].choices[a.choice_index].requirement)
-            loads[a.bin_index] += req
-        for load, b in zip(loads, self.bins):
-            cap = p.effective_capacity(b.bin_type)
-            assert np.all(load <= cap + atol), (
-                f"bin {b.bin_type.name} overflows: load={load} cap={cap}"
+        n = len(self.assignments)
+        assert n == len(p.items), "not all items assigned"
+        if not n:
+            for b in self.bins:
+                assert np.allclose(b.load, 0.0, atol=1e-6), (
+                    f"recorded load mismatch: 0 vs {b.load}"
+                )
+            return
+        # Vectorized feasibility sweep (one np.add.at instead of a python
+        # accumulation loop — this runs on every build_solution).
+        item_idx = np.empty(n, dtype=np.int64)
+        bin_idx = np.empty(n, dtype=np.int64)
+        reqs = np.empty((n, p.dim))
+        for k, a in enumerate(self.assignments):
+            item_idx[k] = a.item_index
+            bin_idx[k] = a.bin_index
+            reqs[k] = p.items[a.item_index].choices[a.choice_index].requirement
+        assert np.array_equal(
+            np.sort(item_idx), np.arange(len(p.items))
+        ), "item indices wrong"
+        loads = np.zeros((len(self.bins), p.dim))
+        np.add.at(loads, bin_idx, reqs)
+        cap_cache: dict[int, np.ndarray] = {}
+        caps = np.empty((len(self.bins), p.dim))
+        for i, b in enumerate(self.bins):
+            cap = cap_cache.get(id(b.bin_type))
+            if cap is None:
+                cap = cap_cache[id(b.bin_type)] = np.asarray(
+                    p.effective_capacity(b.bin_type)
+                )
+            caps[i] = cap
+        recorded = np.asarray([b.load for b in self.bins])
+        if np.all(loads <= caps + atol) and np.allclose(
+            loads, recorded, atol=1e-6
+        ):
+            return
+        for i, b in enumerate(self.bins):  # diagnostics for the failure
+            assert np.all(loads[i] <= caps[i] + atol), (
+                f"bin {b.bin_type.name} overflows: load={loads[i]} cap={caps[i]}"
             )
-            assert np.allclose(load, np.asarray(b.load), atol=1e-6), (
-                f"recorded load mismatch: {load} vs {b.load}"
+            assert np.allclose(loads[i], recorded[i], atol=1e-6), (
+                f"recorded load mismatch: {loads[i]} vs {b.load}"
             )
 
 
@@ -474,11 +502,18 @@ def build_solution(
     opened: Sequence[BinType],
 ) -> Solution:
     """Construct + validate a Solution from raw (item, choice, bin) triples."""
-    loads = [np.zeros(problem.dim) for _ in opened]
-    for item_i, choice_i, bin_i in placements:
-        loads[bin_i] += np.asarray(
-            problem.items[item_i].choices[choice_i].requirement
+    loads = np.zeros((len(opened), problem.dim))
+    if placements:
+        reqs = np.asarray(
+            [
+                problem.items[i].choices[c].requirement
+                for i, c, _ in placements
+            ]
         )
+        bin_is = np.fromiter(
+            (b for _, _, b in placements), dtype=np.int64, count=len(placements)
+        )
+        np.add.at(loads, bin_is, reqs)
     # Drop unused bins, remapping indices (single pass over placements).
     used = {p[2] for p in placements}
     keep = [i for i in range(len(opened)) if i in used]

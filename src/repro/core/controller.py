@@ -623,6 +623,46 @@ class FleetController:
             billed_delta=billed_delta,
         )
 
+    def try_swap(
+        self,
+        name_a: str,
+        name_b: str,
+        *,
+        max_nodes: int | None = None,
+        min_saving: float = 0.0,
+        billing_horizon: float | None = None,
+    ) -> MigrationResult:
+        """Attempt a certified two-bin stream exchange (partial-bin move).
+
+        Frees exactly two streams hosted by *different* bins and
+        exact-solves their joint re-placement against everything else
+        pinned — the k=2 exchange whole-bin evacuation cannot express:
+        each bin keeps its other members, so the freed pair may trade
+        places (stream A into B's freed slack and vice versa) or cascade
+        one of them onto a third bin, closing a bin no single whole-bin
+        evacuation could empty within budget.  Mechanically this is
+        `try_migrate` on the pair, so adoption carries the same strict
+        certified-saving and optional billed-delta gates and rejected
+        moves roll back untouched.
+        """
+        if name_a == name_b:
+            raise ValueError(f"swap needs two distinct streams, got {name_a!r} twice")
+        uid_of = self._uid_map()
+        missing = [n for n in (name_a, name_b) if n not in uid_of]
+        if missing:
+            raise KeyError(f"no stream(s) named {sorted(missing)!r}")
+        if uid_of[name_a] == uid_of[name_b]:
+            raise ValueError(
+                f"streams {name_a!r} and {name_b!r} share an instance; "
+                "a swap exchanges streams between two bins"
+            )
+        return self.try_migrate(
+            [name_a, name_b],
+            max_nodes=max_nodes,
+            min_saving=min_saving,
+            billing_horizon=billing_horizon,
+        )
+
     def refresh_prices(self) -> float:
         """Re-derive the covering-LP dual prices for the current fleet era
         (the dual-price-aging policy's lever) and return the refreshed

@@ -90,6 +90,10 @@ class ResourceManager:
         self._formulate_cache: dict[tuple, Problem] = {}
         # Live re-planning controllers, one per strategy name (lazy).
         self._controllers: dict[str, object] = {}
+        # Sharded controllers live apart: their cells are plain
+        # FleetControllers that must NOT appear in `_controllers` (price
+        # events would double-reprice them through `_apply_price`'s loop).
+        self._sharded_controllers: dict[str, object] = {}
 
     def formulate(
         self, streams: Sequence[StreamSpec], strategy: Strategy = ST3
@@ -164,6 +168,57 @@ class ResourceManager:
                     setattr(ctrl, key, value)
                 else:
                     raise TypeError(f"unknown controller option {key!r}")
+        return ctrl
+
+    def sharded_controller(self, strategy: Strategy = ST3, **kwargs):
+        """The hierarchical sharded controller for `strategy` (one per name).
+
+        Like `controller`, but returns a `core.shard.ShardedController`:
+        the fleet partitions into cells by ``cell_key``, each cell runs
+        its own warm-start `FleetController`, batched kernel dispatches
+        cold-start / defrag all cells at once, and a periodic dual-price
+        market (``rebalance_every``) migrates streams toward cheap cells.
+        Kept in a registry separate from the flat controllers, so a flat
+        and a sharded controller of the same strategy can coexist (e.g.
+        for equivalence tests).  ``policy_factory`` (not ``policy``)
+        supplies per-cell policy instances — policies are stateful, so
+        cells must not share one.  Reconfiguring a live sharded
+        controller updates its facade options in place; billing swaps
+        propagate to every existing cell via `set_billing`.
+        """
+        ctrl = self._sharded_controllers.get(strategy.name)
+        if ctrl is None:
+            from .shard import ShardedController
+
+            ctrl = ShardedController(self, strategy, **kwargs)
+            self._sharded_controllers[strategy.name] = ctrl
+        else:
+            if "billing" in kwargs or "billing_by_type" in kwargs:
+                billing = kwargs.pop("billing", ctrl.billing)
+                by_type = kwargs.pop("billing_by_type", None)
+                ctrl.billing = billing
+                ctrl.billing_by_type = by_type
+                for cell in ctrl._cells.values():
+                    cell.set_billing(
+                        billing if billing is not None else cell.billing,
+                        by_type=by_type,
+                    )
+            for key, value in kwargs.items():
+                if key in (
+                    "cell_key",
+                    "gap_threshold",
+                    "sub_max_nodes",
+                    "policy_factory",
+                    "drain_on_notice",
+                    "rebalance_every",
+                    "rebalance_moves",
+                    "rebalance_min_saving",
+                ):
+                    setattr(ctrl, key, value)
+                else:
+                    raise TypeError(
+                        f"unknown sharded controller option {key!r}"
+                    )
         return ctrl
 
     def allocate(

@@ -200,13 +200,22 @@ class ConsolidationPolicy(ReplanPolicy):
     #: the billing-blind historical behaviour).  Under quantized billing
     #: this rejects evacuations whose rent is already sunk.
     billing_horizon: float | None = None
+    #: When whole-bin evacuation finds nothing, also consider a
+    #: partial-bin exchange (`select_swap`): close a bin whose blocked
+    #: member needs a donor evicted from a neighbour first.  Off by
+    #: default — swaps search a strictly larger move space per event.
+    swap_moves: bool = False
 
     def on_event(self, mech, event, result):
         # Warm re-plans (noop included — drift survives unchanged fleets)
         # only: full re-solves just re-packed everything.
         if self.max_migrations <= 0 or result.mode not in ("warm", "noop"):
             return result
+        route = "consolidate"
         names = self.select_evacuations(mech)
+        if not names and self.swap_moves:
+            names = self.select_swap(mech)
+            route = "swap"
         if not names:
             return result
         mig = mech.try_migrate(
@@ -222,11 +231,11 @@ class ConsolidationPolicy(ReplanPolicy):
                 return dataclasses.replace(
                     result,
                     actions=result.actions
-                    + (f"billed-reject:consolidate:{mig.billed_delta:+.4f}",),
+                    + (f"billed-reject:{route}:{mig.billed_delta:+.4f}",),
                 )
             return result
         saving = mig.cost_before - mig.cost_after
-        action = f"consolidate:{len(mig.migrated)}:-${saving:.4f}"
+        action = f"{route}:{len(mig.migrated)}:-${saving:.4f}"
         if mig.billed_delta is not None:
             action += f":billed{mig.billed_delta:+.4f}"
         return dataclasses.replace(
@@ -303,6 +312,71 @@ class ConsolidationPolicy(ReplanPolicy):
             if budget == 0:
                 break
         return tuple(names)
+
+    def select_swap(self, mech) -> tuple[str, ...]:
+        """Pick a partial-bin exchange whole-bin evacuation cannot reach.
+
+        Pattern: a closing bin has exactly one *blocked* member (no other
+        bin's residual fits it), but evicting a single **donor** stream
+        from a neighbour bin opens enough slack there to host it — the
+        donor itself relocating onto a third bin.  Whole-bin selection
+        can never find this (the blocked member disqualifies its bin, and
+        the donor's bin is not closing), yet `try_migrate` over
+        ``members(closing bin) + donor`` expresses it exactly: the
+        donor's bin stays pinned at its *remaining* load, so the freed
+        pair trades places under the exact sub-solve's certificate.
+        Returns at most ``max_migrations`` names (closing bin + donor),
+        or ``()`` when no such pattern exists.
+        """
+        state = mech.placement_state()
+        n_bins = state.resid.shape[0]
+        # Three bins minimum: the closer, the host, the donor's refuge.
+        if n_bins < 3 or not state.names:
+            return ()
+        scores = heuristics.evacuation_scores(
+            state.req, state.choice_mask, state.resid, state.owner
+        )
+        finite = np.isfinite(scores).any(axis=1)  # (n, P)
+        relocatable = finite.any(axis=1)
+        idx_of = {name: i for i, name in enumerate(state.names)}
+        # Cheapest feasible requirement per item (the donor's freed slack
+        # and the fit probe both use the most conservative choice).
+        min_req = np.where(
+            state.choice_mask[:, :, None], state.req, np.inf
+        ).min(axis=1)
+        order = sorted(range(n_bins), key=lambda b: -float(state.bin_costs[b]))
+        for b1 in order:
+            members = state.members[b1]
+            if not 0 < len(members) < self.max_migrations:
+                continue  # need budget room for the donor
+            idx1 = [idx_of[m] for m in members]
+            blocked = [i for i in idx1 if not relocatable[i]]
+            if len(blocked) != 1:
+                # 0 blocked: the whole-bin route already covers this bin;
+                # 2+: one donor cannot unblock them all.
+                continue
+            blk = blocked[0]
+            for b2 in range(n_bins):
+                if b2 == b1:
+                    continue
+                for donor in state.members[b2]:
+                    j = idx_of[donor]
+                    third = np.ones(n_bins, dtype=bool)
+                    third[b1] = third[b2] = False  # b1 closes, b2 hosts blk
+                    if not finite[j][third].any():
+                        continue
+                    # Does the blocked member fit b2 once the donor leaves?
+                    slack = state.resid[b2] + min_req[j]
+                    fit = (
+                        np.all(
+                            state.req[blk] <= slack[None, :] + heuristics._FIT_EPS,
+                            axis=-1,
+                        )
+                        & state.choice_mask[blk]
+                    )
+                    if fit.any():
+                        return tuple(members) + (donor,)
+        return ()
 
 
 @dataclasses.dataclass

@@ -158,6 +158,10 @@ def simulate_churn(
     billing_by_type=None,
     horizon: float | None = None,
     drain_on_notice: bool | None = None,
+    cell_key=None,
+    policy_factory=None,
+    rebalance_every: int = 0,
+    reset_pack: str = "exact",
 ) -> dict:
     """Replay a churn trace through the manager's live controller as a
     discrete-event simulation over the instance-lifecycle ledger.
@@ -223,15 +227,33 @@ def simulate_churn(
     if target is None:
         target = manager.utilization_cap
     kwargs = {}
-    if policy is not None:
-        kwargs["policy"] = policy
     if billing is not None:
         kwargs["billing"] = billing
     if billing_by_type is not None:
         kwargs["billing_by_type"] = billing_by_type
     if drain_on_notice is not None:
         kwargs["drain_on_notice"] = drain_on_notice
-    ctrl = manager.controller(strategy, **kwargs)
+    if cell_key is not None or policy_factory is not None:
+        # Sharded replay: partition into cells of warm-start controllers
+        # (see `core.shard.ShardedController`).  ``policy_factory`` (one
+        # fresh policy per cell — policies are stateful) replaces
+        # ``policy``; the rest of the replay reads the identical facade.
+        if policy is not None:
+            raise TypeError(
+                "sharded simulate_churn takes policy_factory, not policy "
+                "(each cell needs its own policy instance)"
+            )
+        if policy_factory is not None:
+            kwargs["policy_factory"] = policy_factory
+        if cell_key is not None:
+            kwargs["cell_key"] = cell_key
+        ctrl = manager.sharded_controller(
+            strategy, rebalance_every=rebalance_every, **kwargs
+        )
+    else:
+        if policy is not None:
+            kwargs["policy"] = policy
+        ctrl = manager.controller(strategy, **kwargs)
     tiers: dict = {}  # stream name -> SLATier, sticky across removals
 
     def note_tiers() -> None:
@@ -240,7 +262,10 @@ def simulate_churn(
         for s in ctrl.parked.values():
             tiers[s.name] = s.tier
 
-    results = [ctrl.reset(initial_streams, at=0.0)]
+    if cell_key is not None or policy_factory is not None:
+        results = [ctrl.reset(initial_streams, at=0.0, pack=reset_pack)]
+    else:
+        results = [ctrl.reset(initial_streams, at=0.0)]
     uid_steps = [ctrl.instance_uids]
     preempted_steps: list[tuple[str, ...]] = [()]
     event_names = ["init"]

@@ -48,6 +48,7 @@ seeded join/leave/re-rate traces the benchmarks replay.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Iterable, Sequence
 
 __all__ = [
@@ -516,6 +517,9 @@ def synthetic_timed_trace(
     tail_hours: float | None = None,
     preemption_hazard: float = 0.0,
     hazard_pool: int = 64,
+    price_drift: float = 0.0,
+    price_drift_types: "Sequence[tuple[str, float]] | None" = None,
+    price_drift_gap_hours: float = 0.25,
 ) -> TimedTrace:
     """Generate a seeded timed churn trace against a pure fleet replay.
 
@@ -544,6 +548,16 @@ def synthetic_timed_trace(
     drawn *after* the churn sequence from the same rng, so
     ``preemption_hazard=0`` leaves the churn draws — and the trace —
     bit-identical to the pre-spot generator.
+
+    ``price_drift`` overlays a seeded spot-price random walk:
+    `PriceChanged` events every ``price_drift_gap_hours`` for each
+    ``(instance_type, base_cost)`` in ``price_drift_types``, following a
+    geometric walk with per-√hour volatility ``price_drift`` (floored at
+    5% of base, so prices never collapse to free capacity).  The walk
+    shares the trace's rng and horizon with the hazard overlay — price
+    risk and reclamation risk replay *coupled* in one trace — and its
+    draws come after both the churn sequence and the hazard shocks, so
+    ``price_drift=0`` (with any hazard) leaves the trace bit-identical.
     """
     fleet = list(streams)
     events: list[FleetEvent] = []
@@ -601,6 +615,34 @@ def synthetic_timed_trace(
             )
         # Stable merge: churn events keep their relative order at ties.
         events = sorted(events + shocks, key=lambda ev: ev.at)
+    if price_drift > 0.0:
+        if not price_drift_types:
+            raise ValueError(
+                "price_drift needs price_drift_types: [(instance_type, "
+                "base_cost), ...] naming the walking spot pools"
+            )
+        if price_drift_gap_hours <= 0.0:
+            raise ValueError(
+                f"price_drift_gap_hours must be > 0, got {price_drift_gap_hours}"
+            )
+        # Drawn after churn AND hazard from the same rng: drift=0 keeps
+        # both earlier overlays bit-identical; drift>0 couples all three.
+        walks: list[FleetEvent] = []
+        level = {name: float(base) for name, base in price_drift_types}
+        floor = {name: 0.05 * float(base) for name, base in price_drift_types}
+        sigma = price_drift * math.sqrt(price_drift_gap_hours)
+        tp = price_drift_gap_hours
+        while tp < horizon:
+            for name, _base in price_drift_types:
+                level[name] = max(
+                    floor[name],
+                    level[name] * math.exp(sigma * float(rng.randn())),
+                )
+                walks.append(
+                    PriceChanged(name, round(level[name], 6), at=tp)
+                )
+            tp += price_drift_gap_hours
+        events = sorted(events + walks, key=lambda ev: ev.at)
     return TimedTrace(events=tuple(events), horizon=horizon)
 
 

@@ -1,0 +1,446 @@
+"""Hierarchical sharded controller (`core.shard`) tests.
+
+Covers the PR-7 scaling stack: single-cell `ShardedController` bit-identity
+with the flat `FleetController` on a churn trace (property-tested over
+seeds), deterministic event routing under re-keying, cross-cell rebalancing
+that never raises the total certified cost, the padded-batch `_pack_core`
+path (`heuristics.batched_pack`) matching per-fleet serial packing exactly,
+the partial-bin swap move riding on `try_migrate`, and the seeded
+spot-price drift overlay in `synthetic_timed_trace`.
+"""
+import numpy as np
+import pytest
+
+from repro.core.binpack import BinType
+from repro.core.binpack.problem import Choice, Item, Problem
+from repro.core.binpack import heuristics as H
+from repro.core.controller import FleetController
+from repro.core.manager import ResourceManager
+from repro.core.policy import ConsolidationPolicy
+from repro.core.profiler import ProfileTable, ResourceProfile, paper_profile_table
+from repro.core.shard import (
+    ShardedController,
+    UID_STRIDE,
+    cells_by_program,
+    hash_cells,
+    single_cell,
+)
+from repro.core.simulator import simulate_churn
+from repro.core.strategies import ST3
+from repro.core.streams import (
+    COMMON_FRAME_SIZES,
+    AnalysisProgram,
+    InstancePreempted,
+    PriceChanged,
+    StreamAdded,
+    StreamRateChanged,
+    StreamRemoved,
+    StreamSpec,
+    synthetic_timed_trace,
+)
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+CATALOG = (
+    BinType("c4.2xlarge", (8, 15, 0, 0), 0.419),
+    BinType("c4.8xlarge", (36, 60, 0, 0), 1.675),
+    BinType("g2.2xlarge", (8, 15, 1536, 4), 0.650),
+)
+KINDS = [(VGG, 0.25), (VGG, 0.2), (ZF, 0.5), (ZF, 2.0), (ZF, 5.0)]
+#: Rates each program can actually reach (VGG-16 saturates at 0.25 FPS).
+RATES = {"vgg16": [0.2, 0.25], "zf": [0.5, 2.0, 5.0]}
+
+
+def _streams(n, prefix="s"):
+    return [
+        StreamSpec(f"{prefix}{i}", *KINDS[i % len(KINDS)]) for i in range(n)
+    ]
+
+
+def _manager(**kw):
+    kw.setdefault("max_nodes", 20_000)
+    return ResourceManager(CATALOG, paper_profile_table(), **kw)
+
+
+def _trace(rng, fleet, n_events):
+    """Mixed join/leave/re-rate event list with program-valid rates."""
+    evs, t, nxt = [], 0.0, 100
+    prog = {s.name: s.program.program_id for s in fleet}
+    names = [s.name for s in fleet]
+    for _ in range(n_events):
+        t += 0.02
+        roll = rng.rand()
+        if roll < 0.3 or not names:
+            name = f"j{nxt}"
+            kind = KINDS[nxt % len(KINDS)]
+            nxt += 1
+            evs.append(StreamAdded(StreamSpec(name, *kind), at=t))
+            names.append(name)
+            prog[name] = kind[0].program_id
+        elif roll < 0.55:
+            name = names.pop(int(rng.rand() * len(names)))
+            evs.append(StreamRemoved(name, at=t))
+        else:
+            name = names[int(rng.rand() * len(names))]
+            rates = RATES[prog[name]]
+            evs.append(
+                StreamRateChanged(name, rates[rng.randint(len(rates))], at=t)
+            )
+    return evs
+
+
+# ------------------------------------------------- single-cell bit-identity
+
+
+@pytest.mark.parametrize("seed", [7, 19, 23])
+def test_single_cell_bit_identical_to_flat(seed):
+    """With one cell the sharded controller IS the flat controller: every
+    per-event result and the uid sequence must match exactly."""
+    streams = _streams(30)
+    flat = FleetController(_manager(), ST3, sub_max_nodes=5_000)
+    shard = ShardedController(_manager(), ST3, sub_max_nodes=5_000)
+    rf = flat.reset(streams, at=0.0)
+    rs = shard.reset(streams, at=0.0)
+    assert rs.plan.hourly_cost == rf.plan.hourly_cost
+    assert rs.lower_bound == rf.lower_bound
+    assert shard.n_cells == 1
+    events = _trace(np.random.RandomState(seed), streams, 40)
+    events.append(PriceChanged("c4.2xlarge", 0.5, at=events[-1].at + 0.02))
+    for ev in events:
+        a = flat.apply(ev)
+        b = shard.apply(ev)
+        assert b.plan.hourly_cost == a.plan.hourly_cost, ev
+        assert b.mode == a.mode
+        assert b.displaced == a.displaced and b.migrated == a.migrated
+        assert b.lower_bound == a.lower_bound
+        assert shard.instance_uids == flat.instance_uids
+    assert sorted(s.name for s in shard.fleet) == sorted(
+        s.name for s in flat.fleet
+    )
+
+
+def test_single_cell_key_factories():
+    s = _streams(5)
+    assert all(single_cell(x) == 0 for x in s)
+    assert {cells_by_program(x) for x in s} == {"vgg16", "zf"}
+    k = hash_cells(4)
+    assert all(0 <= k(x) < 4 for x in s)
+    # Same name -> same cell, independent of everything else.
+    assert k(s[0]) == k(StreamSpec(s[0].name, ZF, 5.0))
+
+
+# ---------------------------------------------------------- multi-cell core
+
+
+def test_multicell_routing_and_merged_plan():
+    streams = _streams(24)
+    sc = ShardedController(
+        _manager(), ST3, cell_key=cells_by_program, sub_max_nodes=5_000
+    )
+    sc.reset(streams, at=0.0)
+    assert sc.n_cells == 2
+    for s in streams:
+        assert sc.cell_of(s.name) == s.program.program_id
+    # uid strides never collide across cells.
+    owners = {uid // UID_STRIDE for uid in sc.instance_uids}
+    assert owners <= {0, 1}
+    for ev in _trace(np.random.RandomState(5), streams, 30):
+        r = sc.apply(ev)
+        plan = r.plan
+        placed = sorted(p.stream.name for p in plan.placements)
+        assert placed == sorted(s.name for s in sc.fleet)
+        assert all(
+            0 <= p.instance_index < len(plan.instances)
+            for p in plan.placements
+        )
+        assert plan.hourly_cost == pytest.approx(
+            sum(b.bin_type.cost for b in plan.solution.bins)
+        )
+        assert r.lower_bound <= plan.hourly_cost + 1e-9
+
+
+def test_rekey_routing_is_deterministic():
+    streams = _streams(20)
+    key = hash_cells(3)
+
+    def build(seed):
+        sc = ShardedController(
+            _manager(), ST3, cell_key=key, sub_max_nodes=5_000
+        )
+        sc.reset(streams, at=0.0)
+        for ev in _trace(np.random.RandomState(seed), streams, 25):
+            sc.apply(ev)
+        return sc
+
+    a, b = build(3), build(9)
+    # Different histories, but re-keying lands every surviving stream in
+    # the cell its name hashes to — independent of how it got there.
+    for sc in (a, b):
+        sc.rekey(key)
+        for s in sc.fleet:
+            assert sc.cell_of(s.name) == key(s)
+    shared = {s.name for s in a.fleet} & {s.name for s in b.fleet}
+    assert shared  # traces keep most of the initial fleet
+    for name in shared:
+        assert a.cell_of(name) == b.cell_of(name)
+    # Re-keying again is a fixpoint: same partition, same cost.
+    cost = a.total_cost()
+    a.rekey(key)
+    assert a.total_cost() == pytest.approx(cost)
+    assert {s.name: a.cell_of(s.name) for s in a.fleet} == {
+        s.name: key(s) for s in a.fleet
+    }
+
+
+def test_rebalance_never_raises_total_cost():
+    streams = _streams(32)
+    sc = ShardedController(
+        _manager(), ST3, cell_key=hash_cells(4), sub_max_nodes=5_000
+    )
+    sc.reset(streams, at=0.0)
+    rng = np.random.RandomState(13)
+    evs = _trace(rng, streams, 40)
+    for i, ev in enumerate(evs):
+        sc.apply(ev)
+        if i % 8 == 7:
+            before = sc.total_cost()
+            sc.rebalance(max_moves=4)
+            after = sc.total_cost()
+            assert after <= before + 1e-9
+            # Rebalancing moves streams between cells; it never loses one.
+            placed = sorted(p.stream.name for p in sc.plan.placements)
+            assert placed == sorted(s.name for s in sc.fleet)
+
+
+def test_sharded_simulate_churn_and_policy_factory_guard():
+    streams = _streams(16)
+    mgr = _manager()
+    trace = synthetic_timed_trace(
+        streams, np.random.RandomState(2), n_events=10
+    )
+    out = simulate_churn(
+        mgr,
+        streams,
+        trace,
+        paper_profile_table(),
+        cell_key=hash_cells(2),
+        policy_factory=lambda: ConsolidationPolicy(max_migrations=2),
+        rebalance_every=5,
+    )
+    assert out["final_cost"] > 0
+    with pytest.raises(TypeError):
+        simulate_churn(
+            mgr,
+            streams,
+            trace,
+            paper_profile_table(),
+            cell_key=hash_cells(2),
+            policy=ConsolidationPolicy(max_migrations=2),
+            policy_factory=lambda: ConsolidationPolicy(max_migrations=2),
+        )
+
+
+# ----------------------------------------------------- padded batched pack
+
+
+def _random_fleets(seed, count=10):
+    rng = np.random.RandomState(seed)
+    cat = (
+        BinType("a", (10.0, 6.0), 1.0),
+        BinType("b", (20.0, 30.0), 2.3),
+        BinType("g", (8.0, 15.0), 0.65),
+    )
+    probs = []
+    for k in range(count):
+        n = rng.randint(1, 25)
+        items = []
+        for i in range(n):
+            ch = [Choice("cpu", (rng.uniform(0.5, 5.0), rng.uniform(0.5, 5.0)))]
+            if rng.rand() < 0.5:
+                ch.append(
+                    Choice("accel", (rng.uniform(0.2, 2.0), rng.uniform(0.2, 2.0)))
+                )
+            items.append(Item(f"p{k}s{i}", tuple(ch)))
+        probs.append(Problem(cat, tuple(items)))
+    return probs
+
+
+@pytest.mark.parametrize("best_fit", [False, True])
+def test_batched_pack_matches_serial_exactly(best_fit):
+    """One vmapped `_pack_core` over padded per-fleet tensors must decode to
+    the same solution as packing each fleet serially."""
+    probs = _random_fleets(3)
+    batched = H.batched_pack(probs, best_fit=best_fit)
+    assert len(batched) == len(probs)
+    for p, sol in zip(probs, batched):
+        ref = H._pack(p, best_fit)
+        assert sol.cost == ref.cost
+        assert sol.assignments == ref.assignments
+        assert tuple(b.bin_type for b in sol.bins) == tuple(
+            b.bin_type for b in ref.bins
+        )
+
+
+def test_batched_pack_edge_cases():
+    assert H.batched_pack([]) == []
+    [p] = _random_fleets(5, count=1)
+    [sol] = H.batched_pack([p])
+    ref = H._pack(p, False)
+    assert sol.cost == ref.cost and sol.assignments == ref.assignments
+    other = Problem((BinType("x", (4.0, 4.0), 1.0),), p.items[:1])
+    with pytest.raises(ValueError):
+        H.batched_pack([p, other])  # mixed catalogs don't share a kernel
+
+
+# -------------------------------------------------------- partial-bin swap
+
+FSZ = COMMON_FRAME_SIZES[0]
+UNIT = AnalysisProgram("unit", "unit")
+
+
+def _unit_table():
+    t = ProfileTable()
+    t.add(
+        ResourceProfile(
+            "unit",
+            str(FSZ),
+            "cpu",
+            reference_fps=1.0,
+            requirement=(1.0, 0.0, 0.0, 0.0),
+            max_fps=100.0,
+        )
+    )
+    return t
+
+
+def _unit_spec(name, size):
+    return StreamSpec(name, UNIT, float(size), frame_size=FSZ)
+
+
+def _swap_scenario(policy):
+    """Three bins where no whole-bin evacuation fits in a 2-move budget but
+    the {x, z} partial-bin exchange closes a bin: cap-10 bins holding
+    {y1=2, y2=2, z=5}, {x=6}, {w=5}."""
+    mgr = ResourceManager(
+        (BinType("box", (10.0, 100.0, 0.0, 0.0), 1.0),),
+        _unit_table(),
+        utilization_cap=1.0,
+        max_nodes=20_000,
+    )
+    ctrl = mgr.controller(ST3, gap_threshold=100.0, policy=policy)
+    ctrl.reset(
+        [_unit_spec("y1", 2), _unit_spec("y2", 2), _unit_spec("z", 5)], at=0.0
+    )
+    ctrl.apply(StreamAdded(_unit_spec("x", 6), at=1.0))
+    r = ctrl.apply(StreamAdded(_unit_spec("w", 5), at=2.0))
+    return ctrl, r
+
+
+def test_swap_move_closes_bin_plain_policy_cannot():
+    plain, _ = _swap_scenario(ConsolidationPolicy(max_migrations=2))
+    assert len(plain.plan.instances) == 3
+    assert plain.plan.hourly_cost == pytest.approx(3.0)
+
+    swap, r = _swap_scenario(
+        ConsolidationPolicy(max_migrations=2, swap_moves=True)
+    )
+    assert len(swap.plan.instances) == 2
+    assert swap.plan.hourly_cost == pytest.approx(2.0)
+    assert any(a.startswith("swap:") for a in r.actions)
+    # Certified: the adopted exchange really carried every stream along.
+    placed = sorted(p.stream.name for p in swap.plan.placements)
+    assert placed == ["w", "x", "y1", "y2", "z"]
+
+
+def test_try_swap_validation_and_certification():
+    ctrl, _ = _swap_scenario(ConsolidationPolicy(max_migrations=2))
+    with pytest.raises(ValueError):
+        ctrl.try_swap("x", "x")
+    with pytest.raises(KeyError):
+        ctrl.try_swap("x", "nosuch")
+    with pytest.raises(ValueError):
+        ctrl.try_swap("y1", "y2")  # same bin: nothing to exchange
+    # A legal but useless exchange is certified and rejected, not adopted.
+    before = ctrl.plan.hourly_cost
+    r = ctrl.try_swap("x", "w")
+    assert not r.accepted
+    assert ctrl.plan.hourly_cost == pytest.approx(before)
+    # The winning exchange adopted through the same public entry point.
+    r = ctrl.try_swap("x", "z")
+    assert r.accepted
+    assert r.cost_before - r.cost_after == pytest.approx(1.0)
+    assert len(ctrl.plan.instances) == 2
+
+
+# ------------------------------------------------------- spot price drift
+
+
+def test_price_drift_zero_is_bit_identical():
+    streams = _streams(6)
+    kw = dict(n_events=12, preemption_hazard=0.5, hazard_pool=16)
+    base = synthetic_timed_trace(streams, np.random.RandomState(11), **kw)
+    nodrift = synthetic_timed_trace(
+        streams,
+        np.random.RandomState(11),
+        price_drift=0.0,
+        price_drift_types=[("c4.2xlarge-spot", 0.1)],
+        **kw,
+    )
+    assert list(nodrift.events) == list(base.events)
+
+
+def test_price_drift_overlay_is_seeded_and_coupled():
+    streams = _streams(6)
+    kw = dict(
+        n_events=12,
+        preemption_hazard=0.4,
+        hazard_pool=16,
+        price_drift=0.3,
+        price_drift_types=[("a-spot", 0.10), ("b-spot", 0.25)],
+        price_drift_gap_hours=0.1,
+    )
+    t1 = synthetic_timed_trace(streams, np.random.RandomState(21), **kw)
+    t2 = synthetic_timed_trace(streams, np.random.RandomState(21), **kw)
+    assert list(t1.events) == list(t2.events)  # same seed, same walk
+    walks = [ev for ev in t1.events if isinstance(ev, PriceChanged)]
+    churn = [
+        ev
+        for ev in t1.events
+        if not isinstance(ev, (PriceChanged, InstancePreempted))
+    ]
+    assert walks, "drift > 0 must emit PriceChanged events"
+    assert {ev.instance_type for ev in walks} == {"a-spot", "b-spot"}
+    floors = {"a-spot": 0.005, "b-spot": 0.0125}
+    for ev in walks:
+        assert ev.cost >= floors[ev.instance_type] - 1e-12
+    assert t1.times() == tuple(sorted(t1.times()))
+    # Drift draws come after churn + hazard: the churn subsequence matches
+    # the drift-free trace exactly.
+    ref = synthetic_timed_trace(
+        streams,
+        np.random.RandomState(21),
+        n_events=12,
+        preemption_hazard=0.4,
+        hazard_pool=16,
+    )
+    ref_churn = [
+        ev for ev in ref.events if not isinstance(ev, InstancePreempted)
+    ]
+    assert churn == ref_churn
+
+
+def test_price_drift_validation():
+    streams = _streams(3)
+    with pytest.raises(ValueError):
+        synthetic_timed_trace(
+            streams, np.random.RandomState(1), n_events=2, price_drift=0.1
+        )
+    with pytest.raises(ValueError):
+        synthetic_timed_trace(
+            streams,
+            np.random.RandomState(1),
+            n_events=2,
+            price_drift=0.1,
+            price_drift_types=[("x", 1.0)],
+            price_drift_gap_hours=0.0,
+        )
