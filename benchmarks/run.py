@@ -42,6 +42,7 @@ GATED_ARTIFACTS = {
     "spot": "BENCH_spot.json",
     "storm": "BENCH_storm.json",
     "shard": "BENCH_shard.json",
+    "solver": "BENCH_solver.json",
 }
 
 

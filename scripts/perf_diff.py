@@ -24,7 +24,9 @@ Handles two artifact shapes:
     splits, notice-conversion rate, utility penalties, and per-tier
     violation counts) and the sharded-controller scaling metrics
     (BENCH_shard.json's per-event latencies, vmap-repair speedup, and
-    flat-vs-sharded cost parity).
+    flat-vs-sharded cost parity) and the branch-and-price solver metrics
+    (BENCH_solver.json's certified colgen/enumeration gaps, batched
+    pricing speedup, and kernel bit-equivalence probe).
 """
 import json
 import sys
@@ -71,8 +73,22 @@ _SHARD_PREFIXES = (
 )
 
 
+# Branch-and-price solver metrics (BENCH_solver.json): certified gaps,
+# the batched-pricing speedup, and the kernel bit-equivalence probe.
+_COLGEN_PREFIXES = (
+    "colgen_",
+    "arcflow_budget_gap",
+    "pricing_batched_speedup",
+    "pricing_bitident_mismatch",
+)
+
+
 def _is_billed_key(k: str) -> bool:
     return k.startswith("billed_") or k.startswith("degraded_seconds")
+
+
+def _is_colgen_key(k: str) -> bool:
+    return k.startswith(_COLGEN_PREFIXES)
 
 
 def _is_spot_key(k: str) -> bool:
@@ -144,11 +160,20 @@ def diff_billed(a: dict, b: dict) -> None:
     _diff_section(a, b, _is_billed_key, "billed-cost metric", fmt)
 
 
+def diff_colgen(a: dict, b: dict) -> None:
+    def fmt(k, x, y, d):
+        unit = "x" if k.endswith("speedup") else " "
+        return f"{x:11.4g}{unit} {y:11.4g}{unit} {d:+8.1%}"
+
+    _diff_section(a, b, _is_colgen_key, "branch-and-price metric", fmt)
+
+
 def diff_meta(a: dict, b: dict) -> None:
     diff_billed(a, b)
     diff_spot(a, b)
     diff_storm(a, b)
     diff_shard(a, b)
+    diff_colgen(a, b)
     am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
         k
@@ -157,6 +182,7 @@ def diff_meta(a: dict, b: dict) -> None:
         and not _is_spot_key(k)
         and not _is_storm_key(k)
         and not _is_shard_key(k)
+        and not _is_colgen_key(k)
         and (
             isinstance(am.get(k), (int, float))
             or isinstance(bm.get(k), (int, float))

@@ -54,7 +54,8 @@ from .bincompletion import (
     root_lower_bound,
     solve,
 )
-from .arcflow import ArcflowStats, dual_prices, solve_arcflow
+from .arcflow import ArcflowStats, covering_search, dual_prices, solve_arcflow
+from .colgen import ColumnPool, solve_colgen
 from .bruteforce import solve_bruteforce
 
 __all__ = [
@@ -83,7 +84,10 @@ __all__ = [
     "root_lower_bound",
     "solve",
     "ArcflowStats",
+    "ColumnPool",
+    "covering_search",
     "dual_prices",
     "solve_arcflow",
+    "solve_colgen",
     "solve_bruteforce",
 ]

@@ -38,6 +38,7 @@ fleets collapse to few classes with high multiplicity.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 import sys
 from typing import Sequence
@@ -59,10 +60,13 @@ __all__ = [
     "enumerate_patterns",
     "class_key",
     "item_class_keys",
+    "covering_search",
     "dual_prices",
 ]
 
 _EPS = 1e-9
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -72,6 +76,13 @@ class ArcflowStats:
     dp_states: int = 0
     optimal: bool = True
     lp_bound: float = 0.0  # root covering-LP value: optimum is >= this
+    # Solver work counters (colgen fills the last two; enumeration-based
+    # paths fill the first): how many raw patterns the enumerator visited,
+    # how many columns pricing added to the master, and how many
+    # LP-price-add rounds the column generation ran.
+    patterns_enumerated: int = 0
+    columns_generated: int = 0
+    pricing_rounds: int = 0
 
 
 def group_items(problem: Problem) -> tuple[list[np.ndarray], list[int], list[list[int]]]:
@@ -170,7 +181,7 @@ def dual_prices(
         best = float(per_bin.max()) if per_bin.size else 0.0
         unbounded.append(not np.isfinite(best) or best > 4096.0)
         enum_demands.append(int(min(max(best, 1.0), 4096.0)))
-    pat_counts, pat_costs, _reps, truncated = _pattern_columns(
+    pat_counts, pat_costs, _reps, truncated, _n_enum = _pattern_columns(
         problem, class_reqs, enum_demands, max_patterns
     )
     if truncated or not pat_counts:
@@ -281,18 +292,29 @@ def _pattern_columns(
     cheapest representative matters), then dominated count vectors —
     another column covering >= per class at <= cost with something strict —
     are dropped in one chunked broadcast.  Returns (pat_counts, pat_costs,
-    pat_reps); all empty when nothing packs.
+    pat_reps, truncated, n_enumerated); the first three empty when nothing
+    packs.
     """
     n_classes = len(class_reqs)
     by_counts: dict[tuple[int, ...], tuple[float, BinType, tuple]] = {}
     truncated = False
+    n_enumerated = 0
     for bt in problem.bin_types:
         cap = problem.effective_capacity(bt)
         pats = enumerate_patterns(cap, class_reqs, demands, max_patterns)
-        # enumerate_patterns stops silently at its budget; record it so
+        n_enumerated += len(pats)
+        # enumerate_patterns stops at its budget; record AND log it so
         # callers needing the FULL maximal-pattern set (dual_prices'
-        # admissibility argument) can degrade instead of over-certifying.
-        truncated = truncated or len(pats) >= max_patterns
+        # admissibility argument) can degrade instead of over-certifying,
+        # and the drop is visible rather than silent.
+        if len(pats) >= max_patterns:
+            truncated = True
+            _log.warning(
+                "pattern enumeration for bin type %r hit the cap "
+                "(max_patterns=%d, %d classes): further maximal patterns "
+                "were discarded and the result is no longer certifiable",
+                bt.name, max_patterns, n_classes,
+            )
         for pat in pats:
             vec = [0] * n_classes
             for (class_i, _choice_i), cnt in pat:
@@ -302,7 +324,7 @@ def _pattern_columns(
             if old is None or bt.cost < old[0] - _EPS:
                 by_counts[key] = (bt.cost, bt, pat)
     if not by_counts:
-        return [], [], [], truncated
+        return [], [], [], truncated, n_enumerated
 
     count_mat = np.asarray(list(by_counts.keys()), dtype=np.int64)
     cost_arr = np.asarray([v[0] for v in by_counts.values()], dtype=np.float64)
@@ -326,7 +348,7 @@ def _pattern_columns(
     pat_counts = [count_mat[i].tolist() for i in kept.tolist()]
     pat_costs = [float(cost_arr[i]) for i in kept.tolist()]
     pat_reps = [reps[i] for i in kept.tolist()]
-    return pat_counts, pat_costs, pat_reps, truncated
+    return pat_counts, pat_costs, pat_reps, truncated, n_enumerated
 
 
 def _covering_lp(
@@ -397,7 +419,9 @@ def _covering_lp(
 
 
 def solve_arcflow(
-    problem: Problem, max_dp_states: int = 2_000_000
+    problem: Problem,
+    max_dp_states: int = 2_000_000,
+    max_patterns: int = 200_000,
 ) -> tuple[Solution, ArcflowStats]:
     t = problem.tensors()
     bad = np.where(~np.isfinite(t.cheapest_host))[0]
@@ -417,12 +441,13 @@ def solve_arcflow(
     # Truncation is survivable here (the DP still searches the enumerated
     # patterns and the LP duals only prune within that set) but the result
     # can no longer be certified optimal — better patterns may exist.
-    pat_counts, pat_costs, pat_reps, truncated = _pattern_columns(
-        problem, class_reqs, demands
+    pat_counts, pat_costs, pat_reps, truncated, n_enum = _pattern_columns(
+        problem, class_reqs, demands, max_patterns
     )
     if not pat_counts:
         raise InfeasibleError("no feasible packing exists")
     stats.n_patterns = len(pat_counts)
+    stats.patterns_enumerated = n_enum
     if truncated:
         stats.optimal = False
 
@@ -439,8 +464,48 @@ def solve_arcflow(
     # huge demand lattices from being enumerated.
     demands_f = np.asarray(demands, dtype=np.float64)
     dual_y, lp_primal = _covering_lp(pat_mat, pat_cost_arr, demands_f)
+    stats.lp_bound = float(demands_f @ dual_y)
+    sol = covering_search(
+        problem, class_reqs, demands, members,
+        pat_counts, pat_costs, pat_reps,
+        dual_y, lp_primal, max_dp_states, stats,
+    )
+    return sol, stats
+
+
+def covering_search(
+    problem: Problem,
+    class_reqs: Sequence[np.ndarray],
+    demands: Sequence[int],
+    members: Sequence[Sequence[int]],
+    pat_counts: list[list[int]],
+    pat_costs: list[float],
+    pat_reps: list[tuple[float, BinType, tuple]],
+    dual_y: np.ndarray,
+    lp_primal: np.ndarray,
+    max_dp_states: int,
+    stats: ArcflowStats,
+    ub_hint: Solution | None = None,
+) -> Solution:
+    """Exact covering search over a given column set.
+
+    The back half of the arc-flow solve, shared with column generation
+    (`colgen` hands it the generated column pool instead of the full
+    enumeration): LP-rounding incumbent, reduced-cost column fixing
+    against the incumbent, then the memoized best-bound demand-lattice
+    DP.  ``dual_y`` must be admissible (``pattern·y <= cost`` for every
+    demand-capped feasible pattern — integer-solution-admissible is
+    enough); the result is then optimal *over the given columns*, or the
+    anytime incumbent with ``stats.optimal = False`` when the
+    ``max_dp_states`` budget is hit.  ``stats.dp_states`` is updated;
+    ``stats.optimal`` is only ever downgraded.
+    """
+    t = problem.tensors()
+    n_classes = len(class_reqs)
+    pat_mat = np.asarray(pat_counts, dtype=np.float64)  # (P, K)
+    pat_cost_arr = np.asarray(pat_costs, dtype=np.float64)
+    demands_f = np.asarray(demands, dtype=np.float64)
     lp_value = float(demands_f @ dual_y)
-    stats.lp_bound = lp_value
 
     # Greedy cover from an arbitrary start demand: completes the rounding
     # incumbent and serves as the anytime fallback.
@@ -508,8 +573,12 @@ def solve_arcflow(
 
     ub_sol = materialize(ub_reps)
     ub_cost = ub_sol.cost  # realized cost (unused rounded bins are dropped)
+    # An externally supplied incumbent (e.g. colgen's dive) tightens both
+    # the reduced-cost fixing below and the final comparison.
+    if ub_hint is not None and ub_hint.cost < ub_cost - _EPS:
+        ub_sol, ub_cost = ub_hint, ub_hint.cost
     if ub_cost <= lp_value + 1e-9:
-        return ub_sol, stats  # incumbent meets the LP bound: optimal
+        return ub_sol  # incumbent meets the LP bound: optimal
 
     # Reduced-cost column fixing: a pattern whose LP reduced cost pushes the
     # bound to or past the incumbent cannot appear in any strictly better
@@ -520,7 +589,7 @@ def solve_arcflow(
         any(pat_counts[p][c] for p in survive) for c in range(n_classes)
     ):
         # Some class is uncoverable by improving columns: incumbent optimal.
-        return ub_sol, stats
+        return ub_sol
     pat_counts = [pat_counts[p] for p in survive]
     pat_costs = [pat_costs[p] for p in survive]
     pat_reps = [pat_reps[p] for p in survive]
@@ -670,11 +739,11 @@ def solve_arcflow(
         # the rounding incumbent, flagged non-optimal.
         stats.dp_states = states
         stats.optimal = False
-        return ub_sol, stats
+        return ub_sol
     stats.dp_states = states
     if total_cost >= ub_cost - _EPS:
         # Nothing strictly better than the incumbent exists.
-        return ub_sol, stats
+        return ub_sol
 
     # --- reconstruction ----------------------------------------------------
     reps_seq = []
@@ -685,4 +754,4 @@ def solve_arcflow(
         demand = child
     sol = materialize(reps_seq)
     assert abs(sol.cost - total_cost) < 1e-6, (sol.cost, total_cost)
-    return sol, stats
+    return sol

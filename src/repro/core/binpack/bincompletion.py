@@ -87,6 +87,14 @@ class SolveStats:
     pruned: int = 0
     optimal: bool = True
     incumbent_updates: int = 0
+    # Pattern/column work counters, shared vocabulary with `ArcflowStats`
+    # so benchmarks can report any solver uniformly.  The placement B&B
+    # enumerates bin completions rather than pricing an LP, so
+    # `patterns_enumerated` counts completions tried and the colgen-style
+    # counters stay 0 unless a pricing-based solver fills them in.
+    patterns_enumerated: int = 0
+    columns_generated: int = 0
+    pricing_rounds: int = 0
 
 
 def _non_dominated_bins(problem: Problem) -> list[int]:

@@ -241,11 +241,26 @@ class FleetController:
         billing: BillingModel | None = None,
         billing_by_type: dict[str, BillingModel] | None = None,
         drain_on_notice: bool = True,
+        colgen_pool=None,
     ) -> None:
         from .policy import PinningPolicy
 
         self.manager = manager
         self.strategy = strategy
+        # Branch-and-price column pool, shared with the manager's solver
+        # routing (and, under a ShardedController, with every sibling
+        # cell).  Catalog-keyed, so it survives fleet churn: columns
+        # generated pricing one era keep seeding the master LP in the
+        # next, which is what makes colgen viable on the re-plan path.
+        if colgen_pool is None:
+            from .binpack import colgen
+
+            colgen_pool = getattr(manager, "colgen_pool", None)
+            if colgen_pool is None:
+                colgen_pool = colgen.ColumnPool()
+        self._colgen_pool = colgen_pool
+        if hasattr(manager, "colgen_pool"):
+            manager.colgen_pool = colgen_pool
         self.gap_threshold = gap_threshold
         self.sub_max_nodes = sub_max_nodes
         self.policy = policy if policy is not None else PinningPolicy()
@@ -1580,8 +1595,8 @@ class FleetController:
 
     def _refresh_prices(self, problem: Problem) -> None:
         try:
-            self._prices, _ = arcflow.dual_prices(problem)
-        except Exception:  # pattern blow-up etc.: density bound still holds
+            self._prices, _ = class_prices(problem, self._colgen_pool)
+        except Exception:  # pricing blow-up etc.: density bound still holds
             self._prices = {}
 
     def _lower_bound(self, problem: Problem) -> float:
@@ -1593,6 +1608,33 @@ class FleetController:
             keys = arcflow.item_class_keys(problem)
             lb = max(lb, sum(self._prices.get(key, 0.0) for key in keys))
         return lb
+
+
+#: Above this many item classes, arc-flow's capacity-maximal pattern
+#: enumeration (the price of churn-safe duals) explodes combinatorially;
+#: colgen prices the same LP by generating columns on demand instead.
+_COLGEN_CLASS_CUTOFF = 8
+
+
+def class_prices(
+    problem: Problem, colgen_pool=None
+) -> tuple[dict[bytes, float], float]:
+    """Churn-safe per-class dual prices, routed by class count.
+
+    Few classes: `arcflow.dual_prices` (exact pattern enumeration).  Many
+    classes: `colgen.dual_prices` with a warm column pool — budgeted, but
+    its Farley-scaled duals satisfy the same admissibility contract
+    (``pattern · y <= pattern cost`` for every packing over the catalog),
+    so callers can swap them freely.
+    """
+    n_classes = len(arcflow.group_items(problem)[0])
+    if n_classes > _COLGEN_CLASS_CUTOFF:
+        from .binpack import colgen
+
+        return colgen.dual_prices(
+            problem, colgen_pool, max_rounds=12, exact_budget=10_000
+        )
+    return arcflow.dual_prices(problem)
 
 
 def _gap(cost: float, lb: float) -> float:

@@ -51,6 +51,7 @@ __all__ = [
     "CONTINUOUS",
     "InstanceRecord",
     "LifecycleEngine",
+    "estimate_hazards",
 ]
 
 _EPS = 1e-9
@@ -450,3 +451,50 @@ class LifecycleEngine:
         keep = billing.billed_hours(max(0.0, until - rec.provisioned_at))
         cut = billing.billed_hours(max(0.0, at - rec.provisioned_at))
         return max(0.0, self._priced(rec, keep) - self._priced(rec, cut))
+
+
+def estimate_hazards(
+    engine: LifecycleEngine,
+    *,
+    until: float | None = None,
+    min_exposure_hours: float = 0.0,
+) -> dict[str, float]:
+    """Empirical per-type interruption rates from the ledger.
+
+    The maximum-likelihood estimate for a Poisson interruption process:
+    ``lambda_hat[type] = preemptions observed / instance-hours exposed``,
+    pooling every instance of the type the ledger has ever tracked
+    (terminated instances contribute their whole lifetime; live ones
+    their lifetime so far).  ``until`` bounds the observation window and
+    defaults to the latest timestamp on record, so a standalone ledger
+    can be estimated without knowing the trace clock.  Types with less
+    than ``min_exposure_hours`` of exposure are omitted — an estimate off
+    minutes of data is noise, and omission lets the caller keep its prior
+    (`policy.risk_adjusted_catalog(hazards=...)` falls back to the
+    catalog's static hazard for missing names).
+
+    Feeding the result back through `policy.risk_adjusted_catalog` closes
+    the loop the static catalog guesses at: allocation prices eviction
+    risk at the rate the cloud has actually been evicting.
+    """
+    if until is None:
+        until = 0.0
+        for rec in engine.records():
+            for stamp in (
+                rec.provisioned_at, rec.terminated_at, rec.noticed_at
+            ):
+                if stamp is not None and stamp > until:
+                    until = stamp
+    hours: dict[str, float] = {}
+    hits: dict[str, int] = {}
+    for rec in engine.records():
+        hours[rec.instance_type] = (
+            hours.get(rec.instance_type, 0.0) + rec.lifetime_hours(until)
+        )
+        if rec.preempted_at is not None and rec.preempted_at <= until:
+            hits[rec.instance_type] = hits.get(rec.instance_type, 0) + 1
+    return {
+        name: hits.get(name, 0) / exposure
+        for name, exposure in hours.items()
+        if exposure > max(min_exposure_hours, _EPS)
+    }

@@ -76,14 +76,20 @@ class ResourceManager:
         profiles: ProfileTable,
         *,
         utilization_cap: float = 0.9,
-        solver: str = "auto",  # auto | bincompletion | arcflow | heuristic
+        solver: str = "auto",  # auto | bincompletion | arcflow | colgen | heuristic
         max_nodes: int = 2_000_000,
+        colgen_pool: "object | None" = None,
     ) -> None:
         self.catalog = tuple(catalog)
         self.profiles = profiles
         self.utilization_cap = utilization_cap
         self.solver = solver
         self.max_nodes = max_nodes
+        # Branch-and-price column pool: catalog-keyed, so one pool can be
+        # shared by every solve over the same bin types (and reused across
+        # fleet churn — see `binpack.colgen.ColumnPool`).  Callers
+        # (controllers, shards) may inject their own to share columns.
+        self.colgen_pool = colgen_pool
         # formulate() memo: repeated allocations of the same fleet (solver
         # cross-checks, simulator re-plans, benchmark timing loops) reuse
         # one Problem instance and therefore one ProblemTensors build.
@@ -367,8 +373,11 @@ class ResourceManager:
         for the exact DP but the class structure still holds (hundreds of
         cameras over a handful of stream kinds), the budgeted arc-flow's
         LP-rounding incumbent beats the budgeted B&B by a wide margin, so
-        it is preferred there too.  Otherwise fall back to bin-completion,
-        keeping whichever incumbent is cheaper.
+        it is preferred there too.  Many-class high-multiplicity fleets —
+        where arc-flow's pattern *enumeration* itself explodes — route to
+        branch-and-price (`binpack.colgen`), which generates only the
+        columns the covering LP asks for.  Otherwise fall back to
+        bin-completion, keeping whichever incumbent is cheaper.
 
         `incumbent` is an optional warm start (a feasible Solution of
         `problem`, e.g. a repaired previous plan): bin-completion seeds
@@ -385,6 +394,9 @@ class ResourceManager:
             return merged(heuristics.first_fit_decreasing(problem), False)
         if self.solver == "arcflow":
             sol, st = arcflow.solve_arcflow(problem)
+            return merged(sol, st.optimal)
+        if self.solver == "colgen":
+            sol, st = self._solve_colgen(problem, incumbent)
             return merged(sol, st.optimal)
         if self.solver == "bincompletion":
             sol, st = bincompletion.solve(
@@ -411,7 +423,7 @@ class ResourceManager:
             if bc_st.optimal and bc_sol.cost <= sol.cost + 1e-9:
                 return sol, True
             return merged(sol, False)
-        if len(classes) <= 12 and len(problem.items) >= 4 * len(classes):
+        if len(classes) <= 8 and len(problem.items) >= 4 * len(classes):
             # High-multiplicity fleet, lattice too big for the exact DP:
             # budgeted arc-flow (pattern LP + rounding) lands within ~1% of
             # the covering-LP bound where the budgeted B&B strands 15-20%
@@ -420,7 +432,36 @@ class ResourceManager:
                 problem, max_dp_states=min(self.max_nodes, 200_000)
             )
             return merged(sol, st.optimal)
+        if len(problem.items) >= 2 * len(classes):
+            # Many classes AND high multiplicity: pattern enumeration is
+            # hopeless and the placement B&B strands far above the LP, but
+            # branch-and-price generates exactly the columns the covering
+            # LP wants (certified gap even when pricing is budget-capped).
+            sol, st = self._solve_colgen(problem, incumbent)
+            return merged(sol, st.optimal)
         sol, st = bincompletion.solve(
             problem, max_nodes=self.max_nodes, incumbent=incumbent
         )
         return sol, st.optimal
+
+    def _solve_colgen(self, problem: Problem, incumbent: Solution | None):
+        """Branch-and-price with the manager's shared (lazy) column pool.
+
+        Budgets here are the *live* ones — tighter than `solve_colgen`'s
+        defaults, because this sits on the controller re-plan path where a
+        warm pool (columns survive churn) does most of the work.  The
+        returned gap stays certified either way; offline/bench callers
+        wanting the full squeeze call `colgen.solve_colgen` directly.
+        """
+        from .binpack import colgen
+
+        if self.colgen_pool is None:
+            self.colgen_pool = colgen.ColumnPool()
+        return colgen.solve_colgen(
+            problem,
+            pool=self.colgen_pool,
+            incumbent=incumbent,
+            max_dp_states=min(self.max_nodes, 500_000),
+            max_rounds=30,
+            exact_budget=25_000,
+        )

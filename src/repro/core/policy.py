@@ -133,6 +133,7 @@ def risk_adjusted_catalog(
     *,
     billing_by_type=None,
     degraded_penalty: float = 0.0,
+    hazards: "dict[str, float] | None" = None,
 ):
     """Price a catalog's spot types at their risk-adjusted effective cost.
 
@@ -143,9 +144,20 @@ def risk_adjusted_catalog(
     lifecycle ledger actually bills — see `BinType.billed_rent`).
     On-demand entries are returned untouched, so a hazard-free catalog is
     bit-identical under this transform.
+
+    ``hazards`` overrides interruption rates per type name before
+    pricing — the online-estimation loop: feed it
+    `lifecycle.estimate_hazards(engine)` and allocation prices eviction
+    risk at the *observed* rate instead of the catalog's static guess.
+    Names absent from the map keep their static hazard; an override may
+    also put a rate on a type whose static hazard is 0 (the cloud
+    started reclaiming something the catalog called safe).
     """
     out = []
     for bt in catalog:
+        lam = bt.hazard if hazards is None else hazards.get(bt.name, bt.hazard)
+        if lam != bt.hazard:
+            bt = dataclasses.replace(bt, hazard=lam)
         if bt.hazard <= 0.0:
             out.append(bt)
             continue

@@ -43,7 +43,8 @@ from typing import Callable, Hashable, Sequence
 
 from .binpack import arcflow, heuristics
 from .binpack.problem import Problem, Solution
-from .controller import FleetController, ReplanResult, _gap
+from .binpack.colgen import ColumnPool
+from .controller import FleetController, ReplanResult, _gap, class_prices
 from .lifecycle import BillingModel, LifecycleEngine
 from .manager import AllocationPlan, PlacedStream
 from .strategies import ST3, Strategy
@@ -238,6 +239,15 @@ class ShardedController:
         self._last_lb: dict[Hashable, float] = {}
         self._seg_cache: dict = {}  # key -> (plan, offset, shifted placements)
         self._events_since_rebalance = 0
+        # ONE branch-and-price column pool for the whole shard: every
+        # cell prices over the same catalog, so columns one cell
+        # generates warm-start every other cell's master LP (and the
+        # manager's full re-solve fallback).
+        self._colgen_pool: ColumnPool = (
+            getattr(manager, "colgen_pool", None) or ColumnPool()
+        )
+        if hasattr(manager, "colgen_pool"):
+            manager.colgen_pool = self._colgen_pool
         self.lifecycle = _MergedLedger(self)
 
     # ------------------------------------------------------------ properties
@@ -481,8 +491,8 @@ class ShardedController:
         prices: dict[Hashable, dict[bytes, float]] = {}
         for key, c in live:
             try:
-                prices[key], _ = arcflow.dual_prices(c._problem)
-            except Exception:  # pattern blow-up: cell just exports nothing
+                prices[key], _ = class_prices(c._problem, self._colgen_pool)
+            except Exception:  # pricing blow-up: cell just exports nothing
                 prices[key] = {}
         cands: list[tuple[float, str, Hashable, Hashable]] = []
         for key, c in live:
@@ -546,6 +556,7 @@ class ShardedController:
             kwargs["billing"] = self.billing
         if self.billing_by_type is not None:
             kwargs["billing_by_type"] = self.billing_by_type
+        kwargs["colgen_pool"] = self._colgen_pool
         ctrl = FleetController(self.manager, self.strategy, **kwargs)
         # Cell 0 counts from 0, so a single-cell config allocates the
         # exact uid sequence the flat controller would.

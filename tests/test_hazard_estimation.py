@@ -1,0 +1,185 @@
+"""Online hazard estimation closing the spot-pricing loop (PR 8).
+
+`lifecycle.estimate_hazards` turns the ledger into per-type empirical
+interruption rates (the Poisson MLE hits / instance-hours), and
+`policy.risk_adjusted_catalog(hazards=...)` reprices eviction risk at
+those observed rates instead of the catalog's static guess.  Pinned
+here: the MLE arithmetic on a hand-built ledger, λ-recovery on a long
+seeded `synthetic_timed_trace` replay (the regression the loop exists
+for), and the catalog override semantics.
+"""
+import numpy as np
+import pytest
+
+from repro.core.catalog import paper_ec2_catalog, with_spot_variants
+from repro.core.lifecycle import BillingModel, LifecycleEngine, estimate_hazards
+from repro.core.manager import ResourceManager
+from repro.core.policy import risk_adjusted_catalog, spot_effective_cost
+from repro.core.profiler import paper_profile_table
+from repro.core.streams import (
+    AnalysisProgram,
+    InstancePreempted,
+    StreamSpec,
+    synthetic_timed_trace,
+)
+
+VGG = AnalysisProgram("VGG-16", "vgg16")
+ZF = AnalysisProgram("ZF", "zf")
+KINDS = [(VGG, 0.25), (VGG, 0.2), (ZF, 0.5), (ZF, 2.0), (ZF, 5.0)]
+HOURLY = BillingModel(boot_hours=2.0 / 60.0, quantum_hours=1.0)
+
+
+def _streams(n):
+    return [StreamSpec(f"s{i}", *KINDS[i % len(KINDS)]) for i in range(n)]
+
+
+# ----------------------------------------------------------- MLE arithmetic
+
+
+def test_estimate_hazards_is_the_poisson_mle():
+    eng = LifecycleEngine(BillingModel())
+    # Three spot instances: one preempted at t=10, two run to t=20.
+    eng.provision(1, "x-spot", 0.1, at=0.0)
+    eng.provision(2, "x-spot", 0.1, at=0.0)
+    eng.provision(3, "x-spot", 0.1, at=0.0)
+    eng.preempt(1, at=10.0)
+    eng.decommission(2, at=20.0)
+    eng.decommission(3, at=20.0)
+    # One on-demand instance, never interrupted.
+    eng.provision(4, "x", 0.3, at=0.0)
+    eng.decommission(4, at=20.0)
+    est = estimate_hazards(eng)  # until defaults to the latest stamp (20)
+    assert est["x-spot"] == pytest.approx(1.0 / (10.0 + 20.0 + 20.0))
+    assert est["x"] == 0.0
+
+
+def test_estimate_hazards_until_and_exposure_floor():
+    eng = LifecycleEngine(BillingModel())
+    eng.provision(1, "a-spot", 0.1, at=0.0)
+    eng.preempt(1, at=8.0)
+    eng.provision(2, "b-spot", 0.1, at=0.0)
+    # Clamp the window before the preemption: the hit must not count,
+    # and the live instance's exposure is cut at ``until``.
+    est = estimate_hazards(eng, until=4.0)
+    assert est["a-spot"] == 0.0
+    assert est["b-spot"] == 0.0
+    # Thin types fall out rather than reporting noise.
+    est = estimate_hazards(eng, until=100.0, min_exposure_hours=50.0)
+    assert "a-spot" not in est  # only 8h of exposure
+    assert est["b-spot"] == 0.0  # 100h of exposure, no hits
+    # Empty ledger: nothing to estimate, nothing crashes.
+    assert estimate_hazards(LifecycleEngine(BillingModel())) == {}
+
+
+# ------------------------------------------------------- catalog override
+
+
+def test_risk_adjusted_catalog_hazard_override():
+    cat = with_spot_variants(
+        paper_ec2_catalog(), price_ratio=0.35, hazard=0.2
+    )
+    spot = next(bt for bt in cat if bt.name.endswith("-spot"))
+    base = {bt.name: bt for bt in cat}
+
+    # Missing names keep the static hazard: identical pricing.
+    static = {bt.name: bt for bt in risk_adjusted_catalog(cat, HOURLY)}
+    noop = {
+        bt.name: bt
+        for bt in risk_adjusted_catalog(cat, HOURLY, hazards={})
+    }
+    assert noop == static
+
+    # A larger observed rate prices the spot type strictly higher.
+    bumped = {
+        bt.name: bt
+        for bt in risk_adjusted_catalog(
+            cat, HOURLY, hazards={spot.name: 0.8}
+        )
+    }
+    assert bumped[spot.name].hazard == 0.8
+    assert bumped[spot.name].cost > static[spot.name].cost
+    import dataclasses
+
+    assert bumped[spot.name].cost == pytest.approx(
+        spot_effective_cost(
+            dataclasses.replace(spot, hazard=0.8), HOURLY
+        )
+    )
+    # Other types are untouched by a single-name override.
+    others = [n for n in base if n != spot.name]
+    assert all(bumped[n] == static[n] for n in others)
+
+    # Observed-safe (rate 0) spot types fall back to face-value pricing.
+    safe = {
+        bt.name: bt
+        for bt in risk_adjusted_catalog(
+            cat, HOURLY, hazards={spot.name: 0.0}
+        )
+    }
+    assert safe[spot.name].hazard == 0.0
+    assert safe[spot.name].cost == base[spot.name].cost
+
+    # The cloud reclaiming an "on-demand-safe" type starts pricing it.
+    od = next(bt for bt in cat if not bt.name.endswith("-spot"))
+    risky = {
+        bt.name: bt
+        for bt in risk_adjusted_catalog(cat, HOURLY, hazards={od.name: 0.4})
+    }
+    assert risky[od.name].hazard == 0.4
+    assert risky[od.name].cost > base[od.name].cost
+
+
+# ------------------------------------------------------ λ-recovery replay
+
+
+def test_estimated_hazards_recover_trace_rate():
+    """Long seeded trace at reference rate 0.5/hr against a catalog whose
+    spot types carry λ=0.2: the ledger's MLE must land near 0.2 for the
+    spot fleet and exactly 0 for every on-demand type (regression for
+    the estimate→reprice loop; a thinning or exposure bug shows up as a
+    factor-of-pool error here, far outside the statistical band)."""
+    lam = 0.2
+    cat = with_spot_variants(paper_ec2_catalog(), price_ratio=0.35, hazard=lam)
+    mgr = ResourceManager(cat, paper_profile_table(), max_nodes=50_000)
+    ctrl = mgr.controller(billing=HOURLY)
+    streams = _streams(8)
+    ctrl.reset(streams, at=0.0)
+    trace = synthetic_timed_trace(
+        streams,
+        np.random.RandomState(808),
+        n_events=40,
+        mean_gap_hours=2.0,
+        preemption_hazard=0.5,
+        hazard_pool=16,
+    )
+    kills = 0
+    for ev in trace.events:
+        r = ctrl.apply(ev)
+        if isinstance(ev, InstancePreempted) and r.mode != "noop":
+            kills += 1
+    assert kills >= 10, "trace too quiet to regress the estimator against"
+
+    est = estimate_hazards(ctrl.lifecycle, until=trace.horizon)
+    spot_names = [n for n in est if n.endswith("-spot")]
+    od_names = [n for n in est if not n.endswith("-spot")]
+    assert spot_names
+    # Risk-adjusted pricing may keep the plan all-spot; any on-demand
+    # instances the plan did open must show a zero observed rate.
+    assert all(est[n] == 0.0 for n in od_names)
+    # Pool the spot fleet for the rate check (single types can be thin).
+    hours = {n: 0.0 for n in est}
+    for rec in ctrl.lifecycle.records():
+        if rec.instance_type in hours:
+            hours[rec.instance_type] += rec.lifetime_hours(trace.horizon)
+    pooled = sum(est[n] * hours[n] for n in spot_names) / sum(
+        hours[n] for n in spot_names
+    )
+    assert pooled == pytest.approx(lam, rel=0.5)
+
+    # Closing the loop: the estimates feed straight into catalog pricing.
+    repriced = {
+        bt.name: bt
+        for bt in risk_adjusted_catalog(cat, HOURLY, hazards=est)
+    }
+    for n in spot_names:
+        assert repriced[n].hazard == pytest.approx(est[n])
