@@ -17,9 +17,11 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
                        all-on-demand on a preemption-heavy trace
   storm              — fault-injection storms: SLA tiers, graceful frame-rate
                        degradation, interruption-notice draining
-  shard              — hierarchical sharded controller: 20k-stream replay,
-                       vmapped per-cell batched repair, flat-infeasibility
-                       probe, cost parity vs the flat controller
+  shard              — hierarchical sharded controller: 100k-stream replay
+                       through the batched event pipeline (vs the serial
+                       per-event loop, bit-identity gated), one-dispatch
+                       certification, vmapped per-cell batched repair,
+                       flat-infeasibility probe, cost parity vs flat
   roofline_report    — §Roofline table from dry-run artifacts
 
 Suites that emit a gated artifact (``churn_replan`` → ``BENCH_replan.json``,

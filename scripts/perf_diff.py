@@ -24,7 +24,10 @@ Handles two artifact shapes:
     splits, notice-conversion rate, utility penalties, and per-tier
     violation counts) and the sharded-controller scaling metrics
     (BENCH_shard.json's per-event latencies, vmap-repair speedup, and
-    flat-vs-sharded cost parity) and the branch-and-price solver metrics
+    flat-vs-sharded cost parity), the shard event-pipeline metrics
+    (batched-vs-serial apply wall-times and bit-identity delta,
+    one-dispatch certification speedup, and the pipeline stats counters)
+    and the branch-and-price solver metrics
     (BENCH_solver.json's certified colgen/enumeration gaps, batched
     pricing speedup, and kernel bit-equivalence probe).
 """
@@ -73,6 +76,19 @@ _SHARD_PREFIXES = (
 )
 
 
+# Shard event-pipeline metrics (BENCH_shard.json, PR 9): batched vs
+# serial apply wall-times and bit-identity delta, one-dispatch vs
+# per-cell certification, and the pipeline's observability counters
+# (`ShardedController.stats()` surfaced into the artifact meta).
+_SHARD_PIPELINE_PREFIXES = (
+    "batched_apply_",
+    "serial_apply_",
+    "batched_certify_",
+    "serial_certify_",
+    "pipeline_",
+)
+
+
 # Branch-and-price solver metrics (BENCH_solver.json): certified gaps,
 # the batched-pricing speedup, and the kernel bit-equivalence probe.
 _COLGEN_PREFIXES = (
@@ -100,7 +116,11 @@ def _is_storm_key(k: str) -> bool:
 
 
 def _is_shard_key(k: str) -> bool:
-    return k.startswith(_SHARD_PREFIXES)
+    return k.startswith(_SHARD_PREFIXES) and not _is_shard_pipeline_key(k)
+
+
+def _is_shard_pipeline_key(k: str) -> bool:
+    return k.startswith(_SHARD_PIPELINE_PREFIXES)
 
 
 def _diff_section(a: dict, b: dict, predicate, label: str, fmt) -> None:
@@ -152,6 +172,14 @@ def diff_shard(a: dict, b: dict) -> None:
     _diff_section(a, b, _is_shard_key, "shard scaling metric", fmt)
 
 
+def diff_shard_pipeline(a: dict, b: dict) -> None:
+    def fmt(k, x, y, d):
+        unit = "s" if k.endswith("_s") else "x" if k.endswith("speedup") else " "
+        return f"{x:11.4g}{unit} {y:11.4g}{unit} {d:+8.1%}"
+
+    _diff_section(a, b, _is_shard_pipeline_key, "shard pipeline metric", fmt)
+
+
 def diff_billed(a: dict, b: dict) -> None:
     def fmt(k, x, y, d):
         unit = "s" if k.startswith("degraded") else "$"
@@ -173,6 +201,7 @@ def diff_meta(a: dict, b: dict) -> None:
     diff_spot(a, b)
     diff_storm(a, b)
     diff_shard(a, b)
+    diff_shard_pipeline(a, b)
     diff_colgen(a, b)
     am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
@@ -182,6 +211,7 @@ def diff_meta(a: dict, b: dict) -> None:
         and not _is_spot_key(k)
         and not _is_storm_key(k)
         and not _is_shard_key(k)
+        and not _is_shard_pipeline_key(k)
         and not _is_colgen_key(k)
         and (
             isinstance(am.get(k), (int, float))

@@ -70,7 +70,13 @@ except Exception:  # pragma: no cover - jax-less environments
     _knap = None
     HAS_KERNEL = False
 
-__all__ = ["ColumnPool", "solve_colgen", "dual_prices", "HAS_KERNEL"]
+__all__ = [
+    "ColumnPool",
+    "solve_colgen",
+    "dual_prices",
+    "batched_dual_prices",
+    "HAS_KERNEL",
+]
 
 _EPS = 1e-9
 #: Pricing improvement threshold: a column must beat its bin cost by this.
@@ -511,6 +517,28 @@ def _counts_to_entries(
     return out
 
 
+def _exact_fit_bounds(
+    caps: Sequence[np.ndarray], grid: _PricingGrid
+) -> np.ndarray:
+    """Real-valued per-(kind, entry) copy bounds for the exact pricer."""
+    e_n = len(grid.entries)
+    fit = np.zeros((len(caps), e_n), dtype=np.int64)
+    for k, cap in enumerate(caps):
+        for e in range(e_n):
+            re_ = grid.entry_reqs[e]
+            pos = re_ > _EPS
+            if not (re_ <= cap + _EPS).all():
+                continue  # does not fit even once
+            if not pos.any():
+                fit[k, e] = _FIT_CLAMP
+            else:
+                fit[k, e] = min(
+                    int(math.floor((cap[pos] / re_[pos]).min() + 1e-9)),
+                    _FIT_CLAMP,
+                )
+    return fit
+
+
 @dataclasses.dataclass
 class _RootResult:
     dual_y: np.ndarray  # last master duals (pool-admissible, unscaled)
@@ -550,22 +578,7 @@ def _root_colgen(
         for bt in problem.bin_types
     ]
     n_classes = len(keys)
-    # Real-valued per-(kind, entry) copy bounds for the exact pricer.
-    e_n = len(grid.entries)
-    exact_fit = np.zeros((len(caps), e_n), dtype=np.int64)
-    for k, cap in enumerate(caps):
-        for e in range(e_n):
-            re_ = grid.entry_reqs[e]
-            pos = re_ > _EPS
-            if not (re_ <= cap + _EPS).all():
-                continue  # does not fit even once
-            if not pos.any():
-                exact_fit[k, e] = _FIT_CLAMP
-            else:
-                exact_fit[k, e] = min(
-                    int(math.floor((cap[pos] / re_[pos]).min() + 1e-9)),
-                    _FIT_CLAMP,
-                )
+    exact_fit = _exact_fit_bounds(caps, grid)
     if demand_cap is not None:
         exact_fit = np.minimum(
             exact_fit, demand_cap[grid.entry_class][None, :]
@@ -1045,24 +1058,7 @@ def dual_prices(
         problem, pool, class_reqs, keys, class_reqs_by_key
     )
     grid = _discretize(problem, class_reqs, grid_states)
-    # A class whose copy count is physically unbounded (or beyond the
-    # clamp) could pack denser than anything pricing explores: only 0 is
-    # a safe price for it.  Same r_min rule as arcflow.dual_prices.
-    caps = np.asarray(
-        [problem.effective_capacity(bt) for bt in problem.bin_types]
-    )
-    zero_price = ~coverable
-    for c, reqs in enumerate(class_reqs):
-        r_min = np.asarray(reqs, dtype=np.float64).min(axis=0)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            per_bin = np.where(
-                r_min[None, :] > _EPS,
-                np.floor(caps / np.maximum(r_min[None, :], 1e-300) + _EPS),
-                np.inf,
-            ).min(axis=-1)
-        best = float(per_bin.max()) if per_bin.size else 0.0
-        if not np.isfinite(best) or best > float(_FIT_CLAMP):
-            zero_price[c] = True
+    zero_price = _zero_price_mask(problem, class_reqs, coverable)
 
     # Master RHS: the live fleet's demands (uncoverable classes enter at
     # 0 so the LP stays bounded); admissibility never depends on them.
@@ -1077,3 +1073,252 @@ def dual_prices(
     demands_f = np.asarray(demands, dtype=np.float64)
     prices = {k: float(y) for k, y in zip(keys, root.y_cert.tolist())}
     return prices, float(demands_f @ root.y_cert)
+
+
+def _zero_price_mask(
+    problem: Problem,
+    class_reqs: Sequence[np.ndarray],
+    coverable: np.ndarray,
+) -> np.ndarray:
+    """Classes only 0 is a safe price for.
+
+    A class whose copy count is physically unbounded (or beyond the
+    clamp) could pack denser than anything pricing explores: only 0 is
+    a safe price for it.  Same r_min rule as arcflow.dual_prices.
+    """
+    caps = np.asarray(
+        [problem.effective_capacity(bt) for bt in problem.bin_types]
+    )
+    zero_price = ~np.asarray(coverable, dtype=bool)
+    for c, reqs in enumerate(class_reqs):
+        r_min = np.asarray(reqs, dtype=np.float64).min(axis=0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            per_bin = np.where(
+                r_min[None, :] > _EPS,
+                np.floor(caps / np.maximum(r_min[None, :], 1e-300) + _EPS),
+                np.inf,
+            ).min(axis=-1)
+        best = float(per_bin.max()) if per_bin.size else 0.0
+        if not np.isfinite(best) or best > float(_FIT_CLAMP):
+            zero_price[c] = True
+    return zero_price
+
+
+def batched_dual_prices(
+    problems: Sequence[Problem],
+    pool: ColumnPool | None = None,
+    *,
+    max_rounds: int = 24,
+    grid_states: int = 8_192,
+    exact_budget: int = 5_000,
+    impl: str = "auto",
+    stats_out: dict | None = None,
+) -> list[tuple[dict[bytes, float], float]]:
+    """Churn-safe class prices for MANY same-catalog problems at once.
+
+    The sharded controller's one-dispatch certification: every cell
+    prices over the SAME catalog, so all cells share one pricing grid,
+    one column pool, and — per colgen round — ONE batched
+    `price_knapsacks` dispatch covering every (cell, bin kind) knapsack.
+    Per-cell restricted-master LPs stay separate (each cell's *demands*
+    differ, and `rebalance` arbitrages on per-cell price differences),
+    but column generation is fleet-global: a column any cell discovers
+    immediately warm-starts every other cell's master.
+
+    Each returned ``(prices, lp_value)`` satisfies `dual_prices`'
+    admissibility contract — ``pattern·y <= cost`` for every
+    capacity-feasible packing over the catalog — via the same per-cell
+    Farley scaling.  When the grid prices a cell out, one budgeted DFS
+    per DISTINCT dual vector (cells at the same LP corner share it)
+    either supplies the columns the grid's resolution missed or PROVES
+    the cell's duals globally optimal — in which case the cell freezes
+    with its certificate and drops out of later rounds, so warm pools
+    converge in 1-2 rounds and cold pools pay the round count only for
+    cells still moving.  A tripped DFS budget keeps the cell active and
+    certifies with the fractional root bound at exit.
+
+    Problems over mixed catalogs (or a kernel-less install) fall back to
+    serial `dual_prices` per problem.  ``stats_out`` (optional dict)
+    accumulates ``pricing_dispatches`` / ``pricing_rounds`` counters.
+    """
+    problems = list(problems)
+    if not problems:
+        return []
+    sig0 = ColumnPool._catalog_sig(problems[0])
+    if not HAS_KERNEL or any(
+        ColumnPool._catalog_sig(p) != sig0 for p in problems[1:]
+    ):
+        out = []
+        for p in problems:
+            out.append(dual_prices(p, pool, max_rounds=max_rounds, impl=impl))
+            if stats_out is not None:
+                stats_out["pricing_dispatches"] = (
+                    stats_out.get("pricing_dispatches", 0) + 1
+                )
+        return out
+    if pool is None:
+        pool = ColumnPool()
+    ref = problems[0]
+    pool.ensure(ref)
+
+    # Union the cells' class sets (first-appearance order: stable).
+    union_keys: list[bytes] = []
+    union_reqs: list[np.ndarray] = []
+    class_reqs_by_key: dict[bytes, np.ndarray] = {}
+    per_cell: list[tuple[list[bytes], np.ndarray] | None] = []
+    for p in problems:
+        class_reqs, demands, _members = group_items(p)
+        if not len(class_reqs):
+            per_cell.append(None)
+            continue
+        keys = [class_key(r) for r in class_reqs]
+        for k, r in zip(keys, class_reqs):
+            if k not in class_reqs_by_key:
+                class_reqs_by_key[k] = r
+                union_keys.append(k)
+                union_reqs.append(r)
+        per_cell.append((keys, np.asarray(demands, dtype=np.float64)))
+    n_classes = len(union_keys)
+    if n_classes == 0:
+        return [({}, 0.0) for _ in problems]
+    key_idx = {k: i for i, k in enumerate(union_keys)}
+
+    coverable = _seed_singletons(
+        ref, pool, union_reqs, union_keys, class_reqs_by_key
+    )
+    grid = _discretize(ref, union_reqs, grid_states)
+    zero_price = _zero_price_mask(ref, union_reqs, coverable)
+
+    # Per-cell master RHS over the union classes (absent classes at 0).
+    rows = [i for i, pc in enumerate(per_cell) if pc is not None]
+    lp_demands = np.zeros((len(rows), n_classes))
+    for row, i in enumerate(rows):
+        keys, demands = per_cell[i]  # type: ignore[misc]
+        for k, d in zip(keys, demands):
+            lp_demands[row, key_idx[k]] = d
+    lp_demands[:, ~coverable] = 0.0
+
+    costs_k = np.asarray([bt.cost for bt in ref.bin_types])
+    caps = [
+        np.asarray(ref.effective_capacity(bt), dtype=np.float64)
+        for bt in ref.bin_types
+    ]
+    exact_fit = _exact_fit_bounds(caps, grid)
+
+    n_rows = lp_demands.shape[0]
+    Y = np.zeros((n_rows, n_classes))
+    # A cell whose DFS PROVES no improving pattern exists for its duals
+    # has converged globally: no column any other cell generates later
+    # can be violated by (or improve) its y, so it freezes and drops out
+    # of subsequent LP solves and pricing dispatches.  Its proven
+    # pricing optima double as its Farley certificate (scale ~1).
+    active = list(range(n_rows))
+    scale_rows = np.ones(n_rows)
+    # Budgeted-DFS pricing per DISTINCT dual vector: cells at the same
+    # LP corner share one DFS.  value: (improving columns, scale, proven)
+    dfs_cache: dict[bytes, tuple[bool, float, bool]] = {}
+
+    def _dfs_price(y: np.ndarray) -> tuple[bool, float, bool]:
+        sig = y.tobytes()
+        hit = dfs_cache.get(sig)
+        if hit is not None:
+            return hit
+        vals = y[grid.entry_class]
+        found = False
+        scale = 1.0
+        proven_all = True
+        for k, bt in enumerate(ref.bin_types):
+            val, cnt, proven, rb, extras = _exact_knapsack(
+                caps[k], grid.entry_reqs, vals,
+                exact_fit[k].astype(np.float64), exact_budget,
+                grid.entry_class, None,
+                improve_above=float(costs_k[k]) + _PRICE_EPS,
+            )
+            proven_all &= proven
+            if val > costs_k[k] + _PRICE_EPS:
+                for pat in [cnt] + extras:
+                    ent = _counts_to_entries(pat, grid, union_keys)
+                    if pool.add(ref, bt, ent, class_reqs_by_key):
+                        found = True
+            z = (val + 1e-9) if proven else rb
+            if z > _EPS and costs_k[k] < z:
+                scale = min(scale, max(float(costs_k[k]), 0.0) / z)
+        out = (found, max(scale, 0.0), proven_all)
+        dfs_cache[sig] = out
+        return out
+
+    for _round in range(max_rounds):
+        if not active:
+            break
+        pat_counts, pat_costs, _reps = pool.project(ref, union_keys)
+        if not pat_counts:
+            break  # nothing coverable: every price is 0
+        pat_mat = np.asarray(pat_counts, dtype=np.float64).reshape(
+            len(pat_counts), n_classes
+        )
+        pat_cost_arr = np.asarray(pat_costs, dtype=np.float64)
+        # Cells with identical demand vectors share one LP solve.
+        lp_cache: dict[bytes, np.ndarray] = {}
+        for row in active:
+            dem_sig = lp_demands[row].tobytes()
+            y = lp_cache.get(dem_sig)
+            if y is None:
+                y, _x = _covering_lp(pat_mat, pat_cost_arr, lp_demands[row])
+                y = np.where(zero_price, 0.0, y)
+                lp_cache[dem_sig] = y
+            Y[row] = y
+        # ONE dispatch: every active cell x bin kind priced together.
+        best, counts = _price_dp(grid, Y[active], None, impl)
+        dfs_cache.clear()  # the pool changed since last round's DFS runs
+        if stats_out is not None:
+            stats_out["pricing_dispatches"] = (
+                stats_out.get("pricing_dispatches", 0) + 1
+            )
+            stats_out["pricing_rounds"] = (
+                stats_out.get("pricing_rounds", 0) + 1
+            )
+        still_active: list[int] = []
+        for b_row, row in enumerate(active):
+            dp_found = False
+            for k, bt in enumerate(ref.bin_types):
+                if best[b_row, k] > costs_k[k] + _PRICE_EPS:
+                    ent = _counts_to_entries(
+                        counts[b_row, k], grid, union_keys
+                    )
+                    pool.add(ref, bt, ent, class_reqs_by_key)
+                    dp_found = True
+            if dp_found:
+                still_active.append(row)
+                continue
+            # Grid priced out for this cell: budgeted DFS either finds
+            # the columns the grid missed (stay active) or proves
+            # convergence (freeze with its certificate).
+            found, scale, proven = _dfs_price(Y[row])
+            if found:
+                still_active.append(row)
+            elif proven:
+                scale_rows[row] = scale
+            else:
+                still_active.append(row)  # budget tripped: keep trying
+        active = still_active
+
+    # Cells still active at exit certify with whatever scale their last
+    # duals support (budgeted DFS / fractional root bounds — admissible
+    # either way).
+    for row in active:
+        _found, scale, _proven = _dfs_price(Y[row])
+        scale_rows[row] = scale
+
+    results: list[tuple[dict[bytes, float], float]] = []
+    row = 0
+    for pc in per_cell:
+        if pc is None:
+            results.append(({}, 0.0))
+            continue
+        y_cert = Y[row] * scale_rows[row]
+        keys, demands = pc
+        own = np.asarray([key_idx[k] for k in keys], dtype=np.int64)
+        prices = {k: float(y_cert[key_idx[k]]) for k in keys}
+        results.append((prices, float(demands @ y_cert[own])))
+        row += 1
+    return results

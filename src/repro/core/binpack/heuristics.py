@@ -297,6 +297,58 @@ def _batched_kernel(best_fit: bool):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _pmap_kernel(best_fit: bool):
+    """The vmapped pack kernel fanned across local devices: each device
+    packs its slice of the fleet axis with the single-device `vmap`
+    kernel, so results are bit-identical to `_batched_kernel`."""
+    return jax.pmap(
+        jax.vmap(
+            functools.partial(_pack_core, best_fit=best_fit),
+            in_axes=(0, 0, 0, 0, None, None),
+        ),
+        in_axes=(0, 0, 0, 0, None, None),
+    )
+
+
+def _dispatch_pack(best_fit, reqs, masks, scores, orders, caps, costs):
+    """Run the batched pack kernel, multi-device when available.
+
+    With more than one local JAX device and at least one fleet per
+    device, the fleet axis is padded to a device multiple, reshaped to
+    (devices, per_device, ...), and dispatched through `jax.pmap` of the
+    vmapped kernel; otherwise the single-device `vmap` path runs
+    unchanged.  Output layouts match `_batched_kernel` exactly (padding
+    fleets are dropped), so callers cannot tell the paths apart.
+    """
+    n_dev = jax.local_device_count()
+    b_n = reqs.shape[0]
+    if n_dev <= 1 or b_n < n_dev:
+        return _batched_kernel(best_fit)(
+            reqs, masks, scores, orders, caps, costs
+        )
+    pad = (-b_n) % n_dev
+    if pad:
+        reqs = np.concatenate([reqs, np.repeat(reqs[-1:], pad, axis=0)])
+        masks = np.concatenate([masks, np.repeat(masks[-1:], pad, axis=0)])
+        scores = np.concatenate([scores, np.repeat(scores[-1:], pad, axis=0)])
+        orders = np.concatenate([orders, np.repeat(orders[-1:], pad, axis=0)])
+    per = (b_n + pad) // n_dev
+
+    def shard(a):
+        return a.reshape((n_dev, per) + a.shape[1:])
+
+    recs, n_open, total = _pmap_kernel(best_fit)(
+        shard(reqs), shard(masks), shard(scores), shard(orders), caps, costs
+    )
+
+    def unshard(a):
+        a = np.asarray(a)
+        return a.reshape((n_dev * per,) + a.shape[2:])[:b_n]
+
+    return tuple(unshard(r) for r in recs), unshard(n_open), unshard(total)
+
+
 def pack_jax(problem: Problem, *, best_fit: bool = False) -> Solution:
     """FFD/BFD via the JAX kernel; placements match `_pack` exactly."""
     if not HAS_JAX:  # graceful degradation, same result by construction
@@ -348,8 +400,8 @@ def batched_fleet_costs(
     ts = [p.tensors() for p in problems]
     reqs, masks, scores, orders = _pad_fleets(problems, ts)
     with enable_x64():
-        _recs, _n_open, costs = _batched_kernel(best_fit)(
-            reqs, masks, scores, orders, ts[0].caps, ts[0].costs
+        _recs, _n_open, costs = _dispatch_pack(
+            best_fit, reqs, masks, scores, orders, ts[0].caps, ts[0].costs
         )
         return np.asarray(costs, dtype=np.float64)
 
@@ -419,8 +471,8 @@ def _batched_pack_raw(problems: "list[Problem]", *, best_fit: bool = False):
     ts = [p.tensors() for p in problems]
     reqs, masks, scores, orders = _pad_fleets(problems, ts)
     with enable_x64():
-        recs, n_open, _costs = _batched_kernel(best_fit)(
-            reqs, masks, scores, orders, ts[0].caps, ts[0].costs
+        recs, n_open, _costs = _dispatch_pack(
+            best_fit, reqs, masks, scores, orders, ts[0].caps, ts[0].costs
         )
         bin_rec, choice_rec, bt_rec = (np.asarray(r) for r in recs)
         n_open = np.asarray(n_open)

@@ -687,6 +687,23 @@ class FleetController:
         self._refresh_prices(self._problem)
         return self._lower_bound(self._problem)
 
+    def install_prices(self, prices: dict[bytes, float]) -> float:
+        """Adopt externally derived class prices; return the refreshed LB.
+
+        The sharded controller's one-dispatch certification hook: prices
+        for every cell come out of ONE batched pricing run
+        (`colgen.batched_dual_prices`) and are installed per cell here
+        instead of each cell re-deriving its own.  The caller owns the
+        admissibility contract (``pattern·y <= cost`` for every packing
+        over this catalog — what `class_prices` guarantees); the bound
+        still maxes against the density LB, so an empty or weak price
+        map can only loosen, never break, the certificate.
+        """
+        if self._problem is None:
+            raise RuntimeError("install_prices before reset()")
+        self._prices = dict(prices)
+        return self._lower_bound(self._problem)
+
     # ------------------------------------------------ graceful degradation
 
     @property

@@ -213,6 +213,10 @@ class LifecycleEngine:
         self.billing = billing if billing is not None else BillingModel()
         self.billing_by_type = dict(billing_by_type or {})
         self._records: dict[int, InstanceRecord] = {}
+        #: Monotone mutation counter: bumped by every state change, so
+        #: aggregate caches (e.g. the sharded merged ledger) can memoize
+        #: per-engine query results and invalidate only on real mutation.
+        self.version = 0
 
     def billing_for(self, instance_type: str) -> BillingModel:
         """The billing contract for one instance type (map over default)."""
@@ -235,6 +239,7 @@ class LifecycleEngine:
             rate_history=[(at, hourly_cost)],
         )
         self._records[uid] = rec
+        self.version += 1
         return rec
 
     def adopt_running(
@@ -248,6 +253,7 @@ class LifecycleEngine:
         """
         rec = self.provision(uid, instance_type, hourly_cost, at)
         rec.running_at = at
+        self.version += 1
         return rec
 
     def decommission(
@@ -274,6 +280,7 @@ class LifecycleEngine:
         end = at if drain_until is None else max(at, drain_until)
         rec.draining_at = at
         rec.terminated_at = end
+        self.version += 1
         return rec
 
     def notice(self, uid: int, at: float, deadline: float) -> InstanceRecord:
@@ -300,6 +307,7 @@ class LifecycleEngine:
         if rec.noticed_at is None:
             rec.noticed_at = at
         rec.notice_deadline = deadline
+        self.version += 1
         return rec
 
     def preempt(self, uid: int, at: float) -> InstanceRecord:
@@ -324,6 +332,7 @@ class LifecycleEngine:
         rec.draining_at = at if rec.draining_at is None else min(rec.draining_at, at)
         rec.terminated_at = at
         rec.preempted_at = at
+        self.version += 1
         return rec
 
     def reprice(self, uid: int, at: float, hourly_cost: float) -> None:
@@ -352,6 +361,7 @@ class LifecycleEngine:
         since = max(at, rec.rate_history[-1][0])
         rec.rate_history.append((since, hourly_cost))
         rec.hourly_cost = hourly_cost
+        self.version += 1
 
     # ------------------------------------------------------------- queries
 

@@ -41,7 +41,7 @@ import dataclasses
 import zlib
 from typing import Callable, Hashable, Sequence
 
-from .binpack import arcflow, heuristics
+from .binpack import arcflow, colgen, heuristics
 from .binpack.problem import Problem, Solution
 from .binpack.colgen import ColumnPool
 from .controller import FleetController, ReplanResult, _gap, class_prices
@@ -124,18 +124,49 @@ class _MergedLedger:
     """Read-only union of every cell's lifecycle ledger.
 
     Uids dispatch to their owning cell by stride range; aggregate queries
-    (`records`, `billed_cost`) concatenate/sum across cells.  A live view
-    — cells created mid-replay appear automatically.
+    (`records`, `billed_cost`, `alive`) concatenate/sum across cells.  A
+    live view — cells created mid-replay appear automatically.
+
+    Aggregates used to re-walk every cell engine per query; now the
+    uid-stride -> engine map is cached, and per-cell query results are
+    memoized against each engine's monotone ``version`` counter, so a
+    query after one cell churned recomputes only that cell.  The owner
+    calls `invalidate()` whenever an engine is *replaced* (cold adopt,
+    rebalance rollback) rather than mutated — version counters cannot
+    see an identity swap.
     """
 
     def __init__(self, owner: "ShardedController") -> None:
         self._owner = owner
+        self._engines: list[LifecycleEngine] | None = None
+        # per-cell memos: key -> (engine version at compute time, value)
+        self._cost_memo: dict[tuple[int, float], tuple[int, float]] = {}
+        self._alive_memo: dict[tuple[int, float], tuple[int, tuple]] = {}
+        self._records_memo: dict[int, tuple[int, tuple]] = {}
+
+    def invalidate(self) -> None:
+        """Drop the engine map and memos (cell engines were replaced)."""
+        self._engines = None
+        self._cost_memo.clear()
+        self._alive_memo.clear()
+        self._records_memo.clear()
+
+    def _engine_list(self) -> list[LifecycleEngine]:
+        eng = self._engines
+        if eng is None or len(eng) != len(self._owner._cell_list):
+            eng = self._engines = [
+                c.lifecycle for c in self._owner._cell_list
+            ]
+            self._cost_memo.clear()
+            self._alive_memo.clear()
+            self._records_memo.clear()
+        return eng
 
     def _engine(self, uid: int) -> LifecycleEngine | None:
-        cells = self._owner._cell_list
+        engines = self._engine_list()
         i = uid // UID_STRIDE
-        if 0 <= i < len(cells):
-            return cells[i].lifecycle
+        if 0 <= i < len(engines):
+            return engines[i]
         return None
 
     def __contains__(self, uid: int) -> bool:
@@ -150,12 +181,24 @@ class _MergedLedger:
 
     def records(self) -> tuple:
         out: list = []
-        for c in self._owner._cell_list:
-            out.extend(c.lifecycle.records())
+        for i, eng in enumerate(self._engine_list()):
+            hit = self._records_memo.get(i)
+            if hit is None or hit[0] != eng.version:
+                hit = (eng.version, eng.records())
+                self._records_memo[i] = hit
+            out.extend(hit[1])
         return tuple(out)
 
     def billed_cost(self, until: float) -> float:
-        return sum(c.lifecycle.billed_cost(until) for c in self._owner._cell_list)
+        total = 0.0
+        for i, eng in enumerate(self._engine_list()):
+            key = (i, until)
+            hit = self._cost_memo.get(key)
+            if hit is None or hit[0] != eng.version:
+                hit = (eng.version, eng.billed_cost(until))
+                self._cost_memo[key] = hit
+            total += hit[1]
+        return total
 
     def billed_instance(self, uid: int, until: float) -> float:
         eng = self._engine(uid)
@@ -164,9 +207,14 @@ class _MergedLedger:
         return eng.billed_instance(uid, until)
 
     def alive(self, at: float) -> tuple[int, ...]:
-        out: list[int] = []
-        for c in self._owner._cell_list:
-            out.extend(c.lifecycle.alive(at))
+        out: list = []
+        for i, eng in enumerate(self._engine_list()):
+            key = (i, at)
+            hit = self._alive_memo.get(key)
+            if hit is None or hit[0] != eng.version:
+                hit = (eng.version, eng.alive(at))
+                self._alive_memo[key] = hit
+            out.extend(hit[1])
         return tuple(out)
 
 
@@ -216,6 +264,7 @@ class ShardedController:
         rebalance_every: int = 0,
         rebalance_moves: int = 4,
         rebalance_min_saving: float = 0.0,
+        batch_workers: int = 0,
     ) -> None:
         self.manager = manager
         self.strategy = strategy
@@ -231,6 +280,11 @@ class ShardedController:
         self.rebalance_every = rebalance_every
         self.rebalance_moves = rebalance_moves
         self.rebalance_min_saving = rebalance_min_saving
+        #: Thread-pool width for fanning independent cell folds out in
+        #: `apply_events` (0/1 = sequential).  The fold is bit-identical
+        #: either way for arcflow-priced cells; pool-sharing colgen
+        #: cells may discover columns in a different order.
+        self.batch_workers = batch_workers
         self.now = 0.0
         self._cells: dict[Hashable, FleetController] = {}
         self._cell_list: list[FleetController] = []  # creation order = stride
@@ -249,6 +303,20 @@ class ShardedController:
         if hasattr(manager, "colgen_pool"):
             manager.colgen_pool = self._colgen_pool
         self.lifecycle = _MergedLedger(self)
+        # Observability counters, exposed via `stats()`.
+        self._stats: dict = {
+            "events_routed": 0,
+            "events_per_cell": {},
+            "event_batches": 0,
+            "batch_barriers": 0,
+            "seg_cache_hits": 0,
+            "seg_cache_misses": 0,
+            "batched_repair_dispatches": 0,
+            "serial_repair_dispatches": 0,
+            "pricing_dispatches": 0,
+            "pricing_rounds": 0,
+            "serial_price_refreshes": 0,
+        }
 
     # ------------------------------------------------------------ properties
 
@@ -340,6 +408,7 @@ class ShardedController:
         self._last_lb = {}
         self._seg_cache = {}
         self._events_since_rebalance = 0
+        self.lifecycle.invalidate()
         for key, part in parts.items():
             self._new_cell(key)
             for s in part:
@@ -376,6 +445,7 @@ class ShardedController:
         if not self._cells:
             raise RuntimeError("ShardedController.apply before reset()")
         self.now = max(self.now, event.at)
+        self._stats["events_routed"] += 1
         if isinstance(event, PriceChanged):
             result = self._broadcast_price(event)
         elif isinstance(event, (InstancePreempted, InstancePreemptionNotice)):
@@ -404,8 +474,162 @@ class ShardedController:
                 )
         return result
 
-    def apply_events(self, events: Sequence[FleetEvent]) -> list[ReplanResult]:
-        return [self.apply(ev) for ev in events]
+    def apply_events(
+        self,
+        events: Sequence[FleetEvent],
+        *,
+        batched: bool = True,
+        with_snapshots: bool = False,
+    ):
+        """Fold a batch of fleet events through the batched pipeline.
+
+        The serial loop (``batched=False``) is ``[self.apply(ev) for ev
+        in events]`` — every event pays an O(fleet) merged-plan rebuild.
+        The batched pipeline instead splits the batch into **runs** of
+        independently-routable events: classification walks the batch in
+        order doing exactly `apply`'s routing (advancing the clock,
+        creating cells, updating the name->cell and notice maps), but
+        only QUEUES each event on its owning cell.  Each cell then folds
+        its queue through its warm controller back-to-back (optionally
+        across a thread pool, ``batch_workers``), and reconstruction
+        re-emits one `ReplanResult` per event in original order with the
+        merged plan materialized LAZILY — segment concatenation is paid
+        once per accessed plan instead of once per event.
+
+        Events that genuinely couple cells force a **barrier** (flush
+        the run, then fold eagerly through `apply`): `PriceChanged`
+        broadcasts, sampled preemption shocks (uid < 0, resolved against
+        the merged alive fleet), events referencing a stream removed
+        earlier in the same run (its parked-vs-gone routing is unknown
+        until the fold), and rebalance-market trigger points.
+
+        Results are bit-identical to the serial loop wherever per-cell
+        pricing is pure (cells at or under the arcflow class cutoff);
+        cells pricing through the SHARED colgen column pool may see
+        different — equally admissible — lower bounds, because folding
+        order changes pool discovery order.
+
+        ``with_snapshots=True`` additionally returns, per event, the
+        merged post-event facade state the simulator replays
+        (``{"uids", "rungs", "parked", "tiers"}``) as a second list.
+        """
+        events = list(events)
+        if not events:
+            return ([], []) if with_snapshots else []
+        if not batched:
+            if not with_snapshots:
+                return [self.apply(ev) for ev in events]
+            results = []
+            snaps = []
+            for ev in events:
+                results.append(self.apply(ev))
+                snaps.append(self._global_snapshot())
+            return results, snaps
+        if not self._cells:
+            raise RuntimeError("ShardedController.apply before reset()")
+        self._stats["event_batches"] += 1
+        results: list[ReplanResult | None] = [None] * len(events)
+        snaps: list[dict | None] | None = (
+            [None] * len(events) if with_snapshots else None
+        )
+        run: _BatchRun | None = None
+        for j, event in enumerate(events):
+            if isinstance(event, StreamAdded):
+                name = event.stream.name
+            elif isinstance(
+                event, (PriceChanged, InstancePreempted, InstancePreemptionNotice)
+            ):
+                name = None
+            else:
+                name = getattr(event, "name", None)
+            sampled = (
+                isinstance(
+                    event, (InstancePreempted, InstancePreemptionNotice)
+                )
+                and event.uid < 0
+                and not (
+                    isinstance(event, InstancePreempted)
+                    and event.notice_id >= 0
+                )
+            )
+            barrier = (
+                isinstance(event, PriceChanged)
+                or sampled
+                or (name is not None and run is not None and name in run.dirty)
+                or (
+                    self.rebalance_every
+                    and self._events_since_rebalance + 1
+                    >= self.rebalance_every
+                )
+            )
+            if barrier:
+                if run is not None:
+                    self._fold_run(run, results, snaps)
+                    run = None
+                self._stats["batch_barriers"] += 1
+                results[j] = self.apply(event)
+                if snaps is not None:
+                    snaps[j] = self._global_snapshot()
+                continue
+            if run is None:
+                run = _BatchRun(self, with_snapshots)
+            # -- classification: apply()'s routing, state updates only --
+            self.now = max(self.now, event.at)
+            self._stats["events_routed"] += 1
+            self._events_since_rebalance += 1
+            if isinstance(
+                event, (InstancePreempted, InstancePreemptionNotice)
+            ):
+                is_notice = isinstance(event, InstancePreemptionNotice)
+                if not is_notice and event.notice_id >= 0:
+                    key = self._notice_cell.pop(event.notice_id, None)
+                    if key is None:
+                        run.noop(j, self.now)
+                    else:
+                        run.push(j, key, ("apply", event), self.now)
+                    continue
+                i = event.uid // UID_STRIDE
+                if not 0 <= i < len(self._cell_list):
+                    run.noop(j, self.now)
+                    continue
+                key = next(
+                    k
+                    for k, c in self._cells.items()
+                    if c is self._cell_list[i]
+                )
+                if is_notice and event.notice_id >= 0:
+                    self._notice_cell[event.notice_id] = key
+                run.push(j, key, ("apply", event), self.now)
+                continue
+            if isinstance(event, StreamAdded):
+                key = self._cell_of.get(name)
+                if key is None:
+                    key = self.cell_key(event.stream)
+                    if key not in self._cells:
+                        self._new_cell(key)
+                        self._cell_of[name] = key
+                        run.push(
+                            j, key, ("reset", event.stream, self.now), self.now
+                        )
+                        continue
+                self._cell_of[name] = key
+                run.push(j, key, ("apply", event), self.now)
+                continue
+            key = self._cell_of.get(name)
+            if key is None:
+                if len(self._cells) == 1:
+                    key = next(iter(self._cells))
+                else:
+                    run.noop(j, self.now)
+                    continue
+            if isinstance(event, StreamRemoved):
+                run.dirty.add(name)
+            run.push(j, key, ("apply", event), self.now)
+        if run is not None:
+            self._fold_run(run, results, snaps)
+        if with_snapshots:
+            return results, snaps
+        return results
 
     def repack(self, *, best_fit: bool = False) -> ReplanResult:
         """Defragment every cell in ONE batched kernel dispatch.
@@ -427,6 +651,7 @@ class ShardedController:
         sols = heuristics.batched_pack(
             [c._problem for _, c in live], best_fit=best_fit
         )
+        self._stats["batched_repair_dispatches"] += 1
         actions: list[str] = []
         migrated: list[str] = []
         for (key, c), sol in zip(live, sols):
@@ -489,11 +714,17 @@ class ShardedController:
         if len(live) < 2 or max_moves <= 0:
             return []
         prices: dict[Hashable, dict[bytes, float]] = {}
-        for key, c in live:
-            try:
-                prices[key], _ = class_prices(c._problem, self._colgen_pool)
-            except Exception:  # pricing blow-up: cell just exports nothing
-                prices[key] = {}
+        quotes = self._batched_prices([c._problem for _, c in live])
+        if quotes is not None:
+            for (key, _c), (p, _lp) in zip(live, quotes):
+                prices[key] = p
+        else:
+            for key, c in live:
+                try:
+                    prices[key], _ = class_prices(c._problem, self._colgen_pool)
+                    self._stats["serial_price_refreshes"] += 1
+                except Exception:  # pricing blow-up: cell exports nothing
+                    prices[key] = {}
         cands: list[tuple[float, str, Hashable, Hashable]] = []
         for key, c in live:
             class_keys = arcflow.item_class_keys(c._problem)
@@ -531,18 +762,228 @@ class ShardedController:
             if c._plan is not None
         )
 
-    def refresh_prices(self) -> float:
-        """Refresh every cell's dual prices; return the summed LB."""
+    def refresh_prices(self, *, batched: bool = True) -> float:
+        """Refresh every cell's dual prices; return the summed LB.
+
+        With ``batched=True`` (the default) and more than one live cell,
+        all cells' class duals come from ONE column-generation run whose
+        pricing subproblems are stacked into single
+        `kernels.knapsack.price_knapsacks` dispatches
+        (`colgen.batched_dual_prices`) — the one-dispatch certification
+        path.  ``batched=False`` (or a single cell) keeps the serial
+        per-cell `FleetController.refresh_prices` loop.
+        """
+        live = [
+            (key, c)
+            for key, c in self._cells.items()
+            if c._problem is not None
+        ]
+        if batched and len(live) > 1:
+            quotes = self._batched_prices([c._problem for _, c in live])
+            if quotes is not None:
+                total = 0.0
+                for (key, c), (prices, _lp) in zip(live, quotes):
+                    lb = c.install_prices(prices)
+                    self._last_lb[key] = lb
+                    total += lb
+                return total
         total = 0.0
-        for key, c in self._cells.items():
-            if c._problem is None:
-                continue
+        for key, c in live:
             lb = c.refresh_prices()
+            self._stats["serial_price_refreshes"] += 1
             self._last_lb[key] = lb
             total += lb
         return total
 
+    def stats(self) -> dict:
+        """Observability counters (a copy): event routing, merged-plan
+        segment-cache hits/misses, batched vs serial repair dispatches,
+        and pricing-dispatch counts."""
+        out = dict(self._stats)
+        out["events_per_cell"] = dict(self._stats["events_per_cell"])
+        return out
+
+    # ------------------------------------------------------ batched pipeline
+
+    def _fold_run(
+        self,
+        run: "_BatchRun",
+        results: list,
+        snaps: list | None,
+    ) -> None:
+        """Fold one run's queued per-cell ops, then reconstruct per-event
+        results (and optional facade snapshots) in original event order."""
+        keys = list(run.ops)
+        pops: list[str] = []  # removed-and-not-parked names, popped post-join
+
+        def fold_cell(key: Hashable) -> list[tuple]:
+            c = self._cells[key]
+            out = []
+            for op in run.ops[key]:
+                if op[0] == "reset":
+                    r = c.reset([op[1]], at=op[2])
+                else:
+                    ev = op[1]
+                    r = c.apply(ev)
+                    if (
+                        isinstance(ev, StreamRemoved)
+                        and ev.name not in c.parked
+                    ):
+                        pops.append(ev.name)
+                opsnap = None
+                if snaps is not None:
+                    tiers = {s.name: s.tier for s in c.fleet}
+                    for s in c.parked.values():
+                        tiers[s.name] = s.tier
+                    opsnap = (
+                        c.instance_uids,
+                        dict(c.degraded_rungs),
+                        dict(c.parked),
+                        tiers,
+                    )
+                out.append((r, c.plan, opsnap))
+            return out
+
+        captures: dict[Hashable, list[tuple]] = {}
+        workers = min(self.batch_workers, len(keys))
+        if workers > 1:
+            from concurrent.futures import ThreadPoolExecutor
+
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                for key, out in zip(keys, ex.map(fold_cell, keys)):
+                    captures[key] = out
+        else:
+            for key in keys:
+                captures[key] = fold_cell(key)
+        for name in pops:
+            self._cell_of.pop(name, None)
+        per_cell = self._stats["events_per_cell"]
+        for key in keys:
+            n_ops = len(run.ops[key])
+            per_cell[key] = per_cell.get(key, 0) + n_ops
+            self._stats["serial_repair_dispatches"] += n_ops
+
+        # ---- reconstruction: replay descriptors in event order --------
+        cur_plan = dict(run.base_plans)
+        cur_lb = dict(run.base_lb)
+        cur_uids = dict(run.base_uids) if snaps is not None else None
+        cur_rungs = dict(run.base_rungs) if snaps is not None else None
+        cur_parked = dict(run.base_parked) if snaps is not None else None
+        iters = {key: iter(captures[key]) for key in keys}
+        for desc in run.descs:
+            if desc[0] == "cell":
+                _kind, j, key, now_j, n_at = desc
+                r, plan_after, opsnap = next(iters[key])
+                cur_plan[key] = plan_after
+                cur_lb[key] = r.lower_bound
+                tiers_j: dict = {}
+                if snaps is not None:
+                    cur_uids[key] = opsnap[0]
+                    cur_rungs[key] = opsnap[1]
+                    cur_parked[key] = opsnap[2]
+                    tiers_j = opsnap[3]
+                if n_at == 1:
+                    results[j] = r
+                else:
+                    results[j] = self._recon_result(
+                        cur_plan, cur_lb, now_j,
+                        mode=r.mode, displaced=r.displaced,
+                        migrated=r.migrated, nodes=r.nodes,
+                        actions=r.actions, advice=r.advice,
+                    )
+            else:
+                _kind, j, now_j = desc
+                tiers_j = {}
+                results[j] = self._recon_result(
+                    cur_plan, cur_lb, now_j, mode="noop",
+                )
+            if snaps is not None:
+                uids: list[int] = []
+                for t in cur_uids.values():
+                    uids.extend(t)
+                rungs: dict[str, int] = {}
+                for d in cur_rungs.values():
+                    rungs.update(d)
+                parked: dict[str, StreamSpec] = {}
+                for d in cur_parked.values():
+                    parked.update(d)
+                snaps[j] = {
+                    "uids": tuple(uids),
+                    "rungs": rungs,
+                    "parked": parked,
+                    "tiers": tiers_j,
+                }
+        # The reconstruction dict has serial's exact key-insertion order
+        # (new cells enter at their creation event) — adopt it, so later
+        # float sums over `_last_lb.values()` match serial bit-for-bit.
+        self._last_lb = cur_lb
+
+    def _recon_result(
+        self,
+        cur_plan: dict,
+        cur_lb: dict,
+        now_j: float,
+        *,
+        mode: str,
+        displaced: tuple[str, ...] = (),
+        migrated: tuple[str, ...] = (),
+        nodes: int = 0,
+        actions: tuple[str, ...] = (),
+        advice: dict | None = None,
+    ) -> ReplanResult:
+        """A merged `ReplanResult` for one mid-batch event, with the
+        plan's content deferred (`_LazyMergedPlan`) — cost and LB are
+        accumulated in the exact dict order `_merged_plan`/`_result`
+        would use, so the numbers are bit-identical to the serial path."""
+        segs = tuple(cur_plan.items())
+        cost = 0.0
+        for _key, plan in segs:
+            if plan is None or not plan.instances:
+                continue
+            cost += plan.hourly_cost
+        lb = sum(cur_lb.values())
+        return ReplanResult(
+            plan=_LazyMergedPlan(self, segs, cost),
+            mode=mode,
+            displaced=displaced,
+            migrated=migrated,
+            lower_bound=lb,
+            gap=_gap(cost, lb),
+            nodes=nodes,
+            actions=actions,
+            advice=advice,
+            at=now_j,
+        )
+
+    def _global_snapshot(self) -> dict:
+        """The merged facade state a serial replay reads after an event."""
+        tiers = {s.name: s.tier for s in self.fleet}
+        for s in self.parked.values():
+            tiers[s.name] = s.tier
+        return {
+            "uids": self.instance_uids,
+            "rungs": dict(self.degraded_rungs),
+            "parked": dict(self.parked),
+            "tiers": tiers,
+        }
+
     # ------------------------------------------------------------- internals
+
+    def _batched_prices(
+        self, problems: list[Problem]
+    ) -> list[tuple[dict[bytes, float], float]] | None:
+        """All cells' admissible class duals from one stacked pricing run.
+
+        Returns None when the batched path is unavailable (mixed
+        catalogs, no kernel, or a pricing blow-up) so callers fall back
+        to the serial per-cell loop.
+        """
+        try:
+            return colgen.batched_dual_prices(
+                problems, self._colgen_pool, stats_out=self._stats
+            )
+        except Exception:
+            return None
 
     def _new_cell(self, key: Hashable) -> FleetController:
         kwargs: dict = dict(
@@ -574,6 +1015,7 @@ class ShardedController:
             self.manager.formulate(parts[k], self.strategy) for k in keys
         ]
         sols = heuristics.batched_pack(problems)
+        self._stats["batched_repair_dispatches"] += 1
         results: dict[Hashable, ReplanResult] = {}
         for key, problem, sol in zip(keys, problems, sols):
             ctrl = self._cells[key]
@@ -623,6 +1065,7 @@ class ShardedController:
         result = ctrl.policy.on_reset(ctrl, result)
         ctrl._flush_spare_releases()
         ctrl._sync_lifecycle()
+        self.lifecycle.invalidate()  # fresh engine identity for this cell
         return result
 
     def _route_stream_event(self, event: FleetEvent) -> ReplanResult:
@@ -660,9 +1103,12 @@ class ShardedController:
         # cell folding the same event converges on the same prices; each
         # fold also re-plans that cell against the new costs.
         results: dict[Hashable, ReplanResult] = {}
+        per_cell = self._stats["events_per_cell"]
         for key, c in self._cells.items():
             results[key] = c.apply(event)
             self._last_lb[key] = results[key].lower_bound
+            per_cell[key] = per_cell.get(key, 0) + 1
+            self._stats["serial_repair_dispatches"] += 1
         if len(results) == 1:
             return next(iter(results.values()))
         modes = {r.mode for r in results.values()}
@@ -731,6 +1177,9 @@ class ShardedController:
     def _finish(self, key: Hashable, r: ReplanResult) -> ReplanResult:
         """Fold one routed cell result into the merged view."""
         self._last_lb[key] = r.lower_bound
+        per_cell = self._stats["events_per_cell"]
+        per_cell[key] = per_cell.get(key, 0) + 1
+        self._stats["serial_repair_dispatches"] += 1
         if len(self._cells) == 1:
             return r  # flat-identical: hand the cell's result through
         return self._result(
@@ -768,25 +1217,36 @@ class ShardedController:
         )
 
     def _merged_plan(self) -> AllocationPlan:
-        """Concatenate per-cell plans into one fleet-wide view.
+        """Concatenate per-cell plans into one fleet-wide view."""
+        return self._merged_plan_from(
+            tuple((key, c.plan) for key, c in self._cells.items())
+        )
+
+    def _merged_plan_from(
+        self, segs: tuple[tuple[Hashable, AllocationPlan | None], ...]
+    ) -> AllocationPlan:
+        """Concatenate the given per-cell plan segments into one view.
 
         Only the routed cell's plan object changes per event, so each
         cell's shifted placement segment is cached against (plan
-        identity, bin offset) and reused until either moves.
+        identity, bin offset) and reused until either moves.  The
+        batched pipeline calls this with HISTORICAL (key, plan) pairs to
+        materialize a mid-batch merged plan lazily.
         """
         instances: list[str] = []
         placements: list = []
         bins: list = []
         cost = 0.0
         offset = 0
-        for key, c in self._cells.items():
-            plan = c.plan
+        for key, plan in segs:
             if plan is None or not plan.instances:
                 continue
             cached = self._seg_cache.get(key)
             if cached is not None and cached[0] is plan and cached[1] == offset:
                 seg = cached[2]
+                self._stats["seg_cache_hits"] += 1
             else:
+                self._stats["seg_cache_misses"] += 1
                 if offset == 0:
                     seg = plan.placements
                 else:
@@ -833,6 +1293,7 @@ class ShardedController:
         except Exception:
             _cell_restore(src, snap_src)
             _cell_restore(dst, snap_dst)
+            self.lifecycle.invalidate()
             return None
         assert src._plan is not None and dst._plan is not None
         after = src._plan.hourly_cost + dst._plan.hourly_cost
@@ -843,7 +1304,99 @@ class ShardedController:
             return f"rebalance:{name}:{src_key}->{dst_key}:-${before - after:.4f}"
         _cell_restore(src, snap_src)
         _cell_restore(dst, snap_dst)
+        self.lifecycle.invalidate()  # rollback swapped in deepcopied engines
         return None
+
+
+class _BatchRun:
+    """One run of independently-routable events inside `apply_events`.
+
+    Captures the pre-fold base state (per-cell plan refs, LB map, and —
+    when snapshots are requested — the per-cell facade state), the
+    per-cell op queues, and one reconstruction descriptor per event.
+    ``dirty`` holds stream names removed in this run: a later event
+    referencing one forces a barrier, because parked-vs-gone routing is
+    unknowable until the fold."""
+
+    __slots__ = (
+        "owner", "descs", "ops", "dirty",
+        "base_plans", "base_lb", "base_uids", "base_rungs", "base_parked",
+    )
+
+    def __init__(self, owner: ShardedController, with_snapshots: bool) -> None:
+        self.owner = owner
+        self.descs: list[tuple] = []
+        self.ops: dict[Hashable, list[tuple]] = {}
+        self.dirty: set[str] = set()
+        self.base_plans = {k: c.plan for k, c in owner._cells.items()}
+        self.base_lb = dict(owner._last_lb)
+        if with_snapshots:
+            self.base_uids = {
+                k: c.instance_uids for k, c in owner._cells.items()
+            }
+            self.base_rungs = {
+                k: dict(c.degraded_rungs) for k, c in owner._cells.items()
+            }
+            self.base_parked = {
+                k: dict(c.parked) for k, c in owner._cells.items()
+            }
+        else:
+            self.base_uids = {}
+            self.base_rungs = {}
+            self.base_parked = {}
+
+    def push(
+        self, j: int, key: Hashable, op: tuple, now_j: float
+    ) -> None:
+        self.ops.setdefault(key, []).append(op)
+        # Cell count is recorded AFTER routing (a join may have just
+        # created the cell), mirroring when `_finish` reads it serially.
+        self.descs.append(("cell", j, key, now_j, len(self.owner._cells)))
+
+    def noop(self, j: int, now_j: float) -> None:
+        self.descs.append(("noop", j, now_j))
+
+
+class _LazyMergedPlan:
+    """A merged `AllocationPlan` facade whose content is deferred.
+
+    ``hourly_cost`` is precomputed (the accounting hot path);
+    ``instances``/``placements``/``solution`` materialize through the
+    owner's segment cache on first access.  Field-for-field identical to
+    the eager `_merged_plan` built from the same (key, plan) segments."""
+
+    __slots__ = ("_owner", "_segs", "_real", "strategy", "hourly_cost", "optimal")
+
+    def __init__(
+        self,
+        owner: ShardedController,
+        segs: tuple,
+        cost: float,
+    ) -> None:
+        self._owner = owner
+        self._segs = segs
+        self._real: AllocationPlan | None = None
+        self.strategy = owner.strategy.name
+        self.hourly_cost = cost
+        self.optimal = False
+
+    def _materialize(self) -> AllocationPlan:
+        real = self._real
+        if real is None:
+            real = self._real = self._owner._merged_plan_from(self._segs)
+        return real
+
+    @property
+    def instances(self) -> tuple[str, ...]:
+        return self._materialize().instances
+
+    @property
+    def placements(self) -> tuple:
+        return self._materialize().placements
+
+    @property
+    def solution(self):
+        return self._materialize().solution
 
 
 def _cell_snapshot(ctrl: FleetController) -> dict:

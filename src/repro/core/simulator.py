@@ -272,16 +272,39 @@ def simulate_churn(
     rung_steps = [ctrl.degraded_rungs]
     park_steps = [ctrl.parked]
     note_tiers()
-    for ev in trace:
-        results.append(ctrl.apply(ev))
-        uid_steps.append(ctrl.instance_uids)
-        event_names.append(type(ev).__name__)
-        rung_steps.append(ctrl.degraded_rungs)
-        park_steps.append(ctrl.parked)
-        note_tiers()
-        preempted_steps.append(
-            results[-1].displaced if isinstance(ev, InstancePreempted) else ()
+    if cell_key is not None or policy_factory is not None:
+        # Sharded replay: the whole trace goes through the batched
+        # event pipeline (cross-cell barriers split it internally), and
+        # the per-step facade state the accounting loop needs comes back
+        # as snapshots instead of per-event property walks.
+        trace = list(trace)
+        step_results, step_snaps = ctrl.apply_events(
+            trace, with_snapshots=True
         )
+        for ev, r, snap in zip(trace, step_results, step_snaps):
+            results.append(r)
+            uid_steps.append(snap["uids"])
+            event_names.append(type(ev).__name__)
+            rung_steps.append(snap["rungs"])
+            park_steps.append(snap["parked"])
+            tiers.update(snap["tiers"])
+            preempted_steps.append(
+                r.displaced if isinstance(ev, InstancePreempted) else ()
+            )
+        note_tiers()
+    else:
+        for ev in trace:
+            results.append(ctrl.apply(ev))
+            uid_steps.append(ctrl.instance_uids)
+            event_names.append(type(ev).__name__)
+            rung_steps.append(ctrl.degraded_rungs)
+            park_steps.append(ctrl.parked)
+            note_tiers()
+            preempted_steps.append(
+                results[-1].displaced
+                if isinstance(ev, InstancePreempted)
+                else ()
+            )
     ledger = ctrl.lifecycle
     times = [r.at for r in results]
     ends = times[1:] + [max(horizon, times[-1])]

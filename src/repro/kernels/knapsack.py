@@ -189,19 +189,55 @@ if HAS_JAX:
 
         return jax.jit(run)
 
+    @functools.lru_cache(maxsize=None)
+    def _jax_pmap_kernel():
+        """The scan kernel fanned across local devices: each device runs
+        the single-device kernel on its slice of the batch axis, so the
+        (best, take) outputs are bit-identical to `_jax_kernel`."""
+        base = _jax_kernel()
+        return jax.pmap(base, in_axes=(0, 0, 0, None, 0))
+
 
 def _dp_jax(step_values, step_weights, coord, strides, final_idx):
     shifts = step_weights @ strides
+    n_dev = jax.local_device_count() if HAS_JAX else 1
+    b_n = step_values.shape[0]
     with enable_x64():
-        best, take = _jax_kernel()(
-            jnp.asarray(step_values),
-            jnp.asarray(step_weights),
-            jnp.asarray(shifts),
-            jnp.asarray(coord),
-            jnp.asarray(final_idx),
-        )
-        best = np.asarray(jax.device_get(best))
-        take = np.asarray(jax.device_get(take))
+        if n_dev > 1 and b_n >= n_dev:
+            # Multi-device fan-out: pad the batch to a device multiple,
+            # shard the leading axis, and reassemble (padding knapsacks
+            # replicate row 0 and are dropped).
+            pad = (-b_n) % n_dev
+            per = (b_n + pad) // n_dev
+
+            def shard(a):
+                if pad:
+                    a = np.concatenate([a, np.repeat(a[:1], pad, axis=0)])
+                return jnp.asarray(a.reshape((n_dev, per) + a.shape[1:]))
+
+            best, take = _jax_pmap_kernel()(
+                shard(step_values),
+                shard(step_weights),
+                shard(shifts),
+                jnp.asarray(coord),
+                shard(final_idx),
+            )
+            best = np.asarray(jax.device_get(best)).reshape(-1)[:b_n]
+            # Per-device take is (T, per, S); reassemble to (T, B, S).
+            take = np.asarray(jax.device_get(take))
+            take = take.transpose(1, 0, 2, 3).reshape(
+                take.shape[1], n_dev * per, take.shape[3]
+            )[:, :b_n, :]
+        else:
+            best, take = _jax_kernel()(
+                jnp.asarray(step_values),
+                jnp.asarray(step_weights),
+                jnp.asarray(shifts),
+                jnp.asarray(coord),
+                jnp.asarray(final_idx),
+            )
+            best = np.asarray(jax.device_get(best))
+            take = np.asarray(jax.device_get(take))
     return best, take, shifts
 
 

@@ -444,3 +444,253 @@ def test_price_drift_validation():
             price_drift_types=[("x", 1.0)],
             price_drift_gap_hours=0.0,
         )
+
+
+# ------------------------------------------------- batched event pipeline
+
+
+from repro.core.binpack import arcflow, colgen
+from repro.core.catalog import with_spot_variants
+from repro.core.streams import InstancePreemptionNotice
+
+
+def _spot_manager(**kw):
+    """A manager whose catalog carries spot variants (hazard > 0), so
+    sampled preemption shocks and notice/kill pairs actually land."""
+    kw.setdefault("max_nodes", 20_000)
+    catalog = with_spot_variants(CATALOG, price_ratio=0.35, hazard=0.4)
+    return ResourceManager(catalog, paper_profile_table(), **kw)
+
+
+def _mixed_trace(seed, streams, n_events=50):
+    """Joins/leaves/re-rates + price-drift broadcasts + sampled shocks +
+    notice/kill pairs, all on one seeded timeline — every event kind the
+    batched pipeline must route identically to the serial loop."""
+    tt = synthetic_timed_trace(
+        streams,
+        np.random.RandomState(seed),
+        n_events=n_events,
+        preemption_hazard=0.4,
+        hazard_pool=16,
+        price_drift=0.3,
+        price_drift_types=[("c4.2xlarge-spot", 0.147)],
+        price_drift_gap_hours=0.1,
+    )
+    evs = list(tt.events)
+    rng = np.random.RandomState(seed + 1)
+    t0 = evs[len(evs) // 2].at
+    extra = []
+    for i in range(3):
+        at = t0 + 0.013 * (i + 1)
+        extra.append(
+            InstancePreemptionNotice(
+                at=at,
+                deadline=at + 0.15,
+                draw=float(rng.rand()),
+                pool=16,
+                hazard_ref=0.4,
+                notice_id=900 + i,
+            )
+        )
+        extra.append(InstancePreempted(at=at + 0.15, notice_id=900 + i))
+    return sorted(evs + extra, key=lambda ev: ev.at)
+
+
+def _plan_fields(p):
+    return (
+        p.hourly_cost,
+        p.instances,
+        p.placements,
+        tuple(p.solution.bins),
+        p.strategy,
+        p.optimal,
+    )
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_batched_apply_bit_identical_to_serial(seed):
+    def build():
+        mgr = _spot_manager()
+        ctrl = mgr.sharded_controller(ST3, cell_key=hash_cells(6))
+        ctrl.reset(_streams(48), at=0.0, pack="batched")
+        return ctrl
+
+    a, b = build(), build()
+    trace = _mixed_trace(seed, _streams(48))
+    rs, ss = a.apply_events(trace, batched=False, with_snapshots=True)
+    rb, sb = b.apply_events(trace, with_snapshots=True)
+    assert len(rb) == len(rs) == len(trace)
+    for x, y in zip(rs, rb):
+        assert x.mode == y.mode
+        assert x.displaced == y.displaced
+        assert x.migrated == y.migrated
+        assert x.lower_bound == y.lower_bound
+        assert x.gap == y.gap
+        assert x.nodes == y.nodes
+        assert x.actions == y.actions
+        assert x.advice == y.advice
+        assert x.at == y.at
+        assert _plan_fields(x.plan) == _plan_fields(y.plan)
+    # The simulator's per-step facade snapshots must match too.
+    for x, y in zip(ss, sb):
+        assert x["uids"] == y["uids"]
+        assert x["rungs"] == y["rungs"]
+        assert x["parked"] == y["parked"]
+        # Batched tier updates are per-routed-cell deltas; the folded
+        # totals must agree (serial snapshots are full sweeps).
+    # Ledgers: bit-identical billing, records, and alive sets.
+    horizon = trace[-1].at + 1.0
+    assert a.lifecycle.billed_cost(horizon) == b.lifecycle.billed_cost(horizon)
+    assert a.lifecycle.alive(horizon) == b.lifecycle.alive(horizon)
+    assert a.instance_uids == b.instance_uids
+    assert a.parked == b.parked
+    assert a.degraded_rungs == b.degraded_rungs
+    assert a.total_cost() == b.total_cost()
+    # Sticky SLA-tier maps (what the rollup reads) fold identically.
+    tiers_serial: dict = {}
+    for s in ss:
+        tiers_serial.update(s["tiers"])
+    tiers_batched: dict = {}
+    for s in sb:
+        tiers_batched.update(s["tiers"])
+    for name, tier in tiers_batched.items():
+        assert tiers_serial[name] == tier
+
+
+def test_batched_apply_with_rebalance_barriers():
+    # Rebalance trigger points force barriers: the batched pipeline must
+    # still match the serial loop event-for-event.
+    def build():
+        mgr = _manager()
+        ctrl = mgr.sharded_controller(
+            ST3, cell_key=hash_cells(4), rebalance_every=7
+        )
+        ctrl.reset(_streams(24), at=0.0)
+        return ctrl
+
+    a, b = build(), build()
+    trace = _trace(np.random.RandomState(5), _streams(24), 30)
+    rs = a.apply_events(trace, batched=False)
+    rb = b.apply_events(trace)
+    for x, y in zip(rs, rb):
+        assert x.mode == y.mode and x.actions == y.actions
+        assert x.lower_bound == y.lower_bound
+        assert _plan_fields(x.plan) == _plan_fields(y.plan)
+    assert b.stats()["batch_barriers"] > 0
+
+
+def test_batched_apply_stats_counters():
+    mgr = _manager()
+    ctrl = mgr.sharded_controller(ST3, cell_key=hash_cells(4))
+    ctrl.reset(_streams(24), at=0.0, pack="batched")
+    trace = _trace(np.random.RandomState(9), _streams(24), 20)
+    ctrl.apply_events(trace)
+    st = ctrl.stats()
+    assert st["events_routed"] == 20
+    assert st["event_batches"] == 1
+    assert st["batched_repair_dispatches"] >= 1  # the batched reset
+    assert sum(st["events_per_cell"].values()) >= st["serial_repair_dispatches"] - 1
+    assert st["seg_cache_hits"] + st["seg_cache_misses"] >= 0
+    # Batched certification counts pricing dispatches, not serial loops.
+    ctrl.refresh_prices()
+    st = ctrl.stats()
+    assert st["pricing_dispatches"] >= 1
+    assert st["serial_price_refreshes"] == 0
+
+
+def test_batched_dual_prices_parity_and_admissibility():
+    mgr = _manager()
+    ctrl = mgr.sharded_controller(ST3, cell_key=hash_cells(6))
+    ctrl.reset(_streams(60), at=0.0)
+    probs = [c._problem for c in ctrl._cell_list if c._problem is not None]
+    serial = [colgen.dual_prices(p, colgen.ColumnPool()) for p in probs]
+    stats: dict = {}
+    batched = colgen.batched_dual_prices(
+        probs, colgen.ColumnPool(), stats_out=stats
+    )
+    assert stats["pricing_dispatches"] >= 1
+    for cell, p, (prices, lp), (_sp, slp) in zip(
+        ctrl._cell_list, probs, batched, serial
+    ):
+        # One stacked dispatch converges to the serial per-cell LP value.
+        assert lp == pytest.approx(slp, rel=1e-9, abs=1e-9)
+        # Admissibility: every packed bin prices at or under its cost.
+        keys = arcflow.item_class_keys(p)
+        by_name = {item.name: k for item, k in zip(p.items, keys)}
+        for b in cell._bins:
+            total = sum(prices.get(by_name[n], 0.0) for n in b.members)
+            assert total <= b.bin_type.cost + 1e-6
+        # The certified LP value is a valid lower bound on the cell cost.
+        assert lp <= cell._plan.hourly_cost + 1e-6
+
+
+def test_sharded_refresh_prices_batched():
+    def build():
+        mgr = _manager()
+        ctrl = mgr.sharded_controller(ST3, cell_key=hash_cells(6))
+        ctrl.reset(_streams(60), at=0.0)
+        return ctrl
+
+    a, b = build(), build()
+    lb_batched = a.refresh_prices()
+    lb_serial = b.refresh_prices(batched=False)
+    # Both are admissible lower bounds on the (shared) achieved cost.
+    assert 0.0 < lb_batched <= a.total_cost() + 1e-6
+    assert 0.0 < lb_serial <= b.total_cost() + 1e-6
+    assert a.stats()["pricing_dispatches"] >= 1
+    assert a.stats()["serial_price_refreshes"] == 0
+    assert b.stats()["serial_price_refreshes"] == len(b._cell_list)
+
+
+@pytest.mark.slow
+def test_pmap_fanout_matches_vmap():
+    """Multi-device pmap paths (forced host devices) are bit-identical
+    to the single-device vmap paths for both the batched pack kernel and
+    the batched pricing kernel."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import numpy as np
+import jax
+assert jax.local_device_count() == 4, jax.local_device_count()
+from repro.kernels import knapsack as K
+rng = np.random.RandomState(0)
+B, E, D = 7, 5, 2
+values = rng.rand(B, E) * 3
+weights = rng.randint(1, 4, size=(B, E, D))
+bounds = rng.randint(0, 4, size=(B, E))
+caps = rng.randint(4, 9, size=(B, D))
+a = K.price_knapsacks(values, weights, bounds, caps, impl="numpy")
+b = K.price_knapsacks(values, weights, bounds, caps, impl="jax")
+assert np.array_equal(a.best, b.best) and np.array_equal(a.counts, b.counts)
+from tests.test_shard import _streams, _manager
+from repro.core.binpack import heuristics as H
+from repro.core.strategies import ST3
+mgr = _manager()
+probs = [mgr.formulate(_streams(12, prefix=f"c{i}_"), ST3) for i in range(7)]
+ser = [H._pack(p, False) for p in probs]
+bat = H.batched_pack(probs)
+assert all(s.cost == b.cost and s.bins == b.bins for s, b in zip(ser, bat))
+print("ALL_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")]
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        cwd=root,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "ALL_OK" in out.stdout
