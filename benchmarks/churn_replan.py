@@ -14,6 +14,14 @@ rate renegotiations, instance price drift) through the manager's
 Emits ``BENCH_replan.json`` (the `scripts/perf_diff.py` row format, meta
 carries the headline speedup) which `scripts/check_bench.py` gates: the
 warm-start speedup must stay above its stored floor.
+
+Since PR 10 the replay runs on *calibrated* requirement vectors: both
+managers take ``calibration=`` (the committed ``CALIBRATION_ec2.json``
+artifact, regenerable via ``scripts/recalibrate.py``) instead of the
+hand-written paper profile table, so the churn scenario — like the
+solver-scaling ladder — moves with measured model throughput.  The
+gates are ratios (speedup, certified gap, warm/cold cost parity), so
+they carry over unchanged.
 """
 from __future__ import annotations
 
@@ -21,9 +29,9 @@ import time
 
 import numpy as np
 
+from repro.core import calibration as cal
 from repro.core.catalog import paper_ec2_catalog
 from repro.core.manager import ResourceManager
-from repro.core.profiler import paper_profile_table
 from repro.core.streams import (
     AnalysisProgram,
     PriceChanged,
@@ -84,8 +92,10 @@ def _trace(ctrl, rng, at: float = 0.0):
 
 def run() -> dict:
     rng = np.random.RandomState(1802)
-    table = paper_profile_table()
-    mgr = ResourceManager(paper_ec2_catalog(), table, max_nodes=MAX_NODES)
+    art = cal.load_or_calibrate("ec2")
+    mgr = ResourceManager(
+        paper_ec2_catalog(), calibration=art, max_nodes=MAX_NODES
+    )
     streams = _initial_fleet()
 
     t0 = time.perf_counter()
@@ -120,9 +130,11 @@ def run() -> dict:
             single_warm_us.append(dt)
         if i % COLD_EVERY == 0:
             # From-scratch solve of the identical fleet on a fresh manager
-            # (no memoized formulation/tensors, same solver budget).
+            # (no memoized formulation/tensors, same solver budget; the
+            # artifact only signature-checks (name, capacity), so the
+            # trace's price drift passes verify).
             cold_mgr = ResourceManager(
-                tuple(mgr.catalog), table, max_nodes=MAX_NODES
+                tuple(mgr.catalog), calibration=art, max_nodes=MAX_NODES
             )
             fleet = list(ctrl.fleet)
             t0 = time.perf_counter()

@@ -17,6 +17,10 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.record).
                        all-on-demand on a preemption-heavy trace
   storm              — fault-injection storms: SLA tiers, graceful frame-rate
                        degradation, interruption-notice draining
+  calibration        — profile-calibrated requirements: artifact freshness
+                       + impl bit-identity, calibrated CPU-vs-accelerator
+                       multiple-choice allocation, and the kernel→dollars
+                       probe (2× faster accel profile must cut fleet cost)
   shard              — hierarchical sharded controller: 100k-stream replay
                        through the batched event pipeline (vs the serial
                        per-event loop, bit-identity gated), one-dispatch
@@ -38,6 +42,7 @@ import traceback
 
 #: suite name -> artifact its run() emits, gated by scripts/check_bench.py.
 GATED_ARTIFACTS = {
+    "calibration": "BENCH_calibration.json",
     "churn": "BENCH_replan.json",
     "policy": "BENCH_policy.json",
     "lifecycle": "BENCH_lifecycle.json",
@@ -59,6 +64,7 @@ def main() -> None:
 
     from . import (
         ablation_cap,
+        calibration,
         churn_replan,
         consolidation,
         fig5_framerate,
@@ -84,6 +90,7 @@ def main() -> None:
         "solver": solver_scaling,
         "tpu": tpu_allocation,
         "ablation": ablation_cap,
+        "calibration": calibration,
         "churn": churn_replan,
         "policy": consolidation,
         "lifecycle": lifecycle,

@@ -35,9 +35,15 @@ billed-cost overhead; >= 80% of victim-bearing notice steps must drain
 tail-free; and the tiered run's utility penalty (rung-hours priced at
 each tier's ``rung_penalty`` + blackout at ``blackout_penalty``) must
 stay below the baseline's pure-blackout penalty.
+
+PR 10 adds the cost-vs-QoS curve (``storm/qos/*`` rows): the tiered
+posture replayed at swept utility-price multipliers (`QOS_SCALES`),
+tracing how the billed-cost / utility-penalty pair moves as lost
+quality gets cheaper or dearer relative to instance-hours.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -84,14 +90,14 @@ SEED = 8231
 TIER_WHEEL = (GOLD, GOLD, SILVER, SILVER, SILVER) + (BRONZE,) * 5
 
 
-def _tier(i: int):
-    return TIER_WHEEL[i % len(TIER_WHEEL)]
+def _tier(i: int, wheel=TIER_WHEEL):
+    return wheel[i % len(wheel)]
 
 
-def _initial_fleet() -> list[StreamSpec]:
+def _initial_fleet(wheel=TIER_WHEEL) -> list[StreamSpec]:
     kinds = consolidation.KINDS
     return [
-        StreamSpec(f"s{i}", *kinds[i % len(kinds)], tier=_tier(i))
+        StreamSpec(f"s{i}", *kinds[i % len(kinds)], tier=_tier(i, wheel))
         for i in range(N_STREAMS)
     ]
 
@@ -109,12 +115,12 @@ def _phases() -> list[StormPhase]:
     ]
 
 
-def _trace(initial):
+def _trace(initial, wheel=TIER_WHEEL):
     rng = np.random.RandomState(SEED)
     kinds = consolidation.KINDS
 
     def make_join(i):
-        return StreamSpec(f"g{i}", *kinds[i % len(kinds)], tier=_tier(i))
+        return StreamSpec(f"g{i}", *kinds[i % len(kinds)], tier=_tier(i, wheel))
 
     return storm_trace(
         initial,
@@ -149,6 +155,79 @@ def _replay(catalog, initial, trace, by_type, *, policy, drain):
         billing_by_type=by_type,
         drain_on_notice=drain,
     )
+
+
+#: Utility-price multipliers for the cost-vs-QoS curve.  1.0 is the
+#: headline tiered run (reused, not re-replayed); the sweep reprices
+#: every tier's ``rung_penalty`` / ``blackout_penalty`` and the risk
+#: catalog's degraded-capacity penalty by the same factor, then replays
+#: the identical storm.  Up to 4x the tiered posture's *decisions* are
+#: price-insensitive (same $16.6 bill, penalty scales linearly); at 16x
+#: the risk-adjusted catalog prices flaky spot out entirely and the
+#: fleet buys reliable capacity (~3.4x the bill, zero blackout, zero
+#: penalty) — the two regimes ARE the cost-vs-QoS tradeoff.
+QOS_SCALES = (0.25, 1.0, 4.0, 16.0)
+
+
+def _scaled_wheel(scale: float):
+    return tuple(
+        dataclasses.replace(
+            t,
+            rung_penalty=t.rung_penalty * scale,
+            blackout_penalty=t.blackout_penalty * scale,
+        )
+        for t in TIER_WHEEL
+    )
+
+
+def _qos_sweep(spot_cat, by_type, tiered_out) -> dict:
+    """Cost-vs-QoS frontier: replay the storm at swept utility prices.
+
+    Same seeded storm, same tiered controller posture; only the price of
+    lost quality moves.  Cheap penalties let the risk-adjusted catalog
+    ride flaky capacity (lower bill, more accrued penalty); expensive
+    penalties push it onto reliable instances and make degradation
+    costly relative to the bill.  The emitted ``storm/qos/*`` rows are
+    the curve; `scripts/perf_diff.py` diffs the per-point pairs.
+    """
+    points = []
+    for scale in QOS_SCALES:
+        if scale == 1.0:
+            out = tiered_out  # the headline tiered run, verbatim
+            dt_us = 0.0
+        else:
+            wheel = _scaled_wheel(scale)
+            initial = _initial_fleet(wheel)
+            trace = _trace(initial, wheel)
+            cat = risk_adjusted_catalog(
+                spot_cat,
+                spot.HOURLY,
+                billing_by_type=by_type,
+                degraded_penalty=spot.DEGRADED_PENALTY * scale,
+            )
+            t0 = time.perf_counter()
+            out = _replay(
+                cat, initial, trace, by_type,
+                policy=GracefulDegradationPolicy(park_stranded=False),
+                drain=True,
+            )
+            dt_us = (time.perf_counter() - t0) * 1e6
+        points.append((scale, out["billed_cost"], out["utility_penalty"]))
+        record(
+            f"storm/qos/scale_{scale:g}", dt_us,
+            f"billed=${out['billed_cost']:.2f} "
+            f"utility_penalty={out['utility_penalty']:.1f} "
+            f"total=${out['billed_cost'] + out['utility_penalty']:.2f} "
+            f"blackout={out['blackout_stream_seconds']:.0f}s "
+            f"gold_violations={out['sla'].get('GOLD', {}).get('violations', 0)}",
+        )
+    return {
+        "qos_curve_points": float(len(points)),
+        "qos_billed_scale_min": points[0][1],
+        "qos_penalty_scale_min": points[0][2],
+        "qos_billed_scale_max": points[-1][1],
+        "qos_penalty_scale_max": points[-1][2],
+    }
 
 
 def _notice_conversion(out) -> tuple[float, int]:
@@ -238,6 +317,7 @@ def run() -> dict:
         "trace_notices": notices,
         "trace_kills": kills,
     }
+    out.update(_qos_sweep(spot_cat, by_type, tiered))
     record(
         "storm/summary", 0.0,
         f"blackout {base['blackout_stream_seconds']:.0f}s -> "

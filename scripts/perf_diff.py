@@ -29,7 +29,10 @@ Handles two artifact shapes:
     one-dispatch certification speedup, and the pipeline stats counters)
     and the branch-and-price solver metrics
     (BENCH_solver.json's certified colgen/enumeration gaps, batched
-    pricing speedup, and kernel bit-equivalence probe).
+    pricing speedup, and kernel bit-equivalence probe).  The
+    calibrated-requirements metrics (BENCH_calibration.json's device
+    split, kernel→dollars saving, and artifact freshness/bit-identity
+    probes) close the list.
 """
 import json
 import sys
@@ -62,6 +65,7 @@ _STORM_PREFIXES = (
     "trace_notices",
     "trace_kills",
     "tiered_billed_overhead",
+    "qos_",
 )
 
 
@@ -99,12 +103,27 @@ _COLGEN_PREFIXES = (
 )
 
 
+# Calibrated-requirements metrics (BENCH_calibration.json): device-class
+# split of the calibrated mix, the kernel→dollars saving, and the
+# artifact freshness / impl bit-identity probes.
+_CALIBRATION_PREFIXES = (
+    "calibrated_",
+    "accel2x_",
+    "calib_",
+    "accelerator_speedup",
+)
+
+
 def _is_billed_key(k: str) -> bool:
     return k.startswith("billed_") or k.startswith("degraded_seconds")
 
 
 def _is_colgen_key(k: str) -> bool:
     return k.startswith(_COLGEN_PREFIXES)
+
+
+def _is_calibration_key(k: str) -> bool:
+    return k.startswith(_CALIBRATION_PREFIXES)
 
 
 def _is_spot_key(k: str) -> bool:
@@ -196,6 +215,14 @@ def diff_colgen(a: dict, b: dict) -> None:
     _diff_section(a, b, _is_colgen_key, "branch-and-price metric", fmt)
 
 
+def diff_calibration(a: dict, b: dict) -> None:
+    def fmt(k, x, y, d):
+        unit = "$" if "cost" in k and "saving" not in k else " "
+        return f"{x:11.4g}{unit} {y:11.4g}{unit} {d:+8.1%}"
+
+    _diff_section(a, b, _is_calibration_key, "calibrated-requirements metric", fmt)
+
+
 def diff_meta(a: dict, b: dict) -> None:
     diff_billed(a, b)
     diff_spot(a, b)
@@ -203,6 +230,7 @@ def diff_meta(a: dict, b: dict) -> None:
     diff_shard(a, b)
     diff_shard_pipeline(a, b)
     diff_colgen(a, b)
+    diff_calibration(a, b)
     am, bm = a.get("meta", {}), b.get("meta", {})
     keys = [
         k
@@ -213,6 +241,7 @@ def diff_meta(a: dict, b: dict) -> None:
         and not _is_shard_key(k)
         and not _is_shard_pipeline_key(k)
         and not _is_colgen_key(k)
+        and not _is_calibration_key(k)
         and (
             isinstance(am.get(k), (int, float))
             or isinstance(bm.get(k), (int, float))

@@ -41,6 +41,31 @@ REGISTRY: dict[str, ModelConfig] = {
 
 ARCH_IDS = tuple(sorted(REGISTRY))
 
+#: Default per-analyzed-frame context depth (tokens) when a model serves as
+#: a camera-frame analysis program: the prefill each frame's caption/VQA
+#: pass runs.  Lives with the registry (it is a property of how each model
+#: is deployed, not of the fleet layer); ``core.calibration`` reads it to
+#: build the default workload set.  Omitted archs (audio gen, 314B-scale)
+#: are not sensible frame analyzers / fit no catalog type.
+DEFAULT_TOKENS_PER_FRAME: dict[str, int] = {
+    "gemma2-2b": 2048,
+    "internlm2-1.8b": 512,
+    "mamba2-1.3b": 1024,
+    "llava-next-mistral-7b": 2048,
+    "recurrentgemma-9b": 1024,
+    "nemotron-4-15b": 2048,
+}
+
+
+def default_tokens_per_frame(arch_id: str) -> int:
+    try:
+        return DEFAULT_TOKENS_PER_FRAME[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"{arch_id!r} has no frame-analysis deployment default; known: "
+            f"{tuple(sorted(DEFAULT_TOKENS_PER_FRAME))}"
+        ) from None
+
 
 def get_config(arch_id: str) -> ModelConfig:
     try:

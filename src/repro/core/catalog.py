@@ -14,6 +14,9 @@ The multi-GPU expansion of paper §3.2 (dimension ``2 + 2N``) is provided by
 """
 from __future__ import annotations
 
+import hashlib
+import json
+
 from .binpack.problem import BinType
 
 __all__ = [
@@ -22,6 +25,7 @@ __all__ = [
     "expand_multi_accelerator",
     "spot_variant",
     "with_spot_variants",
+    "catalog_signature",
     "PAPER_DIMS",
     "TPU_DIMS",
     "SPOT_SUFFIX",
@@ -68,6 +72,22 @@ def tpu_cloud_catalog() -> tuple[BinType, ...]:
         BinType("v5e-4", capacity=(112, 192, 4 * chip_tf, 4 * chip_hbm), cost=4.400),
         BinType("v5e-8", capacity=(224, 384, 8 * chip_tf, 8 * chip_hbm), cost=8.470),
     )
+
+
+def catalog_signature(catalog: "tuple[BinType, ...]") -> str:
+    """Stable fingerprint of a catalog's *shapes* (names + capacity vectors).
+
+    Calibration artifacts are keyed by this signature: requirement vectors
+    are only valid against the capacity geometry they were clamped to.
+    Prices, hazards, and rent overlays are deliberately excluded — re-pricing
+    a catalog (spot drift, `refresh_prices`) does not stale the calibration,
+    while adding/removing a type or resizing a capacity does.
+    """
+    payload = json.dumps(
+        sorted((bt.name, [float(c) for c in bt.capacity]) for bt in catalog),
+        separators=(",", ":"),
+    )
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()[:16]
 
 
 #: Naming convention for spot variants: "<on-demand name>-spot".

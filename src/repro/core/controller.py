@@ -356,6 +356,23 @@ class FleetController:
         self._sync_lifecycle()
         return result
 
+    def recalibrate(self, artifact=None) -> ReplanResult:
+        """Re-derive every requirement vector and re-solve the standing fleet.
+
+        ``artifact`` (a ``core.calibration.CalibrationArtifact``) installs a
+        new calibration on the manager first; without one the manager's
+        formulate memo is just invalidated (its profile table already
+        changed in place).  The fleet is re-established with a cold solve
+        at the current clock — a kernel change is a new fleet era: every
+        placement, spare, and dual price is stale against the new vectors,
+        so none of the warm-start state is worth carrying over.
+        """
+        if artifact is not None:
+            self.manager.set_calibration(artifact)
+        else:
+            self.manager._formulate_cache.clear()
+        return self.reset(self.fleet)
+
     def apply_events(self, events: Sequence[FleetEvent]) -> list[ReplanResult]:
         return [self.apply(ev) for ev in events]
 

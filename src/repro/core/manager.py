@@ -73,14 +73,27 @@ class ResourceManager:
     def __init__(
         self,
         catalog: Sequence[BinType],
-        profiles: ProfileTable,
+        profiles: "ProfileTable | None" = None,
         *,
+        calibration: "object | None" = None,
         utilization_cap: float = 0.9,
         solver: str = "auto",  # auto | bincompletion | arcflow | colgen | heuristic
         max_nodes: int = 2_000_000,
         colgen_pool: "object | None" = None,
     ) -> None:
         self.catalog = tuple(catalog)
+        if calibration is not None:
+            # Calibrated source (core.calibration.CalibrationArtifact):
+            # requirement vectors come from the artifact's measured/derived
+            # profiles; the artifact must have been taken against this
+            # catalog's shape (signature-checked, StaleCalibrationError).
+            if profiles is not None:
+                raise ValueError("pass either profiles or calibration=, not both")
+            calibration.verify(self.catalog)
+            profiles = calibration.profile_table()
+        elif profiles is None:
+            raise ValueError("ResourceManager needs profiles or calibration=")
+        self.calibration = calibration
         self.profiles = profiles
         self.utilization_cap = utilization_cap
         self.solver = solver
@@ -134,6 +147,20 @@ class ResourceManager:
             self._formulate_cache.pop(next(iter(self._formulate_cache)))
         self._formulate_cache[key] = problem
         return problem
+
+    def set_calibration(self, artifact) -> None:
+        """Swap in a (re)calibrated artifact: fresh kernels, fresh vectors.
+
+        Verifies the artifact against this manager's catalog, replaces the
+        profile table, and invalidates the formulate memo so every
+        subsequent solve re-derives its requirement vectors.  Live
+        controllers keep their fleet state; call their ``recalibrate()`` to
+        re-solve the standing fleet under the new vectors.
+        """
+        artifact.verify(self.catalog)
+        self.calibration = artifact
+        self.profiles = artifact.profile_table()
+        self._formulate_cache.clear()
 
     def controller(self, strategy: Strategy = ST3, **kwargs):
         """The live re-planning controller for `strategy` (one per name).

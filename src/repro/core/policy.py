@@ -75,6 +75,7 @@ from .streams import (
     FleetEvent,
     InstancePreempted,
     InstancePreemptionNotice,
+    StreamAdded,
     StreamForecast,
     StreamSpec,
     forecast_cone,
@@ -89,6 +90,7 @@ __all__ = [
     "ActingAutoscaler",
     "GracefulDegradationPolicy",
     "CompositePolicy",
+    "ArrivalRateEstimator",
     "cheapest_provisioning_path",
     "spot_effective_cost",
     "risk_adjusted_catalog",
@@ -465,6 +467,103 @@ def cheapest_provisioning_path(
         path.append((j, l))
     path.reverse()
     return path, float(dp[J - 1, L - 1])
+
+
+@dataclasses.dataclass
+class ArrivalRateEstimator:
+    """Online stream-arrival-rate estimation over observed join timestamps.
+
+    The autoscalers' forecast plug point (`LookaheadAutoscaler.forecast`
+    accepts a callable): instead of a static hand-written
+    `StreamForecast`, this estimator watches the `StreamAdded` events the
+    controller replays, maintains the Poisson maximum-likelihood arrival
+    rate over a trailing window —
+
+        lambda_hat = joins observed in the window / window hours
+
+    (before a full window has elapsed, the unbiased ``(k - 1) / elapsed``
+    form, which does not count the arrival that started the clock) —
+    optionally EWMA-smoothed across events, and emits a forecast of
+    ``min(max_joins, round(lambda_hat * horizon_hours))`` clones of
+    ``template`` with fresh non-colliding names.  Returns ``None`` (no
+    cone, autoscaler no-op) until enough arrivals have been seen.
+
+    The estimator is stateful per controller, like every policy here:
+    construct one per replay.  Timestamps come from ``event.at``, the
+    same lifecycle clock `estimate_hazards` pools for interruption rates
+    — both close an online-estimation loop a static catalog/forecast
+    only guesses at.
+    """
+
+    #: Forecast joins are clones of this spec (name uniquified per join).
+    template: StreamSpec
+    #: How far ahead the emitted forecast looks, in trace hours.
+    horizon_hours: float = 0.5
+    #: Trailing observation window for the windowed MLE.
+    window_hours: float = 2.0
+    #: Cap on forecast joins per event (bounds the cone and, through
+    #: `ActingAutoscaler.max_spares`, the warm-spare spend).
+    max_joins: int = 4
+    #: EWMA weight on the *previous* estimate (0 = pure windowed MLE).
+    smoothing: float = 0.0
+    _arrivals: list = dataclasses.field(default_factory=list, init=False, repr=False)
+    _now: float = dataclasses.field(default=0.0, init=False, repr=False)
+    _rate: float | None = dataclasses.field(default=None, init=False, repr=False)
+    _seq: int = dataclasses.field(default=0, init=False, repr=False)
+
+    def observe(self, event: FleetEvent | None) -> None:
+        """Advance the clock; record the timestamp if it is a join."""
+        at = getattr(event, "at", None)
+        if at is None:
+            return
+        self._now = max(self._now, float(at))
+        if not isinstance(event, StreamAdded):
+            return
+        self._arrivals.append(float(at))
+        cut = self._now - self.window_hours
+        self._arrivals = [t for t in self._arrivals if t > cut]
+        inst = self._windowed_mle()
+        if inst is None:
+            return
+        if self.smoothing > 0.0 and self._rate is not None:
+            self._rate = self.smoothing * self._rate + (1 - self.smoothing) * inst
+        else:
+            self._rate = inst
+
+    def _windowed_mle(self) -> float | None:
+        arr = [t for t in self._arrivals if t > self._now - self.window_hours]
+        if not arr:
+            return None
+        elapsed = self._now - arr[0]
+        if elapsed + _EPS >= self.window_hours:
+            return len(arr) / self.window_hours
+        if len(arr) < 2 or elapsed <= _EPS:
+            return None  # one arrival fixes no rate
+        # Partial window: don't count the arrival that started the clock.
+        return (len(arr) - 1) / elapsed
+
+    @property
+    def rate(self) -> float | None:
+        """Current arrivals-per-hour estimate (None before warm-up)."""
+        return self._rate
+
+    def __call__(
+        self, fleet: tuple[StreamSpec, ...], event: FleetEvent | None
+    ) -> StreamForecast | None:
+        self.observe(event)
+        if self._rate is None:
+            return None
+        n = min(self.max_joins, int(round(self._rate * self.horizon_hours)))
+        if n <= 0:
+            return None
+        live = {s.name for s in fleet}
+        joins = []
+        while len(joins) < n:
+            name = f"{self.template.name}~a{self._seq}"
+            self._seq += 1
+            if name not in live:
+                joins.append(dataclasses.replace(self.template, name=name))
+        return StreamForecast(joins=tuple(joins))
 
 
 @dataclasses.dataclass

@@ -28,6 +28,8 @@ __all__ = [
     "derive_accelerator_profile",
     "paper_profile_table",
     "RooflineSpec",
+    "TPU_V5E",
+    "GRID_K520",
 ]
 
 #: Canonical 4-dim requirement space (single-accelerator form): the paper's
@@ -61,6 +63,17 @@ TPU_V5E = RooflineSpec(
     hbm_bandwidth=819e9,
     compute_capacity_units=197.0,  # catalog dim is TFLOP/s
     memory_capacity_gb=16.0,
+)
+
+#: The g2.2xlarge GPU of paper Table 1 (one GK104 of a GRID K520):
+#: 1536 CUDA cores, ~2.3 fp32 TFLOP/s, 160 GB/s GDDR5, 4 GB.  The catalog
+#: compute dim for the EC2 catalog is CUDA cores, so occupancy maps to cores.
+GRID_K520 = RooflineSpec(
+    name="grid-k520",
+    peak_flops=2.29e12,
+    hbm_bandwidth=160e9,
+    compute_capacity_units=1536.0,  # catalog dim is CUDA cores
+    memory_capacity_gb=4.0,
 )
 
 

@@ -431,6 +431,21 @@ class ShardedController:
             nodes=sum(r.nodes for r in results.values()),
         )
 
+    def recalibrate(self, artifact=None, *, pack: str = "exact") -> ReplanResult:
+        """Sharded analogue of `FleetController.recalibrate`.
+
+        Installs ``artifact`` on the shared manager (all cells formulate
+        through it), then cold-starts every cell on the standing fleet at
+        the current clock.  ``pack="batched"`` re-packs all cells through
+        the one-dispatch vmapped path — the practical choice at 10k+
+        streams.
+        """
+        if artifact is not None:
+            self.manager.set_calibration(artifact)
+        else:
+            self.manager._formulate_cache.clear()
+        return self.reset(self.fleet, pack=pack)
+
     def apply(self, event: FleetEvent) -> ReplanResult:
         """Route one fleet event to its cell and fold it in.
 

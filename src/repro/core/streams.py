@@ -520,6 +520,7 @@ def synthetic_timed_trace(
     price_drift: float = 0.0,
     price_drift_types: "Sequence[tuple[str, float]] | None" = None,
     price_drift_gap_hours: float = 0.25,
+    calibration: "object | None" = None,
 ) -> TimedTrace:
     """Generate a seeded timed churn trace against a pure fleet replay.
 
@@ -540,6 +541,16 @@ def synthetic_timed_trace(
     ``preemption_hazard * hazard_pool`` over the trace span, each
     carrying a uniform ``draw`` the replaying controller thins against
     its alive spot instances (see `InstancePreempted`).
+    ``calibration`` (opt-in, a ``core.calibration.CalibrationArtifact``)
+    sources the trace from calibrated profiles: the initial fleet and every
+    generated join are validated against the artifact (unknown programs or
+    rates beyond the calibrated max raise at *generation* time, not deep in
+    a replay), and ``rerate_fps`` candidate lists are filtered to
+    calibrated-feasible rates (falling back to the current rate when none
+    survive).  The rng draw count is unchanged, so traces with and without
+    a calibration source stay draw-aligned; ``calibration=None`` is
+    bit-identical to the pre-calibration generator.
+
     ``preemption_hazard`` is the *reference* (maximum) per-instance
     interruption rate: a spot type with ``hazard = λ ≤ preemption_hazard``
     is interrupted at exactly λ/hr regardless of how many spot instances
@@ -560,6 +571,9 @@ def synthetic_timed_trace(
     ``price_drift=0`` (with any hazard) leaves the trace bit-identical.
     """
     fleet = list(streams)
+    if calibration is not None:
+        for s in fleet:
+            calibration.check_stream(s)
     events: list[FleetEvent] = []
     t = 0.0
     i = 0
@@ -578,6 +592,8 @@ def synthetic_timed_trace(
                         "fleet is empty and no make_join was given — "
                         "the default join clones a random live stream"
                     )
+                if calibration is not None:
+                    calibration.check_stream(spec)
                 events.append(StreamAdded(spec, at=t))
                 fleet.append(spec)
                 i += 1
@@ -589,6 +605,11 @@ def synthetic_timed_trace(
             rates = (
                 list(rerate_fps(s)) if rerate_fps is not None else [s.desired_fps]
             )
+            if calibration is not None:
+                cap = calibration.max_feasible_fps(
+                    s.program.program_id, str(s.frame_size)
+                )
+                rates = [r for r in rates if r <= cap + 1e-9] or [s.desired_fps]
             fps = float(rates[rng.randint(len(rates))])
             events.append(StreamRateChanged(s.name, fps, at=t))
             fleet = list(apply_events(fleet, [events[-1]]))
@@ -697,6 +718,7 @@ def storm_trace(
     hazard_pool: int = 64,
     hazard_ref: float = 0.0,
     tail_hours: float | None = None,
+    calibration: "object | None" = None,
 ) -> TimedTrace:
     """Compose a seeded fault-injection storm over a background churn trace.
 
@@ -707,6 +729,10 @@ def storm_trace(
     trace and every policy replayed on it sees the identical sequence.
     Phase draws come from the same ``rng`` *after* the background churn,
     so two scenarios differing only in phases share their background.
+
+    ``calibration`` (opt-in) flows through to the background generator and
+    additionally validates every flash-crowd join against the artifact —
+    see `synthetic_timed_trace`.
 
     ``flash_crowd`` joins use ``make_join`` (required for that kind) with
     indices continuing after the background joins, so names never collide.
@@ -724,6 +750,7 @@ def storm_trace(
         make_join=make_join,
         rerate_fps=rerate_fps,
         tail_hours=0.0,
+        calibration=calibration,
     )
     events = list(bg.events)
     join_index = sum(1 for ev in events if isinstance(ev, StreamAdded))
@@ -736,7 +763,10 @@ def storm_trace(
             if make_join is None:
                 raise ValueError("flash_crowd phase needs make_join")
             for _ in range(phase.count):
-                injected.append(StreamAdded(make_join(join_index), at=phase.at))
+                spec = make_join(join_index)
+                if calibration is not None:
+                    calibration.check_stream(spec)
+                injected.append(StreamAdded(spec, at=phase.at))
                 join_index += 1
         elif phase.kind == "price":
             injected.append(

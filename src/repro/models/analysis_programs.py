@@ -28,6 +28,7 @@ __all__ = [
     "zf_forward",
     "make_frame",
     "program_flops",
+    "program_params",
     "PROGRAMS",
 ]
 
@@ -160,6 +161,36 @@ def program_flops(program_id: str, frame_size: FrameSize) -> float:
     if program_id == "zf":
         return 2 * 1.1e9 + 2 * (256 * 49 * 4096 + 4096 * 4096 + 4096 * 105)
     raise KeyError(program_id)
+
+
+def program_params(program_id: str, num_classes: int = 21) -> float:
+    """Analytic parameter count, from the same layer configs as the nets.
+
+    Used by the calibration layer for memory footprints and weight-traffic
+    byte estimates without instantiating the (jax) parameters.
+    """
+    if program_id == "vgg16":
+        convs, cin, n = _VGG_CFG, 3, 0.0
+        for spec in convs:
+            if spec == "M":
+                continue
+            n += 3 * 3 * cin * spec + spec
+            cin = spec
+        fc_in = 512 * 7 * 7
+    elif program_id == "zf":
+        cin, n = 3, 0.0
+        for spec in _ZF_CFG:
+            if spec == "M":
+                continue
+            ch, k, _s = spec
+            n += k * k * cin * ch + ch
+            cin = ch
+        fc_in = 256 * 7 * 7
+    else:
+        raise KeyError(program_id)
+    for d_in, d_out in ((fc_in, 4096), (4096, 4096), (4096, num_classes * 5)):
+        n += d_in * d_out + d_out
+    return n
 
 
 @functools.cache

@@ -22,6 +22,8 @@ __all__ = [
     "parse_collectives",
     "roofline_terms",
     "model_flops",
+    "model_kv_bytes",
+    "model_hbm_bytes",
 ]
 
 
@@ -110,3 +112,28 @@ def roofline_terms(
 def model_flops(cfg, tokens: int) -> float:
     """MODEL_FLOPS = 6*N*D with N = active params (MoE: top-k only)."""
     return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_kv_bytes(cfg, tokens: int) -> float:
+    """Analytic KV-cache bytes for ``tokens`` cached positions (bf16 K+V).
+
+    Counts the attention-bearing slots of the layer pattern ("attention"
+    and "moe" blocks carry ring buffers; SSD/recurrent states are
+    ``tokens``-independent and excluded).  The serving-side ground truth is
+    ``repro.serving.kvcache.slot_kv_bytes`` (real arrays, includes the
+    state-space leaves); this analytic form is its lower bound and the one
+    the calibration layer uses so requirement vectors stay deterministic.
+    """
+    attn_slots = sum(1 for k in cfg.layer_pattern if k in ("attention", "moe"))
+    per_token = attn_slots * 2.0 * cfg.num_kv_heads * cfg.resolved_head_dim * 2.0
+    return cfg.num_groups * per_token * tokens
+
+
+def model_hbm_bytes(cfg, tokens: int) -> float:
+    """Analytic per-frame HBM traffic for a ``tokens``-token prefill.
+
+    Weights stream through once (bf16) and the KV cache is written — the
+    two roofline memory terms of analyzing one camera frame with a
+    captioning/VQA model.  Activation traffic is fused on-chip and ignored.
+    """
+    return 2.0 * cfg.active_param_count() + model_kv_bytes(cfg, tokens)

@@ -14,7 +14,7 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models import transformer as tfm
 
-__all__ = ["cache_bytes", "make_cache", "reset_slot"]
+__all__ = ["cache_bytes", "make_cache", "reset_slot", "slot_kv_bytes"]
 
 
 def make_cache(cfg: ModelConfig, batch: int, cache_len: int,
@@ -27,6 +27,18 @@ def cache_bytes(cache) -> int:
         np.prod(leaf.shape) * leaf.dtype.itemsize
         for leaf in jax.tree.leaves(cache)
     ))
+
+
+def slot_kv_bytes(cfg: ModelConfig, cache_len: int,
+                  *, long_context: bool = False) -> int:
+    """Measured per-request cache footprint: one batch row, real arrays.
+
+    Ground truth for the calibration layer's analytic
+    ``roofline.analysis.model_kv_bytes`` estimate — the measured figure
+    additionally includes SSD/recurrent state leaves and position buffers,
+    so it upper-bounds the analytic KV-only count (asserted in tests).
+    """
+    return cache_bytes(make_cache(cfg, 1, cache_len, long_context=long_context))
 
 
 def reset_slot(cache, slot: int):
